@@ -1,0 +1,65 @@
+"""Quantizer ablations (EXPERIMENTS.md SAccuracy point 4): which knobs close
+the log-codebook gap to uniform INT4 on the reference model.
+
+  PYTHONPATH=src python -m benchmarks.ablations
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.apply import dequantize_params, quantize_params
+from repro.core.quantize import HaloConfig
+from repro.quant import rtn
+
+from . import common
+
+DENSE_GRID = tuple(float(x) for x in np.geomspace(0.12, 1.15, 48))
+
+
+def variants():
+    return {
+        "tile-scale,24pt-grid": HaloConfig(
+            tile=64, scale_granularity="tile",
+            scale_grid=tuple(float(x) for x in np.geomspace(0.2, 1.1, 24))),
+        "tile-scale,dense-grid": HaloConfig(
+            tile=64, scale_granularity="tile", scale_grid=DENSE_GRID),
+        "col-scale (default)": HaloConfig(tile=64),
+        "col-scale+fisher-mse": HaloConfig(tile=64,
+                                           fisher_weighted_scale=True),
+        "col-scale+2.5sigma": HaloConfig(tile=64, n_sigma=2.5),
+        "col-scale+fisher+2.5sigma": HaloConfig(
+            tile=64, n_sigma=2.5, fisher_weighted_scale=True),
+    }
+
+
+def run(steps: int = 1000) -> List[dict]:
+    cfg, params = common.train_reference("llama", steps=steps)
+    fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
+    fp = common.eval_ppl(params, cfg, act_bits=8)
+    rows = [{"variant": "fp32(A8)", "ppl": fp, "delta": 0.0}]
+    r4 = common.eval_ppl(rtn.rtn_quantize_params(params, 4), cfg, act_bits=8)
+    rows.append({"variant": "rtn-w4 (reference point)", "ppl": r4,
+                 "delta": r4 - fp})
+    for name, hc in variants().items():
+        q = quantize_params(params, fisher, hc, theta=0.995)
+        ppl = common.eval_ppl(dequantize_params(q), cfg, act_bits=8)
+        rows.append({"variant": f"halo-acc {name}", "ppl": ppl,
+                     "delta": ppl - fp})
+        print(f"  {rows[-1]['variant']:38s} ppl={ppl:9.3f} "
+              f"d={ppl - fp:+8.3f}")
+    return rows
+
+
+def main():
+    print("quantizer ablations (scale granularity / grid / fisher / sigma)")
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"ablation/{r['variant'].replace(' ', '_')},0,"
+              f"ppl={r['ppl']:.4f};delta={r['delta']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Table II analogue: PPL for FP32 / RTN / SmoothQuant / GPTQ / ZQ-Local /
+ZQ-Global / HALO (perf-opt, bal, acc-opt; tiles 128/64/32) on small
+reference models of the paper's two families.  All weight methods run with
+A8 activations, matching the paper's WxA8 setting."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+
+from repro.core.apply import dequantize_params, quantize_params
+from repro.core.pareto import VARIANT_THETA
+from repro.core.quantize import HaloConfig
+from repro.quant import gptq, rtn, smoothquant, zeroquant
+
+from . import common
+
+
+def quantize_all_methods(cfg, params, fisher, act_stats,
+                         halo_tile: int = 64) -> Dict[str, object]:
+    out = {"fp32": params}
+    for bits in (8, 4, 3):
+        out[f"rtn-w{bits}"] = rtn.rtn_quantize_params(params, bits)
+        out[f"smooth-w{bits}"] = smoothquant.smoothquant_params(
+            params, act_stats, bits)
+    out["gptq-w4"] = gptq.gptq_params(params, act_stats, 4)
+    out["zq-local-w4"] = zeroquant.zq_local_params(params, 4, tile=64)
+    out["zq-global-w4"] = zeroquant.zq_global_params(params, 4)
+    for variant, theta in VARIANT_THETA.items():
+        q = quantize_params(params, fisher, HaloConfig(tile=halo_tile),
+                            theta=theta)
+        out[f"halo-{variant}"] = q
+    return out
+
+
+def effective_bits_of(qparams) -> float:
+    from repro.core.apply import StackedHalo
+    from repro.core.quantize import HaloQuantized, effective_bits
+    bits = n = 0.0
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, (HaloQuantized,
+                                                      StackedHalo))):
+        hqs = ([leaf] if isinstance(leaf, HaloQuantized)
+               else list(leaf.slices) if isinstance(leaf, StackedHalo)
+               else [])
+        for hq in hqs:
+            sz = hq.shape[0] * hq.shape[1]
+            bits += effective_bits(hq) * sz
+            n += sz
+    return bits / n if n else 16.0
+
+
+def run(families=("llama", "opt"), steps: int = 400) -> List[dict]:
+    rows = []
+    for family in families:
+        cfg, params = common.train_reference(family, steps=steps)
+        fisher, act_stats = common.collect_calibration(params, cfg)
+        methods = quantize_all_methods(cfg, params, fisher, act_stats)
+        fp_ppl = common.eval_ppl(params, cfg)
+        for name, q in methods.items():
+            dense = dequantize_params(q) if name.startswith("halo") else q
+            act_bits = None if name == "fp32" else 8
+            ppl = common.eval_ppl(dense, cfg, act_bits=act_bits)
+            row = {"family": family, "method": name, "ppl": ppl,
+                   "delta_vs_fp": ppl - fp_ppl}
+            if name.startswith("halo"):
+                row["eff_bits"] = effective_bits_of(q)
+            rows.append(row)
+            print(f"  {family:6s} {name:14s} ppl={ppl:9.3f} "
+                  f"d={ppl - fp_ppl:+8.3f} "
+                  + (f"bw={row.get('eff_bits'):.2f}" if "eff_bits" in row
+                     else ""))
+    return rows
+
+
+def main():
+    print("accuracy_table (Table II analogue)")
+    print("name,us_per_call,derived")
+    rows = run()
+    for r in rows:
+        print(f"accuracy/{r['family']}/{r['method']},0,"
+              f"ppl={r['ppl']:.4f};delta={r['delta_vs_fp']:+.4f}"
+              + (f";bw={r['eff_bits']:.2f}" if "eff_bits" in r else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Shared benchmark harness: train small reference models on the synthetic
+corpus, collect calibration (Fisher + activation stats), evaluate PPL.
+
+No C4/WikiText/LLaMA weights exist in this offline container, so Table-II
+style comparisons train ~4-15M-parameter models of the paper's families
+(llama-like, opt-like) to convergence on the synthetic corpus and compare
+PTQ methods *relative to the fp32 baseline* -- the paper's claims we verify
+are ordinal (see EXPERIMENTS.md SAccuracy).  Trained models are cached under
+experiments/bench_cache so benchmark modules share one training run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import sys
+from typing import Dict, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.checkpoint.manager import CheckpointManager       # noqa: E402
+from repro.configs.base import ModelConfig                   # noqa: E402
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus  # noqa: E402
+from repro.launch.train import (TrainConfig, TrainState,     # noqa: E402
+                                make_train_step)
+from repro.models import module as M                         # noqa: E402
+from repro.models import transformer as T                    # noqa: E402
+from repro.optim import adamw                                # noqa: E402
+from repro.quant import calibrate                            # noqa: E402
+from repro.quant.common import activations_quantized         # noqa: E402
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench_cache")
+
+BENCH_VOCAB = 2048
+BENCH_SEQ = 128
+BENCH_BATCH = 16
+
+
+def bench_config(family: str = "llama", scale: int = 1) -> ModelConfig:
+    if family == "llama":
+        return ModelConfig(
+            name=f"bench-llama-x{scale}", family="dense",
+            n_layers=4 * scale, d_model=256, n_heads=4, n_kv_heads=4,
+            head_dim=64, d_ff=1024, vocab=BENCH_VOCAB,
+            activation="silu", gated_mlp=True, dtype=jnp.float32,
+            attn_chunk=64, scan_chunk=32, vocab_pad_multiple=64)
+    if family == "opt":
+        return ModelConfig(
+            name=f"bench-opt-x{scale}", family="dense",
+            n_layers=4 * scale, d_model=256, n_heads=4, n_kv_heads=4,
+            head_dim=64, d_ff=1024, vocab=BENCH_VOCAB,
+            activation="relu", gated_mlp=False, norm_type="layernorm",
+            use_bias=True, pos_emb="learned", max_position=BENCH_SEQ,
+            tied_embeddings=True, dtype=jnp.float32,
+            attn_chunk=64, scan_chunk=32, vocab_pad_multiple=64)
+    raise KeyError(family)
+
+
+def bench_corpus() -> SyntheticCorpus:
+    return SyntheticCorpus(CorpusConfig(vocab=BENCH_VOCAB, seq_len=BENCH_SEQ,
+                                        batch=BENCH_BATCH))
+
+
+def train_reference(family: str, steps: int = 400, scale: int = 1,
+                    force: bool = False):
+    """Train (or load cached) reference model.  Returns (cfg, params)."""
+    cfg = bench_config(family, scale)
+    ckpt_dir = os.path.join(CACHE_DIR, f"{cfg.name}_{steps}")
+    mgr = CheckpointManager(ckpt_dir, keep=1)
+    specs = T.model_specs(cfg)
+    if not force and mgr.latest_step() is not None:
+        ref = M.init_params(specs, jax.random.PRNGKey(0))
+        return cfg, mgr.restore(ref)
+
+    corpus = bench_corpus()
+    tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=steps // 10,
+                       total_steps=steps, grad_accum=1,
+                       ckpt_dir=ckpt_dir)
+    params = M.init_params(specs, jax.random.PRNGKey(0))
+    state = TrainState(params, adamw.init(params, tcfg.adamw))
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    for step in range(steps):
+        batch = jax.tree.map(jnp.asarray, corpus.batch_at(step))
+        state, metrics = step_fn(state, batch)
+        if step % 100 == 0:
+            print(f"  [{cfg.name}] step {step} loss "
+                  f"{float(metrics['loss']):.4f}")
+    mgr.save(steps, state.params)
+    mgr.wait()
+    return cfg, state.params
+
+
+def eval_ppl(params, cfg: ModelConfig, n_batches: int = 8,
+             act_bits: Optional[int] = None) -> float:
+    """Held-out perplexity; optional A8 fake-quant on every dense input."""
+    corpus = bench_corpus()
+    loss_fn = jax.jit(functools.partial(T.loss_fn, cfg=cfg))
+    total = 0.0
+    ctx = activations_quantized(act_bits) if act_bits else _null()
+    with ctx:
+        for batch in corpus.eval_batches(n_batches):
+            b = jax.tree.map(jnp.asarray, batch)
+            total += float(loss_fn(params, batch=b))
+    return float(np.exp(total / n_batches))
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def collect_calibration(params, cfg: ModelConfig, n_batches: int = 4,
+                        with_gram: bool = True):
+    """Fisher diag + activation stats over calibration batches
+    (paper: 100-128 random samples; we use n_batches x 16 sequences)."""
+    corpus = bench_corpus()
+
+    def loss(p, batch):
+        return T.loss_fn(p, cfg, batch)
+
+    batches = [jax.tree.map(jnp.asarray, corpus.batch_at(10_000 + i))
+               for i in range(n_batches)]
+    from repro.core.sensitivity import fisher_diag
+    fisher = fisher_diag(loss, params, batches)
+
+    with calibrate.recording(collect_gram=with_gram) as rec:
+        for b in batches[:2]:
+            # python-unrolled forward: the recorder sees concrete weights
+            calibrate.calibrated_forward(params, cfg, b)
+    act_stats = calibrate.stats_by_path(rec, params)
+    return fisher, act_stats
+
+
+def class_mix_from_quantized(qparams) -> Tuple[float, float]:
+    """(f3_fraction, f2_fraction) over all HALO-quantized tiles."""
+    from repro.core.apply import StackedHalo
+    from repro.core.quantize import HaloQuantized
+    from repro.core import codebooks
+    f3 = total = 0
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, (HaloQuantized,
+                                                      StackedHalo))):
+        hqs = []
+        if isinstance(leaf, HaloQuantized):
+            hqs = [leaf]
+        elif isinstance(leaf, StackedHalo):
+            hqs = list(leaf.slices)
+        for hq in hqs:
+            cls = np.asarray(jax.device_get(hq.classes))
+            f3 += int((cls == codebooks.TILE_CLASS_F3).sum())
+            total += cls.size
+    if total == 0:
+        return 0.0, 1.0
+    return f3 / total, 1.0 - f3 / total

@@ -1,0 +1,44 @@
+"""Figs. 12-13 analogues: GPU execution time & energy (analytic model with
+the paper's Table-I GPU DVFS levels), HALO vs FP16/W8A8/W4A8."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.hw import gpu as G
+from repro.hw import systolic as sy
+
+from .systolic_tables import PAPER_DIMS, measured_class_mixes
+
+
+def run(seq: int = 2048, steps: int = 400) -> List[dict]:
+    mixes = measured_class_mixes(steps)
+    rows = []
+    for model, dims in PAPER_DIMS.items():
+        shapes = sy.decoder_layer_shapes(seq=seq, batch=1, **dims)
+        res = {n: G.simulate_matmuls(shapes, G.gpu_baseline(n))
+               for n in ("fp16", "w8a8", "w4a8")}
+        for variant, (f3, f2) in mixes.items():
+            res[f"halo-{variant}"] = G.simulate_matmuls(
+                shapes, G.gpu_halo(f3, f2, name=f"halo-{variant}"))
+        ref = res["w8a8"]
+        for name, r in res.items():
+            rows.append({"model": model, "scheme": name,
+                         "time_ms": r.time_s * 1e3,
+                         "norm_time": r.time_s / ref.time_s,
+                         "energy_j": r.energy_j,
+                         "norm_energy": r.energy_j / ref.energy_j})
+    return rows
+
+
+def main():
+    print("gpu perf/energy (Figs. 12-13) -- normalized to W8A8")
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"gpu/{r['model']}/{r['scheme']},{r['time_ms']*1e3:.1f},"
+              f"norm_time={r['norm_time']:.4f};"
+              f"norm_energy={r['norm_energy']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

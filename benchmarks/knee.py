@@ -1,0 +1,49 @@
+"""Fig. 9 analogue: normalized performance vs perplexity across theta --
+the knee point marks the bal variant's efficiency-accuracy tradeoff."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.apply import dequantize_params, quantize_params
+from repro.core.pareto import _class_mix_speedup, knee_point, ParetoPoint
+from repro.core.quantize import HaloConfig
+
+from . import common
+
+
+def run(steps: int = 400,
+        thetas=(0.3, 0.5, 0.7, 0.85, 0.95, 0.99, 0.999)) -> List[dict]:
+    cfg, params = common.train_reference("llama", steps=steps)
+    fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
+    rows = []
+    pts = []
+    for theta in thetas:
+        q = quantize_params(params, fisher, HaloConfig(tile=64), theta=theta)
+        f3, f2 = common.class_mix_from_quantized(q)
+        ppl = common.eval_ppl(dequantize_params(q), cfg, act_bits=8)
+        speedup = _class_mix_speedup(f3)
+        rows.append({"theta": theta, "f3_frac": f3, "ppl": ppl,
+                     "speedup_vs_f1": speedup})
+        pts.append(ParetoPoint(theta=theta, f3_fraction=f3,
+                               effective_bits=0.0, error_proxy=ppl,
+                               est_speedup_vs_f1=speedup))
+    knee = knee_point(pts)
+    for r in rows:
+        r["is_knee"] = (r["theta"] == knee.theta)
+    return rows
+
+
+def main():
+    print("performance-vs-ppl knee (Fig. 9)")
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"knee/theta={r['theta']},0,ppl={r['ppl']:.3f};"
+              f"speedup={r['speedup_vs_f1']:.3f};f3={r['f3_frac']:.3f};"
+              f"knee={int(r['is_knee'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""SRoofline deliverable: the 3-term table for every dry-run cell, read from
+experiments/dryrun/*.json (run `python -m repro.launch.dryrun --all` first)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.analysis import roofline as RL
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+HILLCLIMB_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                             "hillclimb")
+
+
+def main():
+    reports = RL.load_reports(DRYRUN_DIR)
+    if not reports:
+        print("no dry-run artifacts found; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all`")
+        return
+    print(RL.format_table(reports))
+    hc = RL.load_reports(HILLCLIMB_DIR)
+    if hc:
+        print("\nSPerf hillclimb variants (tag after '@'):")
+        print(RL.format_table(hc))
+    print("\nname,us_per_call,derived")
+    for r in reports:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{bound*1e6:.0f},"
+              f"dominant={r['dominant']};"
+              f"roofline_frac={r['roofline_fraction']:.4f};"
+              f"useful={r['useful_ratio']:.3f};fits={int(r['fits_hbm'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--steps N]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (harness convention).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def _print_rows(rows):
+    print("name,us_per_call,derived")
+    for r in rows:
+        extra = f";bw={r['eff_bits']:.2f}" if "eff_bits" in r else ""
+        print(f"accuracy/{r['family']}/{r['method']},0,"
+              f"ppl={r['ppl']:.4f};delta={r['delta_vs_fp']:+.4f}{extra}")
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single module (accuracy|systolic|gpu|knee|"
+                         "roofline)")
+    ap.add_argument("--steps", type=int, default=400,
+                    help="reference-model training steps")
+    args = ap.parse_args()
+
+    from . import ablations, accuracy_table, gpu_tables, knee, \
+        roofline_table, systolic_tables
+
+    # note: reference-model training is cached per (family, steps) under
+    # experiments/bench_cache; modules below all honor --steps.
+    import functools
+
+    def with_steps(fn):
+        return functools.partial(fn, steps=args.steps) \
+            if "steps" in fn.__code__.co_varnames else fn
+
+    modules = {
+        "accuracy": lambda: _print_rows(accuracy_table.run(
+            steps=args.steps)),               # Table II
+        "systolic": systolic_tables.main,     # Figs. 8, 10, 11
+        "gpu": gpu_tables.main,               # Figs. 12, 13
+        "knee": knee.main,                    # Fig. 9
+        "ablations": ablations.main,          # SAccuracy quantizer knobs
+        "roofline": roofline_table.main,      # SRoofline
+    }
+    selected = {args.only: modules[args.only]} if args.only else modules
+
+    failures = []
+    for name, fn in selected.items():
+        print(f"\n===== benchmark: {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+    if failures:
+        print("\nFAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Figs. 8-11 analogues: systolic-array execution time & energy for the
+paper's own model dims under FP16 / W8A8 / W4A8 / W3A8 / HALO variants,
+plus the tile-size sweep.  Class mixes come from actually quantizing the
+reference model at each variant's theta (not assumed)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.apply import quantize_params
+from repro.core.pareto import VARIANT_THETA
+from repro.core.quantize import HaloConfig
+from repro.hw import systolic as sy
+
+from . import common
+
+PAPER_DIMS = {
+    "llama2-7b": dict(d_model=4096, d_ff=11008, n_layers=32, vocab=32000),
+    "llama2-13b": dict(d_model=5120, d_ff=13824, n_layers=40, vocab=32000),
+    "opt-1.3b": dict(d_model=2048, d_ff=8192, n_layers=24, vocab=50272,
+                     gated=False),
+    "opt-30b": dict(d_model=7168, d_ff=28672, n_layers=48, vocab=50272,
+                    gated=False),
+}
+
+
+def measured_class_mixes(steps: int = 400) -> Dict[str, tuple]:
+    cfg, params = common.train_reference("llama", steps=steps)
+    fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
+    mixes = {}
+    for variant, theta in VARIANT_THETA.items():
+        q = quantize_params(params, fisher, HaloConfig(tile=64), theta=theta)
+        mixes[variant] = common.class_mix_from_quantized(q)
+    return mixes
+
+
+def run(seq: int = 2048, steps: int = 400) -> List[dict]:
+    mixes = measured_class_mixes(steps)
+    rows = []
+    for model, dims in PAPER_DIMS.items():
+        shapes = sy.decoder_layer_shapes(seq=seq, batch=1, **dims)
+        base = {n: sy.simulate_layers(shapes, sy.baseline_scheme(n))
+                for n in ("fp16", "w8a8", "w4a8", "w3a8")}
+        res = dict(base)
+        for variant, (f3, f2) in mixes.items():
+            res[f"halo-{variant}"] = sy.simulate_layers(
+                shapes, sy.halo_scheme(f3, f2, name=f"halo-{variant}"))
+        ref = base["fp16"]
+        for name, r in res.items():
+            rows.append({
+                "model": model, "scheme": name,
+                "time_ms": r.time_s * 1e3,
+                "norm_time": r.time_s / ref.time_s,
+                "energy_j": r.energy_j,
+                "norm_energy": r.energy_j / ref.energy_j,
+                "dvfs_transitions": r.dvfs_transitions,
+                "spmv_frac": r.spmv_time_s / r.time_s,
+            })
+    return rows
+
+
+def tile_sweep(seq: int = 2048, steps: int = 400) -> List[dict]:
+    """Fig. 11: HALO-128 / 64 / 32 execution time (bal variant)."""
+    cfg, params = common.train_reference("llama", steps=steps)
+    fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
+    rows = []
+    for tile in (128, 64, 32):
+        q = quantize_params(params, fisher, HaloConfig(tile=tile),
+                            theta=VARIANT_THETA["bal"])
+        f3, f2 = common.class_mix_from_quantized(q)
+        dims = PAPER_DIMS["llama2-7b"]
+        shapes = sy.decoder_layer_shapes(seq=seq, batch=1, **dims)
+        # the physical array stays 128x128 (the MXU); the HALO tile size
+        # only changes the DVFS-class granularity -> the class mix
+        r = sy.simulate_layers(shapes, sy.halo_scheme(f3, f2), tile=128)
+        rows.append({"tile": tile, "f3_frac": f3, "time_ms": r.time_s * 1e3,
+                     "energy_j": r.energy_j})
+    return rows
+
+
+def main():
+    print("systolic perf/energy (Figs. 8, 10) -- normalized to FP16")
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"systolic/{r['model']}/{r['scheme']},"
+              f"{r['time_ms']*1e3:.1f},"
+              f"norm_time={r['norm_time']:.4f};"
+              f"norm_energy={r['norm_energy']:.4f};"
+              f"dvfs={r['dvfs_transitions']};"
+              f"spmv={r['spmv_frac']:.4f}")
+    print("\ntile sweep (Fig. 11)")
+    for r in tile_sweep():
+        print(f"tile_sweep/halo-{r['tile']},{r['time_ms']*1e3:.1f},"
+              f"f3_frac={r['f3_frac']:.3f};energy_j={r['energy_j']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end quantized serving: train a small LM, HALO-quantize, pack to
+the 4-bit deployment format, and serve batched requests through the engine
+with int8 KV caches -- the paper's deployment scenario in miniature.
+
+  PYTHONPATH=src python examples/quantized_serving.py
+"""
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+from repro.core.apply import dequantize_params, quantize_params  # noqa: E402
+from repro.core.quantize import HaloConfig  # noqa: E402
+from repro.serving.engine import Engine, SamplerConfig  # noqa: E402
+
+
+def main():
+    print("=== train + calibrate + quantize (bal) ===")
+    cfg, params = common.train_reference("llama", steps=300)
+    fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
+    qparams = quantize_params(params, fisher, HaloConfig(tile=64),
+                              theta=0.95)
+    served = dequantize_params(qparams)
+
+    print("=== serve batched requests (greedy + int8 KV) ===")
+    cfg_srv = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    rng = np.random.default_rng(0)
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (4, 24)).astype(np.int32))}
+    eng_fp = Engine(params, cfg)
+    eng_q = Engine(served, cfg_srv, SamplerConfig(temperature=0.0))
+    out_fp = eng_fp.generate(dict(prompts), max_new=16)
+    out_q = eng_q.generate(dict(prompts), max_new=16)
+    agree = float((out_fp == out_q).mean())
+    print(f"generated {out_q.shape} tokens; greedy agreement with fp32 "
+          f"reference: {agree:.0%}")
+    print("sample (quantized):", out_q[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

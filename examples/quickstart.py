@@ -1,0 +1,89 @@
+"""Quickstart: train a tiny LM, HALO-quantize it, compare against baselines,
+and report the simulated systolic-array deployment win.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+from repro.core.apply import dequantize_params, quantize_params  # noqa: E402
+from repro.core.pareto import VARIANT_THETA  # noqa: E402
+from repro.core.quantize import HaloConfig  # noqa: E402
+from repro.core.schedule import schedule_model  # noqa: E402
+from repro.core.apply import StackedHalo  # noqa: E402
+from repro.core.quantize import HaloQuantized  # noqa: E402
+from repro.hw import systolic as sy  # noqa: E402
+from repro.quant import rtn  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    print("=== 1. train a small reference LM on the synthetic corpus ===")
+    cfg, params = common.train_reference("llama", steps=args.steps)
+    fp_ppl = common.eval_ppl(params, cfg)
+    print(f"fp32 perplexity: {fp_ppl:.3f}")
+
+    print("\n=== 2. calibrate (diagonal Fisher over 4 batches) ===")
+    fisher, act_stats = common.collect_calibration(params, cfg,
+                                                   with_gram=False)
+
+    print("\n=== 3. HALO quantization (Algorithm 1) at the three goals ===")
+    results = {}
+    for variant, theta in VARIANT_THETA.items():
+        q = quantize_params(params, fisher, HaloConfig(tile=64), theta=theta)
+        ppl = common.eval_ppl(dequantize_params(q), cfg, act_bits=8)
+        f3, f2 = common.class_mix_from_quantized(q)
+        results[variant] = (q, ppl, f3)
+        print(f"halo-{variant:9s} ppl={ppl:8.3f} (d{ppl - fp_ppl:+.3f})  "
+              f"f3-tiles={f3:5.1%}")
+
+    ppl_rtn4 = common.eval_ppl(rtn.rtn_quantize_params(params, 4), cfg,
+                               act_bits=8)
+    ppl_rtn3 = common.eval_ppl(rtn.rtn_quantize_params(params, 3), cfg,
+                               act_bits=8)
+    print(f"rtn-w4a8       ppl={ppl_rtn4:8.3f} (d{ppl_rtn4 - fp_ppl:+.3f})")
+    print(f"rtn-w3a8       ppl={ppl_rtn3:8.3f} (d{ppl_rtn3 - fp_ppl:+.3f})")
+
+    print("\n=== 4. DVFS schedule for the bal model ===")
+    q_bal = results["bal"][0]
+    quantized_tensors = {}
+    i = 0
+    for leaf in jax.tree.leaves(
+            q_bal, is_leaf=lambda x: isinstance(x, (HaloQuantized,
+                                                    StackedHalo))):
+        if isinstance(leaf, HaloQuantized):
+            quantized_tensors[f"t{i}"] = leaf
+            i += 1
+        elif isinstance(leaf, StackedHalo):
+            for s in leaf.slices:
+                quantized_tensors[f"t{i}"] = s
+                i += 1
+    sched = schedule_model(quantized_tensors)
+    print(f"DVFS transitions per inference: {sched['num_transitions']}  "
+          f"(overhead {sched['transition_overhead_s']*1e6:.1f} us)")
+    print(f"class mix: F3 {sched['f3_fraction']:.1%} / "
+          f"F2 {sched['f2_fraction']:.1%}")
+
+    print("\n=== 5. simulated systolic-array deployment (paper Fig. 8) ===")
+    shapes = sy.decoder_layer_shapes(4096, 11008, 32, 32000, seq=2048)
+    base = sy.simulate_layers(shapes, sy.baseline_scheme("w8a8"))
+    halo = sy.simulate_layers(
+        shapes, sy.halo_scheme(sched["f3_fraction"], sched["f2_fraction"]))
+    print(f"LLaMA2-7B-dims speedup vs W8A8: "
+          f"{base.time_s / halo.time_s:.2f}x; "
+          f"energy ratio {halo.energy_j / base.energy_j:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end training driver: a ~100M-parameter granite-family model with
+the full production stack -- grad accumulation, AdamW, warmup-cosine,
+async checkpointing, auto-resume, straggler watchdog.
+
+Full size  : PYTHONPATH=src python examples/train_100m.py --full --steps 300
+CPU-scaled : PYTHONPATH=src python examples/train_100m.py --steps 100
+             (a ~6M model so the example completes in minutes on CPU; the
+              training code path is identical)
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus  # noqa: E402
+from repro.launch.train import TrainConfig, train_loop  # noqa: E402
+from repro.models import module as M  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+
+def config(full: bool) -> ModelConfig:
+    if full:  # ~110M params
+        return ModelConfig(
+            name="granite-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32768,
+            activation="silu", gated_mlp=True, dtype=jnp.float32,
+            attn_chunk=256, vocab_pad_multiple=128)
+    return ModelConfig(
+        name="granite-6m", family="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=2, head_dim=64, d_ff=768, vocab=4096,
+        activation="silu", gated_mlp=True, dtype=jnp.float32,
+        attn_chunk=128, vocab_pad_multiple=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    cfg = config(args.full)
+    n = M.param_count(T.model_specs(cfg))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+    tcfg = TrainConfig(
+        peak_lr=6e-4, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, grad_accum=args.grad_accum,
+        ckpt_every=max(args.steps // 5, 1), ckpt_dir=args.ckpt_dir)
+    corpus = SyntheticCorpus(CorpusConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch=args.batch))
+    print(f"corpus entropy floor ppl: {corpus.floor_perplexity():.2f}")
+
+    hist = train_loop(cfg, tcfg, corpus, log_every=10)
+    first, last = hist["loss"][0][1], hist["loss"][-1][1]
+    print(f"\nloss {first:.4f} -> {last:.4f} over {args.steps} steps "
+          f"({hist['restarts']} restarts, "
+          f"{len(hist['straggler_flags'])} straggler flags)")
+    print(f"checkpoints in {args.ckpt_dir} (resumable: rerun to continue)")
+
+
+if __name__ == "__main__":
+    main()

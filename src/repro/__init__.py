@@ -1,0 +1,7 @@
+"""repro: HALO (AAAI'26) -- hardware-aware PTQ with low critical-path-delay
+weights, built as a multi-pod JAX/TPU training & serving framework.
+
+Subpackages: hw (MAC/DVFS models, simulators), core (Algorithm 1 + deploy),
+quant (baselines), models, kernels (Pallas), data, optim, checkpoint, dist,
+serving, configs, launch, analysis.  See DESIGN.md / EXPERIMENTS.md.
+"""

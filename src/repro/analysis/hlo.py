@@ -1,0 +1,528 @@
+"""HLO text analysis: loop-aware collective-communication byte accounting.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled (post-SPMD) HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Collectives inside ``while`` bodies (layer scans, grad-accum microbatch
+loops) appear once in the text but execute ``known_trip_count`` times, so we
+build the computation call graph -- ENTRY -> while bodies (x trip count) ->
+nested calls -- and weight each computation's collective bytes by its total
+execution multiplier.  XLA's CPU/TPU pipelines annotate compiled while ops
+with ``backend_config={"known_trip_count":{"n":...}}``; unknown trip counts
+conservatively default to 1 (and are reported so the roofline can flag it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# named scopes whose instruction pipelines live in Pallas-kernel VMEM
+_VMEM_SCOPES = ("flash_vmem", "halo_vmem", "kvdec_vmem")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COLL_RE = re.compile(
+    r"%[\w\.\-]+\s*=\s*(\(?[^=]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?(?:to_apply|calls)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"conditional\(.*")
+_BRANCH_RE = re.compile(r"(?:branch_computations|true_computation|"
+                        r"false_computation)=\{?%?([\w\.\-,% ]+)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, float]       # execution-weighted instance count
+    total_bytes: float
+    unknown_trip_counts: int
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_op": self.bytes_by_op,
+                "count_by_op": self.count_by_op,
+                "total_bytes": self.total_bytes,
+                "unknown_trip_counts": self.unknown_trip_counts}
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_HDR_RE.match(line) or _COMP_HDR_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def _entry_name(hlo_text: str, comps: Dict[str, List[str]]) -> str:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                return m.group(1)
+    # fallback: computation never referenced by others
+    called = set()
+    for lines in comps.values():
+        for ln in lines:
+            for mm in re.finditer(r"(?:to_apply|body|condition|calls)=%?"
+                                  r"([\w\.\-]+)", ln):
+                called.add(mm.group(1))
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text, comps)
+
+    # computation execution multipliers, propagated from ENTRY
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    unknown_trips = 0
+
+    def visit(name: str, m: float, depth: int = 0) -> None:
+        nonlocal unknown_trips
+        if name not in comps or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ln in comps[name]:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                body = wm.group(1)
+                tm = _TRIP_RE.search(ln)
+                trips = float(tm.group(1)) if tm else 1.0
+                if not tm:
+                    unknown_trips += 1
+                visit(body, m * trips, depth + 1)
+                continue
+            cm = _CALL_RE.search(ln)
+            if cm:
+                visit(cm.group(1), m, depth + 1)
+                continue
+            bm = _BRANCH_RE.search(ln)
+            if bm:
+                for branch in re.findall(r"[\w\.\-]+", bm.group(1)):
+                    visit(branch, m, depth + 1)
+
+    visit(entry, 1.0)
+
+    bytes_by_op: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    count_by_op: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0.0:
+            continue
+        for ln in lines:
+            cm = _COLL_RE.search(ln)
+            if not cm:
+                continue
+            type_str, op, phase = cm.group(1), cm.group(2), cm.group(3)
+            if phase == "-done":
+                continue
+            b = _shape_bytes(type_str)
+            if phase == "-start":
+                b = b / 2.0          # tuple type carries operand + result
+            bytes_by_op[op] += b * m
+            count_by_op[op] += m
+    total = sum(bytes_by_op.values())
+    return CollectiveStats(bytes_by_op=bytes_by_op, count_by_op=count_by_op,
+                           total_bytes=total,
+                           unknown_trip_counts=unknown_trips)
+
+
+def while_loop_trip_counts(hlo_text: str) -> List[int]:
+    return [int(x) for x in _TRIP_RE.findall(hlo_text)]
+
+
+# ---------------------------------------------------------------------------
+# loop-aware FLOP / byte accounting
+# ---------------------------------------------------------------------------
+#
+# XLA's compiled.cost_analysis() counts each while body ONCE -- a 96-layer
+# scan or a 32-microbatch accumulation loop is undercounted by its trip
+# count.  We therefore re-derive FLOPs and HBM bytes from the HLO text with
+# the same execution-multiplier propagation used for collectives:
+#   * dot ops: 2 * prod(output dims) * prod(contracting dims)   [per device]
+#   * elementwise/transcendental ops: prod(shape) flops
+#   * bytes: operands + outputs of instructions at fusion boundaries only
+#     (inside kLoop/kInput fusions intermediates never touch HBM)
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.+?\)?)\s+"
+                       r"([\w\-]+)\(")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\]"
+                       r"(?:\{[\d,]*\})?))")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_FUSION_CALLS_RE = re.compile(r"fusion\(.*?calls=%?([\w\.\-]+)")
+
+ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "select", "compare", "and", "or",
+    "convert", "floor", "ceil", "round-nearest-afz", "sign", "clamp",
+    "cosine", "sine", "logistic", "erf", "cbrt", "atan2", "remainder",
+}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _prod(xs) -> float:
+    p = 1.0
+    for x in xs:
+        p *= x
+    return p
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float                 # per-device, loop-weighted
+    dot_flops: float
+    elementwise_flops: float
+    hbm_bytes: float             # per-device, loop-weighted, fusion-boundary
+    collectives: CollectiveStats
+    rows: Optional[list] = None  # (bytes, mult, op, line) when collected
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "dot_flops": self.dot_flops,
+                "elementwise_flops": self.elementwise_flops,
+                "hbm_bytes": self.hbm_bytes,
+                "collectives": self.collectives.as_dict()}
+
+
+def analyze_hlo(hlo_text: str, collect_rows: bool = False) -> HloCosts:
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text, comps)
+
+    # header parameter types per computation (symbol table seed)
+    header_types: Dict[str, Dict[str, str]] = {}
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m:
+            name = m.group(1)
+            header_types[name] = {pname: ptype for pname, ptype
+                                  in _PARAM_RE.findall(line)}
+
+    # per-computation: symbol tables, op records
+    sym: Dict[str, Dict[str, str]] = {}
+    for name, lines in comps.items():
+        table = dict(header_types.get(name, {}))
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if im:
+                table[im.group(1)] = im.group(2)
+        sym[name] = table
+
+    # classify call edges to know fusion bodies
+    fused_bodies = set()
+    for name, lines in comps.items():
+        for ln in lines:
+            fm = _FUSION_CALLS_RE.search(ln)
+            if fm:
+                fused_bodies.add(fm.group(1))
+
+    # multipliers (same walk as collective_stats)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0) -> None:
+        if name not in comps or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ln in comps[name]:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                tm = _TRIP_RE.search(ln)
+                trips = float(tm.group(1)) if tm else 1.0
+                visit(wm.group(1), m * trips, depth + 1)
+                continue
+            fm = _FUSION_CALLS_RE.search(ln)
+            if fm:
+                visit(fm.group(1), m, depth + 1)
+                continue
+            cm = _CALL_RE.search(ln)
+            if cm:
+                visit(cm.group(1), m, depth + 1)
+                continue
+            bm = _BRANCH_RE.search(ln)
+            if bm:
+                for branch in re.findall(r"[\w\.\-]+", bm.group(1)):
+                    visit(branch, m, depth + 1)
+
+    visit(entry, 1.0)
+
+    # --- per-fusion summaries: effective output bytes (in-place DUS roots)
+    # and per-parameter effective read bytes (params only dynamic-sliced
+    # inside the fusion charge the slice, not the whole array) -------------
+    # TPU-semantics modeling inside fused computations: pure type/layout
+    # chains (convert/bitcast/copy/reshape) are free, dynamic-update-slice
+    # buffers are updated in place, dynamic-slice reads only the slice.
+    _PASS_OPS = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def _fusion_summary(body: str):
+        lines = comps.get(body, [])
+        table = sym.get(body, {})
+        # def map: name -> (op, type, operands); use map: name -> users
+        defs: Dict[str, Tuple[str, str, List[str]]] = {}
+        users: Dict[str, List[str]] = {}
+        root_name = None
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            nm, typ, op = im.groups()
+            args = ln.split("(", 1)[1] if "(" in ln else ""
+            operands = _OPERAND_RE.findall(args.split(")", 1)[0])
+            defs[nm] = (op, typ, operands)
+            for o in operands:
+                users.setdefault(o, []).append(nm)
+            if ln.startswith("ROOT"):
+                root_name = nm
+        for ln in lines:
+            pm = re.match(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\S+)\s+"
+                          r"parameter\((\d+)\)", ln)
+            if pm:
+                defs[pm.group(1)] = ("parameter", pm.group(2), [])
+
+        def _resolve_fwd(nm: str, depth=0) -> str:
+            """Follow pure chains downstream (single user) from nm."""
+            while depth < 16:
+                us = users.get(nm, [])
+                if len(us) == 1 and defs.get(us[0], ("",))[0] in _PASS_OPS:
+                    nm = us[0]
+                    depth += 1
+                    continue
+                return nm
+            return nm
+
+        def _resolve_back(nm: str, depth=0) -> str:
+            """Follow pure chains upstream from nm."""
+            while depth < 16:
+                d = defs.get(nm)
+                if d and d[0] in _PASS_OPS and d[2]:
+                    nm = d[2][0]
+                    depth += 1
+                    continue
+                return nm
+            return nm
+
+        def _dus_update_bytes(nm: str) -> float:
+            d = defs.get(nm)
+            if d and len(d[2]) > 1:
+                upd = d[2][1]
+                return _shape_bytes(defs.get(upd, ("", "", []))[1])
+            return 0.0
+
+        # --- effective write bytes
+        out_override = None
+        if root_name is not None:
+            rroot = _resolve_back(root_name)
+            rop = defs.get(rroot, ("",))[0]
+            if rop == "dynamic-update-slice":
+                out_override = 2.0 * _dus_update_bytes(rroot)
+            elif rop == "tuple":
+                total = 0.0
+                for el in defs[rroot][2]:
+                    rel = _resolve_back(el)
+                    if defs.get(rel, ("",))[0] == "dynamic-update-slice":
+                        total += 2.0 * _dus_update_bytes(rel)
+                    else:
+                        total += _shape_bytes(defs.get(el, ("", "", []))[1])
+                out_override = total
+
+        # --- effective read bytes per parameter
+        param_names = list(header_types.get(body, {}).keys())
+        param_read: Dict[str, float] = {}
+        for pn in param_names:
+            eff = _resolve_fwd(pn)
+            consumers = users.get(eff, [])
+            if not consumers:
+                param_read[pn] = 0.0
+                continue
+            b, simple = 0.0, True
+            for c in consumers:
+                cop, ctyp, coper = defs.get(c, ("", "", []))
+                if cop == "dynamic-slice":
+                    b += _shape_bytes(ctyp)
+                elif cop == "dynamic-update-slice" and coper \
+                        and coper[0] == eff:
+                    b += 0.0              # aliased in-place buffer
+                else:
+                    simple = False
+                    break
+            if simple:
+                param_read[pn] = b
+        return out_override, param_names, param_read
+
+    fusion_info = {b: _fusion_summary(b) for b in fused_bodies}
+
+    rows = [] if collect_rows else None
+    dot_flops = ew_flops = hbm_bytes = 0.0
+    NO_CHARGE = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "iota", "after-all", "while", "conditional",
+                 "call", "custom-call", "partition-id", "replica-id")
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0.0:
+            continue
+        table = sym[name]
+        in_fusion = name in fused_bodies
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            out_name, out_type, op = im.groups()
+            shapes = _shape_dims(out_type)
+            out_elems = sum(_prod(d) for _, d in shapes)
+            if op == "dot":
+                cm = _CONTRACT_RE.search(ln)
+                contract = 1.0
+                if cm:
+                    ops = _OPERAND_RE.findall(ln.split("dot(", 1)[1])
+                    lhs_type = table.get(ops[0], "") if ops else ""
+                    lhs_shapes = _shape_dims(lhs_type)
+                    if lhs_shapes and cm.group(1):
+                        dims = [int(x) for x in cm.group(1).split(",") if x]
+                        lhs_dims = lhs_shapes[0][1]
+                        contract = _prod(lhs_dims[d] for d in dims
+                                         if d < len(lhs_dims))
+                dot_flops += m * 2.0 * out_elems * contract
+            elif op in ELEMENTWISE_OPS:
+                ew_flops += m * out_elems
+            # HBM bytes: fusion-boundary instructions only
+            if in_fusion or op in NO_CHARGE:
+                continue
+            # flash_vmem / halo_vmem / kvdec_vmem scopes: resident in the
+            # Pallas kernels' VMEM (kernels/flash_attention.py,
+            # kernels/halo_matmul.py, kernels/flash_decode.py); only the
+            # block DMAs (dynamic-slice loads) touch HBM.  XLA may merge
+            # scoped ops into fusions whose root carries an unscoped
+            # op_name, so fusion bodies are inspected for scope tags too.
+            scoped = any(t in ln for t in _VMEM_SCOPES)
+            if not scoped and op == "fusion":
+                fm = _FUSION_CALLS_RE.search(ln)
+                body_lines = comps.get(fm.group(1), []) if fm else []
+                scoped = any(any(t in bl for t in _VMEM_SCOPES)
+                             for bl in body_lines)
+            if scoped:
+                if op in ("dynamic-slice",):
+                    hbm_bytes += m * 2.0 * _shape_bytes(out_type)
+                    if rows is not None:
+                        rows.append((m * 2.0 * _shape_bytes(out_type), m,
+                                     op, ln[:140]))
+                elif op == "fusion":
+                    fm = _FUSION_CALLS_RE.search(ln)
+                    body_lines = comps.get(fm.group(1), []) if fm else []
+                    ds_out = 0.0
+                    for bl in body_lines:
+                        bim = _INSTR_RE.match(bl)
+                        if bim and bim.group(3) == "dynamic-slice":
+                            ds_out += _shape_bytes(bim.group(2))
+                    if ds_out:
+                        hbm_bytes += m * 2.0 * ds_out
+                        if rows is not None:
+                            rows.append((m * 2.0 * ds_out, m,
+                                         "fusion-ds", ln[:140]))
+                continue
+
+            def _charge(b):
+                nonlocal hbm_bytes
+                hbm_bytes += m * b
+                if rows is not None:
+                    rows.append((m * b, m, op, ln[:140]))
+
+            b_out = _shape_bytes(out_type)
+            if op in ("dynamic-slice", "gather", "slice"):
+                _charge(2.0 * b_out)               # reads only the slice
+            elif op in ("dynamic-update-slice", "scatter"):
+                args = ln.split("(", 1)[1] if "(" in ln else ""
+                ops_ = _OPERAND_RE.findall(args.split("),", 1)[0])
+                upd = _shape_bytes(table.get(ops_[1], "")) \
+                    if len(ops_) > 1 else b_out
+                _charge(2.0 * upd)                  # in-place update
+            elif op == "fusion":
+                fm = _FUSION_CALLS_RE.search(ln)
+                info = fusion_info.get(fm.group(1)) if fm else None
+                args = ln.split("(", 1)[1] if "(" in ln else ""
+                operands = _OPERAND_RE.findall(args.split("),", 1)[0])
+                if info is not None:
+                    out_override, pnames, pread = info
+                    b = out_override if out_override is not None else b_out
+                    for i, opnd in enumerate(operands):
+                        pn = pnames[i] if i < len(pnames) else None
+                        if pn is not None and pn in pread:
+                            b += pread[pn]          # only sliced inside
+                        else:
+                            b += _shape_bytes(table.get(opnd, ""))
+                    _charge(b)
+                else:
+                    b_in = sum(_shape_bytes(table.get(o, ""))
+                               for o in operands)
+                    _charge(b_out + b_in)
+            elif op == "copy":
+                args = ln.split("(", 1)[1] if "(" in ln else ""
+                ops_ = _OPERAND_RE.findall(args.split("),", 1)[0])
+                src_t = table.get(ops_[0], "") if ops_ else ""
+                if src_t.strip() == out_type.strip():
+                    # same type+layout: loop-carry copy, aliased on TPU
+                    _charge(0.0)
+                else:
+                    _charge(2.0 * b_out)      # layout-changing copy
+            else:
+                b_in = 0.0
+                args = ln.split("(", 1)[1] if "(" in ln else ""
+                args = args.split("),", 1)[0]
+                for opnd in _OPERAND_RE.findall(args):
+                    b_in += _shape_bytes(table.get(opnd, ""))
+                _charge(b_out + b_in)
+
+    colls = collective_stats(hlo_text)
+    if rows is not None:
+        rows.sort(reverse=True)
+    return HloCosts(flops=dot_flops + ew_flops, dot_flops=dot_flops,
+                    elementwise_flops=ew_flops, hbm_bytes=hbm_bytes,
+                    collectives=colls, rows=rows)

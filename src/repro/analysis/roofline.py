@@ -1,0 +1,174 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+  compute term    = HLO_FLOPs    / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes    / (chips * 819 GB/s)
+  collective term = coll_bytes   / (chips * 50 GB/s/link)
+
+Our HLO parser reports *per-device* loop-weighted quantities (post-SPMD
+shapes are shards), so the division by `chips` is already folded in --
+terms below divide per-device quantities by per-chip peaks.  We report
+XLA's raw cost_analysis alongside for transparency: it counts while bodies
+once, so for scanned models it undercounts by the trip count (documented
+in EXPERIMENTS.md).
+
+MODEL_FLOPS uses the brief's convention: 6*N*D for training (N params,
+D tokens), 2*N_active*D for single forward/decode steps; MoE uses active
+params.  The ratio MODEL_FLOPS / HLO_FLOPS measures how much compiled
+compute is "useful" (catches remat recompute, attention waste, dispatch
+overhead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from ..hw.tpu_specs import V5E, ChipSpec
+from . import hlo as hlo_mod
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    step_kind: str
+    # per-device, loop-weighted
+    hlo_flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # useful-work accounting
+    model_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPS * chips)
+    roofline_fraction: float     # bound_term / sum-ish: see below
+    # memory fit
+    argument_bytes: float
+    temp_bytes: float
+    donated_bytes: float      # per-device bytes of donated inputs (aliased
+    fits_hbm: bool            # in place on TPU; XLA:CPU cannot alias them)
+    analytic_peak_bytes: float = 0.0   # structural TPU-residency estimate
+    fits_hbm_analytic: bool = True     # (see EXPERIMENTS.md SDry-run)
+    # raw XLA numbers for transparency
+    xla_cost_flops: Optional[float] = None
+    xla_cost_bytes: Optional[float] = None
+    collectives_by_op: Optional[Dict[str, float]] = None
+    notes: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def build_report(arch: str, shape: str, mesh_name: str, chips: int,
+                 step_kind: str, hlo_text: str,
+                 memory_stats, cost_analysis: Optional[dict],
+                 model_flops_global: float,
+                 donated_bytes: float = 0.0,
+                 analytic_peak_bytes: float = 0.0,
+                 spec: ChipSpec = V5E, notes: str = "") -> RooflineReport:
+    costs = hlo_mod.analyze_hlo(hlo_text)
+    compute_s = costs.flops / spec.peak_bf16_flops
+    memory_s = costs.hbm_bytes / spec.hbm_bandwidth
+    coll_s = costs.collectives.total_bytes / spec.ici_link_bandwidth
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    useful = model_flops_global / max(costs.flops * chips, 1.0)
+    # roofline fraction: useful compute time / modeled step time (the three
+    # terms overlap on real hardware; we report the pessimistic no-overlap
+    # denominator AND the optimistic max-term one -- fraction uses max-term,
+    # i.e. "if perfectly overlapped, what share of the binding resource
+    # does useful compute occupy".
+    ideal_s = model_flops_global / (chips * spec.peak_bf16_flops)
+    bound_s = max(terms.values())
+    frac = ideal_s / bound_s if bound_s > 0 else 0.0
+
+    arg_b = float(memory_stats.argument_size_in_bytes)
+    tmp_b = float(memory_stats.temp_size_in_bytes)
+    out_b = float(memory_stats.output_size_in_bytes)
+    alias_b = float(memory_stats.alias_size_in_bytes)
+    # XLA:CPU cannot alias donated buffers, so its `temp` includes a full
+    # second copy of every donated input (train state, KV caches) that a TPU
+    # executable updates in place.  Model TPU residency by crediting the
+    # donated bytes once against the temp side (never below zero).
+    tmp_eff = max(tmp_b - donated_bytes, 0.0)
+    peak = arg_b + tmp_eff + max(out_b - alias_b - donated_bytes, 0.0)
+    fits = peak <= spec.hbm_bytes
+
+    xf = xb = None
+    if cost_analysis:
+        xf = float(cost_analysis.get("flops", 0.0))
+        xb = float(cost_analysis.get("bytes accessed", 0.0))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        step_kind=step_kind,
+        hlo_flops_per_device=costs.flops,
+        hbm_bytes_per_device=costs.hbm_bytes,
+        collective_bytes_per_device=costs.collectives.total_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant,
+        model_flops_global=model_flops_global,
+        useful_ratio=min(useful, 10.0),
+        roofline_fraction=frac,
+        argument_bytes=arg_b, temp_bytes=tmp_b,
+        donated_bytes=donated_bytes, fits_hbm=fits,
+        analytic_peak_bytes=analytic_peak_bytes,
+        fits_hbm_analytic=(analytic_peak_bytes <= spec.hbm_bytes
+                           if analytic_peak_bytes else fits),
+        xla_cost_flops=xf, xla_cost_bytes=xb,
+        collectives_by_op=costs.collectives.bytes_by_op,
+        notes=notes)
+
+
+def model_flops(n_params_dense: float, n_params_active: float,
+                tokens: float, step_kind: str) -> float:
+    """Brief convention: train 6*N*D; forward-only (prefill) 2*N*D;
+    decode 2*N per token * batch."""
+    n = n_params_active
+    if step_kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def save_report(report: RooflineReport, directory: str) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(
+        directory, f"{report.arch}__{report.shape}__{report.mesh}.json")
+    with open(path, "w") as f:
+        json.dump(report.as_dict(), f, indent=1)
+    return path
+
+
+def load_reports(directory: str):
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in sorted(os.listdir(directory)):
+        if name.endswith(".json"):
+            with open(os.path.join(directory, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def format_table(reports) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} {'kind':7s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofline%':>9s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['step_kind']:7s} {r['compute_s']:10.4g} "
+            f"{r['memory_s']:10.4g} {r['collective_s']:10.4g} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:8.1f}% "
+            f"{'Y' if r['fits_hbm'] else 'N':>5s}")
+    return "\n".join(lines)

@@ -1,0 +1,166 @@
+"""Fault-tolerant checkpointing: atomic commits, async writes, rotation,
+auto-resume, and elastic (mesh-independent) restore.
+
+Layout per step:  <dir>/step_<N>/arrays.npz + meta.json, committed by
+writing to ``step_<N>.tmp`` and ``os.replace`` -- a crash mid-write leaves
+only a .tmp that restore ignores.  ``save_async`` snapshots to host memory
+synchronously (cheap) and writes on a background thread, so the train loop
+never blocks on disk.  Arrays are stored by tree-path key with the treedef
+recovered from a reference pytree at load, which makes restore independent
+of mesh/device layout: `restore` places leaves with whatever shardings the
+caller passes (elastic reshard = restore onto a different mesh).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+import ml_dtypes
+
+# numpy's npz cannot serialize bf16/fp8; store them as raw uint views with a
+# dtype tag and view back at load.
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+                "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+                "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _flatten_with_keys(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(jax.device_get(leaf))
+        name = arr.dtype.name if hasattr(arr.dtype, "name") else str(arr.dtype)
+        for tag, (real, view) in _VIEW_DTYPES.items():
+            if arr.dtype == real:
+                arr = arr.view(view)
+                dtypes[key] = tag
+                break
+        out[key] = arr
+    return out, dtypes
+
+
+def _unflatten_like(reference, arrays: Dict[str, np.ndarray],
+                    dtypes: Dict[str, str]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for path, ref_leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if key in dtypes:
+            arr = arr.view(_VIEW_DTYPES[dtypes[key]][0])
+        ref_shape = tuple(getattr(ref_leaf, "shape", ()))
+        if tuple(arr.shape) != ref_shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {ref_shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=1,
+                                           thread_name_prefix="ckpt")
+        self._pending: List[cf.Future] = []
+        self._lock = threading.Lock()
+
+    # -------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None
+             ) -> None:
+        arrays, dtypes = _flatten_with_keys(tree)
+        self._write(step, arrays, {**(extra_meta or {}), "dtypes": dtypes})
+
+    def save_async(self, step: int, tree: Any,
+                   extra_meta: Optional[dict] = None) -> None:
+        arrays, dtypes = _flatten_with_keys(tree)   # sync host snapshot
+        fut = self._pool.submit(self._write, step, arrays,
+                                {**(extra_meta or {}), "dtypes": dtypes})
+        with self._lock:
+            self._pending.append(fut)
+            self._pending = [f for f in self._pending if not f.done()]
+
+    def wait(self) -> None:
+        with self._lock:
+            pending = list(self._pending)
+        for f in pending:
+            f.result()
+
+    def _write(self, step: int, arrays: Dict[str, np.ndarray],
+               meta: dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:012d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in arrays.items()})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, **meta}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                 # atomic commit
+        self._rotate()
+
+    def _rotate(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:012d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, reference: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore onto host, then (optionally) place with `shardings` --
+        which may target a different mesh than the one that saved (elastic).
+        `reference` supplies the treedef + expected shapes (abstract ok)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:012d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        dtypes = self.meta(step).get("dtypes", {})
+        tree = _unflatten_like(reference, arrays, dtypes)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s) if s is not None
+                else jax.device_put(a), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree
+
+    def meta(self, step: Optional[int] = None) -> dict:
+        step = self.latest_step() if step is None else step
+        path = os.path.join(self.directory, f"step_{step:012d}", "meta.json")
+        with open(path) as f:
+            return json.load(f)

@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(name)`` returns the full-size ModelConfig; ``get_smoke_config``
+returns a reduced same-family config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from .base import ModelConfig
+
+ARCH_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "granite-8b": "granite_8b",
+    "gemma2-2b": "gemma2_2b",
+    "mistral-large-123b": "mistral_large_123b",
+    "musicgen-medium": "musicgen_medium",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "internvl2-26b": "internvl2_26b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    # the paper's own evaluation models
+    "llama2-7b": "llama2_7b",
+    "llama2-13b": "llama2_13b",
+    "opt-1.3b": "opt_1_3b",
+    "opt-30b": "opt_30b",
+}
+
+ASSIGNED_ARCHS: List[str] = list(ARCH_MODULES)[:10]
+PAPER_ARCHS: List[str] = list(ARCH_MODULES)[10:]
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        mod = importlib.import_module(f".{ARCH_MODULES[name]}", __package__)
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_MODULES)}"
+                       ) from None
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{ARCH_MODULES[name]}", __package__)
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in ARCH_MODULES}

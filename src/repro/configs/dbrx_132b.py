@@ -1,0 +1,34 @@
+"""DBRX-132B: fine-grained MoE, 16 experts top-4, GQA.
+[hf:databricks/dbrx-base; unverified]"""
+
+import dataclasses
+
+from .base import MoeConfig
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab=100352,
+    activation="silu",
+    gated_mlp=True,
+    moe=MoeConfig(n_experts=16, top_k=4, capacity_factor=1.25),
+    rope_theta=500_000.0,
+    shapes=FULL_ATTENTION_SHAPES,        # pure full attention -> no long_500k
+    grad_accum=16,
+    moe_token_chunks=8,
+    prefill_microbatch=4,
+    notes="fine-grained 16e top-4 MoE; HALO quantizes per-expert weights",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="dbrx-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=96, vocab=256,
+    moe=MoeConfig(n_experts=4, top_k=2, capacity_factor=4.0),
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,34 @@
+"""Falcon-Mamba-7B: pure Mamba-1 SSM stack (attention-free).
+[arXiv:2410.05355]
+
+Sub-quadratic: runs long_500k (decode state is O(1) in context length).
+HALO applies to in/x/dt/out projections; the selective-scan recurrence
+itself has no weight-stationary MAC matmul (DESIGN.md S3.2).
+"""
+
+import dataclasses
+
+from .base import LM_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,                     # attention-free, no separate MLP
+    vocab=65024,
+    block_pattern=("mamba",),
+    ssm_state=16,
+    ssm_expand=2,
+    conv_k=4,
+    pos_emb="none",
+    shapes=LM_SHAPES,
+    grad_accum=8,
+    notes="mamba1; d_inner=8192, dt_rank=256; chunked associative scan",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="falcon-mamba-smoke", n_layers=2, d_model=64,
+    ssm_state=8, vocab=256, grad_accum=1, scan_chunk=32, attn_chunk=64)

@@ -1,0 +1,42 @@
+"""Gemma-2-2B: local/global alternating attention, logit softcaps, tied
+embeddings. [arXiv:2408.00118]
+
+long_500k note (DESIGN.md S3.2): half the layers are 4k sliding-window (ring
+KV cache); global layers hold the full 500k cache, sharded along kv_seq, and
+decode is O(S) per step -- runnable, so this arch keeps all four shapes.
+"""
+
+import dataclasses
+
+from .base import LM_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256000,
+    block_pattern=("attn_local", "attn"),
+    local_window=4096,
+    activation="gelu",
+    gated_mlp=True,
+    norm_plus_one=True,
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+    tied_embeddings=True,
+    embed_scale=True,
+    rope_theta=10_000.0,
+    shapes=LM_SHAPES,
+    shard_heads=False,          # 8 heads cannot split 16-way TP
+    grad_accum=8,
+    notes="alternating local(4096)/global; softcaps; tied embeddings",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="gemma2-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, local_window=64,
+    grad_accum=1, attn_chunk=32, scan_chunk=32)

@@ -1,0 +1,28 @@
+"""Granite-8B-Code: llama-architecture dense code model. [arXiv:2405.04324]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=49152,
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=10_000_000.0,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=4,
+    notes="llama-arch; the ~100M-train example uses this family reduced",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="granite-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=192, vocab=256,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,35 @@
+"""InternVL2-26B: InternViT-6B vision frontend (stubbed) + InternLM2-20B
+language backbone. [arXiv:2404.16821]
+
+Backbone only: input_specs() provides precomputed patch/text embeddings
+(B, S, d_model); the decoder is the InternLM2-20B stack.
+"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=92553,                # padded to 92928 for 16-way TP
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=1_000_000.0,
+    embeds_input=True,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=16,
+    prefill_microbatch=2,
+    notes="VLM backbone; InternViT frontend stubbed to patch embeddings",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="internvl2-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=160, vocab=250,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

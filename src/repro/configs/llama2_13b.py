@@ -1,0 +1,26 @@
+"""LLaMA2-13B (paper's own evaluation model). [arXiv:2307.09288]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-13b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=128,
+    d_ff=13824,
+    vocab=32000,
+    activation="silu",
+    gated_mlp=True,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llama2-13b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=176, vocab=256,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

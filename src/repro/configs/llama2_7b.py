@@ -1,0 +1,26 @@
+"""LLaMA2-7B (paper's own evaluation model). [arXiv:2307.09288]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab=32000,
+    activation="silu",
+    gated_mlp=True,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llama2-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=176, vocab=256,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,34 @@
+"""Llama-4-Scout-17B-16E: MoE top-1, early fusion (text path modeled).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+
+import dataclasses
+
+from .base import MoeConfig
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    activation="silu",
+    gated_mlp=True,
+    moe=MoeConfig(n_experts=16, top_k=1, capacity_factor=2.0),
+    rope_theta=500_000.0,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=16,
+    moe_token_chunks=8,
+    prefill_microbatch=4,
+    notes="top-1 routed MoE (17B active); capacity factor 2.0 for top-1 skew",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llama4-scout-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    moe=MoeConfig(n_experts=4, top_k=1, capacity_factor=4.0),
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,30 @@
+"""Mistral-Large-123B (2407): dense GQA.
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    activation="silu",
+    gated_mlp=True,
+    rope_theta=1_000_000.0,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=32,
+    prefill_microbatch=4,
+    notes="deep dense stack; decode_32k KV cache dominates serve memory",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="mistral-large-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=160, vocab=256,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,38 @@
+"""MusicGen-medium: decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284]
+
+Backbone only: the EnCodec frontend is a stub -- input_specs() provides
+precomputed frame embeddings (B, S, d_model); the decoder predicts the next
+codec token over a 2048-entry codebook vocabulary.
+"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,              # MHA
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    activation="gelu",
+    gated_mlp=False,
+    norm_type="layernorm",
+    use_bias=True,
+    pos_emb="none",             # sinusoidal in the original; stub provides it
+    embeds_input=True,
+    shapes=FULL_ATTENTION_SHAPES,
+    shard_heads=True,           # 24 heads / 8-way ok; 16-way falls back
+    grad_accum=4,
+    notes="audio backbone; EnCodec frontend stubbed to frame embeddings",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="musicgen-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, vocab=128,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

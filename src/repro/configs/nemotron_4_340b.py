@@ -1,0 +1,29 @@
+"""Nemotron-4-340B: dense, GQA, squared-ReLU MLP. [arXiv:2402.16819]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab=256000,
+    activation="squared_relu",
+    gated_mlp=False,
+    rope_theta=10_000.0,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=64,
+    prefill_microbatch=8,              # 340B needs deep microbatching at 1M tokens
+    notes="largest assigned arch; exercises FSDP+TP memory limits",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="nemotron-smoke", n_layers=2, d_model=96, n_heads=4,
+    n_kv_heads=2, head_dim=24, d_ff=384, vocab=512,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

@@ -1,0 +1,31 @@
+"""OPT-30B (paper's own evaluation model). [arXiv:2205.01068]"""
+
+import dataclasses
+
+from .base import FULL_ATTENTION_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-30b",
+    family="dense",
+    n_layers=48,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=56,
+    head_dim=128,
+    d_ff=28672,
+    vocab=50272,
+    activation="relu",
+    gated_mlp=False,
+    norm_type="layernorm",
+    use_bias=True,
+    pos_emb="learned",
+    max_position=2048,
+    tied_embeddings=True,
+    shapes=FULL_ATTENTION_SHAPES,
+    grad_accum=8,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="opt-30b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=256, vocab=256, max_position=512,
+    grad_accum=1, attn_chunk=64, scan_chunk=32)

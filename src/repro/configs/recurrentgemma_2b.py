@@ -1,0 +1,42 @@
+"""RecurrentGemma-2B: RG-LRU + local attention, 1 attention per 2 recurrent
+blocks (Griffin). [arXiv:2402.19427]
+
+Sub-quadratic (hybrid): runs long_500k -- RG-LRU state is O(1); the local
+attention keeps a 2048-token ring KV cache.
+26 layers = 8 x (rec, rec, attn_local) + (rec, rec) remainder.
+"""
+
+import dataclasses
+
+from .base import LM_SHAPES, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,               # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab=256000,
+    block_pattern=("rec", "rec", "attn_local"),
+    local_window=2048,
+    d_rnn=2560,
+    conv_k=4,
+    activation="gelu",
+    gated_mlp=True,
+    norm_plus_one=True,
+    tied_embeddings=True,
+    embed_scale=True,
+    rope_theta=10_000.0,
+    shapes=LM_SHAPES,
+    shard_heads=False,          # 10 heads cannot split 16-way TP
+    grad_accum=4,
+    notes="Griffin 1:2 hybrid; per-type parameter stacks + scan over periods",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="recurrentgemma-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=1, head_dim=16, d_ff=128, vocab=256, d_rnn=64,
+    local_window=64, grad_accum=1, attn_chunk=32, scan_chunk=32)

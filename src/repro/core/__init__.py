@@ -1,0 +1,4 @@
+"""HALO core: the paper's contribution as a composable JAX library."""
+
+from . import apply, assign, codebooks, outliers, pareto, quantize, schedule, sensitivity, tiling  # noqa: F401
+from .quantize import HaloConfig, HaloQuantized, halo_quantize_tensor  # noqa: F401

@@ -1,0 +1,121 @@
+"""Quantize a whole model's parameter pytree with HALO (or leave some dense).
+
+Selection policy (paper SIV-A: "attention and linear layers"): every 2-D
+(or stacked 3-D/4-D, e.g. scan-over-layers or per-expert) matmul weight is
+quantized; embeddings, norm scales, biases, convs, and recurrence diagonals
+(Mamba A/dt, RG-LRU gates) stay dense.  Stacked leading axes (layers,
+experts) are quantized independently per slice -- each slice is its own
+matrix with its own tiles, classes, and sparse part, matching how the
+hardware sees them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import HaloConfig, HaloQuantized, halo_quantize_tensor
+
+# param path regexes excluded from quantization
+DEFAULT_EXCLUDE = (
+    r".*norm.*", r".*scale.*", r".*bias.*", r".*embed.*", r".*pos_emb.*",
+    r".*A_log.*", r".*dt_.*", r".*conv.*", r".*rglru.*gate.*", r".*lambda.*",
+)
+
+
+def default_should_quantize(path: str, x: jnp.ndarray,
+                            quantize_lm_head: bool = False) -> bool:
+    if x.ndim < 2 or x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+        return False
+    if not quantize_lm_head and re.search(r".*(lm_head|output_proj_vocab).*", path):
+        return False
+    for pat in DEFAULT_EXCLUDE:
+        if re.fullmatch(pat, path):
+            return False
+    # must look like a matmul weight: last two dims both >= one tile? no --
+    # small eval models use small dims; require both >= 8 to skip vectors.
+    return x.shape[-1] >= 8 and x.shape[-2] >= 8
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_params(params: Any,
+                    fisher: Optional[Any] = None,
+                    cfg: HaloConfig = HaloConfig(),
+                    theta: Optional[float] = None,
+                    should_quantize: Optional[Callable] = None) -> Any:
+    """Return a pytree where selected weights are HaloQuantized.
+
+    Leaves with >2 dims are quantized per leading-axis slice (layers stacked
+    by scan, experts, etc.), preserving the stacked structure via vmap-free
+    explicit slicing (quantization is offline; clarity > speed here).
+    """
+    sq = should_quantize or default_should_quantize
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    fisher_flat = None
+    if fisher is not None:
+        fisher_flat = [f for _, f in jax.tree_util.tree_flatten_with_path(fisher)[0]]
+
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        pstr = _path_str(path)
+        g2 = fisher_flat[i] if fisher_flat is not None else None
+        if not sq(pstr, leaf):
+            out.append(leaf)
+            continue
+        out.append(_quantize_leaf(leaf, g2, cfg, theta))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _quantize_leaf(leaf: jnp.ndarray, g2, cfg: HaloConfig, theta) -> Any:
+    if leaf.ndim == 2:
+        return halo_quantize_tensor(leaf, g2, cfg, theta=theta)
+    # stacked: quantize each slice of the leading axes independently
+    lead = leaf.shape[:-2]
+    flat_lead = int(jnp.prod(jnp.asarray(lead)))
+    w2 = leaf.reshape((flat_lead,) + leaf.shape[-2:])
+    g22 = g2.reshape((flat_lead,) + leaf.shape[-2:]) if g2 is not None else None
+    slices = [halo_quantize_tensor(w2[j], None if g22 is None else g22[j],
+                                   cfg, theta=theta)
+              for j in range(flat_lead)]
+    return StackedHalo(slices=tuple(slices), lead_shape=lead)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StackedHalo:
+    """Independently quantized slices of a stacked (L..., K, N) weight."""
+
+    slices: Tuple[HaloQuantized, ...]
+    lead_shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True),
+                                                    default=())
+
+    def dequantize(self) -> jnp.ndarray:
+        mats = jnp.stack([s.dequantize() for s in self.slices])
+        return mats.reshape(self.lead_shape + mats.shape[-2:])
+
+
+def dequantize_params(qparams: Any, dtype=jnp.float32) -> Any:
+    """Replace HaloQuantized/StackedHalo leaves with dense arrays."""
+
+    def deq(x):
+        if isinstance(x, (HaloQuantized, StackedHalo)):
+            return x.dequantize().astype(dtype)
+        return x
+
+    return jax.tree.map(deq, qparams,
+                        is_leaf=lambda x: isinstance(x, (HaloQuantized, StackedHalo)))

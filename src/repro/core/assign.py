@@ -1,0 +1,52 @@
+"""Tile sensitivity mapping: the adaptive low/high-sensitivity split (SIII-B).
+
+Per layer, tiles are ranked by their Fisher score.  Low-sensitivity tiles are
+the largest prefix of the *ascending* ranking whose cumulative score stays
+within ``1 - theta`` of the layer's total sensitivity -- i.e. the classes
+retain at least ``theta`` (default 95%) of the layer's sensitivity mass at
+high precision.  ``k`` (the low-sensitive fraction) therefore adapts to each
+layer's sensitivity skew instead of using a fixed per-layer threshold.
+
+Class semantics (paper SIII-C2):
+  low-sensitivity  -> F3 codebook (9 values),  3.7 GHz tiles
+  high-sensitivity -> F2 codebook (16 values), 2.4 GHz tiles
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .codebooks import TILE_CLASS_F2, TILE_CLASS_F3
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignResult:
+    classes: jnp.ndarray   # (n_tiles,) int8 in {TILE_CLASS_F2, TILE_CLASS_F3}
+    k: float               # realized low-sensitive fraction
+    theta: float           # sensitivity retention target used
+
+
+def compute_adaptive_k(scores: jnp.ndarray, theta: float) -> Tuple[jnp.ndarray, float]:
+    """Boolean low-sensitivity mask + realized fraction k.
+
+    scores: (n_tiles,) per-tile Fisher scores (Eq. 2).
+    """
+    total = scores.sum()
+    order = jnp.argsort(scores)                    # ascending
+    csum = jnp.cumsum(scores[order])
+    budget = (1.0 - theta) * total
+    n_low = jnp.sum(csum <= budget + 1e-30)        # largest prefix within budget
+    low_sorted = jnp.arange(scores.shape[0]) < n_low
+    low_mask = jnp.zeros_like(low_sorted).at[order].set(low_sorted)
+    k = n_low / max(scores.shape[0], 1)
+    return low_mask, k
+
+
+def assign_classes(scores: jnp.ndarray, theta: float = 0.95) -> AssignResult:
+    """Map per-tile scores to frequency classes for one layer."""
+    low_mask, k = compute_adaptive_k(scores, theta)
+    classes = jnp.where(low_mask, TILE_CLASS_F3, TILE_CLASS_F2).astype(jnp.int8)
+    return AssignResult(classes=classes, k=float(k), theta=theta)

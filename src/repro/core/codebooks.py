@@ -1,0 +1,72 @@
+"""Frequency-class codebooks derived from the MAC timing model.
+
+HALO's non-uniform quantizer maps tile weights onto *codebooks of low
+critical-path-delay values* (paper SIII-B).  From ``hw.mac_model``:
+
+  F3 (3.7 GHz, 9 values):  {0, +-1, +-2, +-4, +-8}
+  F2 (2.4 GHz, 16 values): F3  +  {+-16, +-32, +-64, -128}
+
+Both books live in one shared 16-entry ascending table; the F3 subset is the
+contiguous index range [F3_LO, F3_HI].  A tile's class therefore constrains
+only which *indices* the assignment may use -- deployment keeps a single
+16-entry LUT and uses the class purely for DVFS/grid scheduling, and every
+stored index fits in 4 bits regardless of class.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+from ..hw import mac_model
+
+TILE_CLASS_F1, TILE_CLASS_F2, TILE_CLASS_F3 = 0, 1, 2
+CLASS_NAMES = {TILE_CLASS_F1: "F1", TILE_CLASS_F2: "F2", TILE_CLASS_F3: "F3"}
+CLASS_FREQ_GHZ = {TILE_CLASS_F1: mac_model.F1_GHZ,
+                  TILE_CLASS_F2: mac_model.F2_GHZ,
+                  TILE_CLASS_F3: mac_model.F3_GHZ}
+
+
+@functools.lru_cache(maxsize=None)
+def shared_table() -> np.ndarray:
+    """(16,) int32 ascending: the F2 codebook; F3 is a contiguous slice."""
+    classes = mac_model.frequency_classes()
+    table = np.sort(classes["F2"]).astype(np.int32)
+    assert table.size == 16
+    return table
+
+
+@functools.lru_cache(maxsize=None)
+def f3_index_range() -> Tuple[int, int]:
+    """[lo, hi] inclusive index range of F3 values inside the shared table."""
+    table = shared_table()
+    f3 = set(int(v) for v in mac_model.frequency_classes()["F3"])
+    idx = [i for i, v in enumerate(table) if int(v) in f3]
+    lo, hi = min(idx), max(idx)
+    assert idx == list(range(lo, hi + 1)), "F3 must be contiguous in the table"
+    assert hi - lo + 1 == 9
+    return lo, hi
+
+
+def class_codebook(cls: int) -> np.ndarray:
+    """Codebook values available to a tile of frequency class `cls`."""
+    table = shared_table()
+    if cls == TILE_CLASS_F3:
+        lo, hi = f3_index_range()
+        return table[lo:hi + 1]
+    if cls == TILE_CLASS_F2:
+        return table
+    if cls == TILE_CLASS_F1:
+        return mac_model.WEIGHT_VALUES.copy()
+    raise ValueError(cls)
+
+
+def effective_bits(cls: int) -> float:
+    """Stored bits per weight for a tile of this class (index width)."""
+    return float(np.log2(class_codebook(cls).size))
+
+
+def class_max_freq_ghz(cls: int) -> float:
+    return CLASS_FREQ_GHZ[cls]

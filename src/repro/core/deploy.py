@@ -1,0 +1,111 @@
+"""Deployment-format HALO weights for serving (4-bit packed, XLA path).
+
+For the multi-pod dry-run we cannot compile Pallas kernels on the CPU
+backend, so the serving path also has a pure-XLA dequant: weights stored as
+packed 4-bit codebook indices (two per uint8 byte) + per-tile-column fp32
+scales, decoded arithmetically (the codebook is sign*2^k, so index->value is
++-exp2 -- no gather) and fed to the MXU.  HBM sees the 4-bit tensor, so the
+dry-run's memory/collective terms reflect the paper's deployment: weight
+read traffic /4 vs bf16.  On real TPU the Pallas `halo_matmul` kernel
+replaces dequant+dot (kernels/halo_matmul.py; same layout).
+
+The sparse outlier stream is <0.5% of weights; serving folds it with
+kernels/spmv.py -- the dry-run's deploy path omits it (sub-1% traffic,
+noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.module import ParamSpec, tree_map_specs
+from . import codebooks, tiling
+from .quantize import HaloQuantized
+
+TILE = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeployQuantWeight:
+    """4-bit-packed HALO weight (possibly layer-stacked)."""
+
+    idx_packed: jnp.ndarray   # (..., K, N//2) uint8
+    scale: jnp.ndarray        # (..., kt, nt, TILE) f32 per-tile-column
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True),
+                                               default=())
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        lo = self.idx_packed & jnp.uint8(0xF)
+        hi = self.idx_packed >> jnp.uint8(4)
+        idx = jnp.stack([lo, hi], axis=-1).reshape(
+            self.idx_packed.shape[:-1] + (self.idx_packed.shape[-1] * 2,))
+        idxf = idx.astype(jnp.float32)
+        val = jnp.where(idx < 8, -jnp.exp2(7.0 - idxf),
+                        jnp.where(idx == 8, 0.0, jnp.exp2(idxf - 9.0)))
+        kp, npk = val.shape[-2], val.shape[-1]
+        kt, nt = kp // TILE, npk // TILE
+        lead = val.shape[:-2]
+        sc = self.scale
+        v = val.reshape(lead + (kt, TILE, nt, TILE))
+        v = v * sc[..., :, None, :, :]
+        w = v.reshape(lead + (kp, npk))
+        k, n = self.shape[-2], self.shape[-1]
+        return w[..., :k, :n].astype(dtype)
+
+
+def deploy_spec_of(spec: ParamSpec) -> Any:
+    """ParamSpec of a matmul weight -> DeployQuantWeight of ParamSpecs.
+
+    The scale tensor is laid out (kt, nt, TILE) carrying the weight's own
+    logical axes on (kt, nt), so TP sharding of the weight shards its
+    scales identically (no replicated multi-GiB scale arrays)."""
+    *lead, k, n = spec.shape
+    kp, npk = tiling.padded_dims(k, n, TILE)
+    kt, nt = kp // TILE, npk // TILE
+    lead_axes = spec.logical_axes[:-2]
+    return DeployQuantWeight(
+        idx_packed=ParamSpec(tuple(lead) + (kp, npk // 2),
+                             lead_axes + spec.logical_axes[-2:],
+                             jnp.uint8, "zeros"),
+        scale=ParamSpec(tuple(lead) + (kt, nt, TILE),
+                        lead_axes + spec.logical_axes[-2:] + (None,),
+                        jnp.float32, "ones"),
+        shape=tuple(spec.shape))
+
+
+def deploy_model_specs(specs: Any, should_quantize=None) -> Any:
+    """Replace quantizable matmul ParamSpecs with DeployQuantWeight specs."""
+    from .apply import _path_str, default_should_quantize
+    sq = should_quantize or default_should_quantize
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        fake = jnp.zeros((2, 2), jnp.float32) if leaf.shape[-1:] else None
+        looks = (isinstance(leaf, ParamSpec) and len(leaf.shape) >= 2
+                 and leaf.shape[-1] >= TILE and leaf.shape[-2] >= TILE
+                 and leaf.dtype in (jnp.float32, jnp.bfloat16))
+        if looks and sq(pstr, jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)):
+            out.append(deploy_spec_of(leaf))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pack_from_quantized(hq: HaloQuantized) -> DeployQuantWeight:
+    """Runtime packing of a quantized 2-D tensor (for real serving)."""
+    from ..kernels.ops import pack_halo
+    packed = pack_halo(hq)
+    kp, npk = packed.padded_shape
+    kt, nt = kp // TILE, npk // TILE
+    return DeployQuantWeight(idx_packed=packed.idx_packed,
+                             scale=packed.scale.reshape(kt, nt, TILE),
+                             shape=tuple(hq.shape))

@@ -1,0 +1,112 @@
+"""Outlier & salient-weight extraction and hypersparse packaging (SIII-A/C1).
+
+Outliers: values beyond 3 sigma of the tensor's weight distribution (3-sigma
+rule / IQR-style extreme-value handling).  Salient: top `salient_frac`
+(default 0.05%) by diagonal-Fisher score among the remaining values.
+Together <0.5% of weights; they are removed from the dense matrix (zeroed),
+uniformly quantized to 8 bits with per-output-channel scales, and stored as a
+COO ``(row, col, val_int8)`` triple for the SpMV engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseWeights:
+    """Hypersparse per-channel-int8 weights of one (K, N) matrix."""
+
+    row: jnp.ndarray        # (nnz,) int32 -- K index
+    col: jnp.ndarray        # (nnz,) int32 -- N index
+    val: jnp.ndarray        # (nnz,) int8
+    chan_scale: jnp.ndarray  # (N,) float32 per-output-channel scale
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True),
+                                               default=(0, 0))
+
+    @property
+    def nnz(self) -> int:
+        return int(self.row.shape[0])
+
+    def to_dense(self) -> jnp.ndarray:
+        dense = jnp.zeros(self.shape, jnp.float32)
+        vals = self.val.astype(jnp.float32) * self.chan_scale[self.col]
+        return dense.at[self.row, self.col].add(vals)
+
+    def matmul(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x @ W_sparse for x (..., K) -> (..., N); pure-JAX SpMV reference."""
+        contrib = x[..., self.row] * (self.val.astype(x.dtype)
+                                      * self.chan_scale.astype(x.dtype)[self.col])
+        n = self.shape[1]
+        return jax.ops.segment_sum(contrib.swapaxes(-1, 0), self.col,
+                                   num_segments=n).swapaxes(-1, 0) \
+            if contrib.ndim > 1 else jax.ops.segment_sum(contrib, self.col, n)
+
+
+def outlier_mask(w: jnp.ndarray, n_sigma: float = 3.0) -> jnp.ndarray:
+    """Paper: values beyond n_sigma std-devs of the mean are outliers."""
+    mu, sd = w.mean(), w.std()
+    return jnp.abs(w - mu) > n_sigma * sd
+
+
+def salient_mask(scores: jnp.ndarray, frac: float = 0.0005,
+                 exclude: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Top-`frac` weights by Fisher score, excluding already-extracted ones."""
+    s = jnp.where(exclude, -jnp.inf, scores) if exclude is not None else scores
+    k = max(int(round(frac * s.size)), 1)
+    thresh = jax.lax.top_k(s.reshape(-1), k)[0][-1]
+    m = s >= thresh
+    if exclude is not None:
+        m = m & ~exclude
+    return m
+
+
+def extract_sparse(w: jnp.ndarray, mask: jnp.ndarray,
+                   max_nnz: Optional[int] = None) -> Tuple[jnp.ndarray, SparseWeights]:
+    """Split `w` into (dense remainder, SparseWeights of masked entries).
+
+    `max_nnz` fixes the buffer size for jit-stability; defaults to the exact
+    count (host-computed, so call outside jit or pass it explicitly).
+    """
+    k, n = w.shape
+    flat_mask = mask.reshape(-1)
+    if max_nnz is None:
+        max_nnz = int(jax.device_get(flat_mask.sum()))
+    nnz_idx = jnp.nonzero(flat_mask, size=max_nnz, fill_value=k * n)[0]
+    valid = nnz_idx < k * n
+    row = jnp.where(valid, nnz_idx // n, 0).astype(jnp.int32)
+    col = jnp.where(valid, nnz_idx % n, 0).astype(jnp.int32)
+    vals_f = jnp.where(valid, w.reshape(-1)[jnp.clip(nnz_idx, 0, k * n - 1)], 0.0)
+
+    # per-output-channel 8-bit scales over the extracted values
+    absmax = jnp.zeros((n,), w.dtype).at[col].max(jnp.abs(vals_f))
+    chan_scale = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    val = jnp.clip(jnp.round(vals_f / chan_scale[col]), -128, 127).astype(jnp.int8)
+
+    dense = jnp.where(mask, 0.0, w)
+    sp = SparseWeights(row=row, col=col, val=val, chan_scale=chan_scale,
+                       shape=(k, n))
+    return dense, sp
+
+
+def split_salient_and_outliers(
+    w: jnp.ndarray,
+    fisher_g2: Optional[jnp.ndarray],
+    n_sigma: float = 3.0,
+    salient_frac: float = 0.0005,
+    max_nnz: Optional[int] = None,
+) -> Tuple[jnp.ndarray, SparseWeights, jnp.ndarray]:
+    """Alg. 1 lines 1-3.  Returns (dense remainder, sparse part, mask)."""
+    out_m = outlier_mask(w, n_sigma)
+    if fisher_g2 is not None and salient_frac > 0:
+        sal_m = salient_mask(fisher_g2, salient_frac, exclude=out_m)
+        mask = out_m | sal_m
+    else:
+        mask = out_m
+    dense, sparse = extract_sparse(w, mask, max_nnz=max_nnz)
+    return dense, sparse, mask

@@ -1,0 +1,124 @@
+"""Adaptive quantization + DVFS optimization (paper SIII-C / Fig. 1).
+
+HALO exposes user-defined design goals; the feedback optimizer constrains
+the number of tiles allocated to each DVFS level by tuning the sensitivity
+retention ``theta`` until the model meets the goal.  We expose the paper's
+three named variants plus a generic target-driven search:
+
+  perf-opt : minimize latency -- small theta, nearly all tiles in F3
+  acc-opt  : minimize quantization error -- large theta, most tiles in F2
+  bal      : knee of the (latency, error) curve
+
+The latency estimate comes from the systolic simulator; the error proxy is
+the Fisher-weighted quantization MSE  sum_tiles Lambda_T * ||W - Q(W)||^2,
+which tracks the loss perturbation to second order (same approximation the
+sensitivity analysis itself uses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..hw import systolic
+from . import assign, codebooks
+from .quantize import HaloConfig, HaloQuantized, halo_quantize_tensor
+
+VARIANT_THETA = {"perf-opt": 0.60, "bal": 0.95, "acc-opt": 0.995}
+
+
+@dataclasses.dataclass
+class ParetoPoint:
+    theta: float
+    f3_fraction: float
+    effective_bits: float
+    error_proxy: float          # Fisher-weighted quant MSE
+    est_speedup_vs_f1: float    # compute-bound speedup from class mix
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def _class_mix_speedup(f3_frac: float) -> float:
+    """Compute-time speedup vs. running everything at the F1 clock."""
+    f2_frac = 1.0 - f3_frac
+    t = f3_frac / codebooks.CLASS_FREQ_GHZ[2] + f2_frac / codebooks.CLASS_FREQ_GHZ[1]
+    return (1.0 / codebooks.CLASS_FREQ_GHZ[0]) / t
+
+
+def sweep_theta(weights: Dict[str, jnp.ndarray],
+                fisher: Dict[str, jnp.ndarray],
+                cfg: HaloConfig = HaloConfig(),
+                thetas: Sequence[float] = (0.5, 0.7, 0.85, 0.95, 0.99, 0.999),
+                ) -> List[ParetoPoint]:
+    """Quantize the model at several theta values and report the frontier."""
+    from .quantize import effective_bits, quant_error  # local to avoid cycle
+    points = []
+    for theta in thetas:
+        err, bits_num, bits_den, f3_tiles, n_tiles = 0.0, 0.0, 0.0, 0, 0
+        for name, w in weights.items():
+            hq = halo_quantize_tensor(w, fisher.get(name), cfg, theta=theta)
+            g2 = fisher.get(name)
+            lam = 1.0 if g2 is None else float(jnp.mean(g2))
+            diff = hq.dequantize() - w.astype(jnp.float32)
+            err += lam * float(jnp.sum(diff * diff))
+            bits_num += effective_bits(hq) * w.size
+            bits_den += w.size
+            f3_tiles += int((np.asarray(hq.classes) == codebooks.TILE_CLASS_F3).sum())
+            n_tiles += hq.n_tiles
+        f3f = f3_tiles / max(n_tiles, 1)
+        points.append(ParetoPoint(
+            theta=theta, f3_fraction=f3f,
+            effective_bits=bits_num / max(bits_den, 1),
+            error_proxy=err,
+            est_speedup_vs_f1=_class_mix_speedup(f3f)))
+    return points
+
+
+def knee_point(points: Sequence[ParetoPoint]) -> ParetoPoint:
+    """Max perpendicular distance from the (speedup, -error) chord -- the
+    paper's Fig. 9 'knee' selection."""
+    xs = np.array([p.est_speedup_vs_f1 for p in points])
+    ys = np.array([np.log10(p.error_proxy + 1e-30) for p in points])
+    x0, y0, x1, y1 = xs[0], ys[0], xs[-1], ys[-1]
+    denom = np.hypot(x1 - x0, y1 - y0) + 1e-12
+    d = np.abs((y1 - y0) * xs - (x1 - x0) * ys + x1 * y0 - y1 * x0) / denom
+    return points[int(np.argmax(d))]
+
+
+def theta_for_target_bits(weights: Dict[str, jnp.ndarray],
+                          fisher: Dict[str, jnp.ndarray],
+                          target_bits: float,
+                          cfg: HaloConfig = HaloConfig(),
+                          iters: int = 8) -> float:
+    """Feedback loop: bisect theta so B_eff hits `target_bits` (3.17..4)."""
+    from .quantize import effective_bits
+    lo, hi = 0.0, 1.0
+
+    def bits_at(theta: float) -> float:
+        num = den = 0.0
+        for name, w in weights.items():
+            hq = halo_quantize_tensor(w, fisher.get(name), cfg, theta=theta)
+            num += effective_bits(hq) * w.size
+            den += w.size
+        return num / max(den, 1)
+
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if bits_at(mid) > target_bits:
+            hi = mid       # too many F2 tiles -> lower retention
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+def variant_theta(variant: str) -> float:
+    try:
+        return VARIANT_THETA[variant]
+    except KeyError:
+        raise KeyError(f"unknown HALO variant {variant!r}; "
+                       f"options: {sorted(VARIANT_THETA)}") from None

@@ -1,0 +1,207 @@
+"""HALO Algorithm 1: critical-path-delay-aware non-uniform quantization.
+
+Per weight matrix ``W (K, N)``:
+
+  1. extract salient (top Fisher) + outlier (3 sigma) weights -> hypersparse
+     per-channel-int8 part (lines 1-3),
+  2. reshape the remainder into ``t x t`` tiles (line 4),
+  3. per-tile Fisher scores -> adaptive low/high-sensitivity classes (5-6),
+  4. quantize each tile onto its class codebook (F3: 9 values, F2: 16 values;
+     both are sign*2^k "low critical-path" sets) with an MSE-optimal per-tile
+     scale found by line search (7-9),
+  5. emit ``HaloQuantized``: 4-bit codebook indices + per-tile fp scale +
+     per-tile frequency class + the sparse part (10).
+
+The class only *restricts the index range* used by a tile -- all indices live
+in one shared 16-entry table, so deployment keeps a single LUT and uses the
+class purely for DVFS scheduling (``core.schedule``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import assign, codebooks, outliers, sensitivity, tiling
+from .outliers import SparseWeights
+
+DEFAULT_TILE = 128
+DEFAULT_THETA = 0.95
+SCALE_GRID = np.geomspace(0.12, 1.15, 32).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloConfig:
+    tile: int = DEFAULT_TILE
+    theta: float = DEFAULT_THETA          # sensitivity retention (SIII-B)
+    n_sigma: float = 3.0                  # outlier rule (paper: 3-sigma)
+    salient_frac: float = 0.0005          # top 0.05% by Fisher
+    scale_grid: Tuple[float, ...] = tuple(float(x) for x in SCALE_GRID)
+    # "column": one fp scale per tile column (the paper leaves scale
+    # granularity unspecified; per-column is measurably more accurate and
+    # costs one VPU broadcast in the kernel).  "tile": single scalar.
+    scale_granularity: str = "column"
+    fisher_weighted_scale: bool = False   # beyond-paper: Fisher-weighted MSE
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HaloQuantized:
+    """One quantized (K, N) weight matrix in HALO format."""
+
+    idx: jnp.ndarray       # (n_tiles, t, t) uint8 -- index into shared table
+    scale: jnp.ndarray     # (n_tiles,) or (n_tiles, t) fp32 scales
+    classes: jnp.ndarray   # (n_tiles,) int8 -- TILE_CLASS_F2 / F3
+    sparse: SparseWeights  # outlier + salient part
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True),
+                                               default=(0, 0))
+    tile: int = dataclasses.field(metadata=dict(static=True), default=DEFAULT_TILE)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.idx.shape[0])
+
+    def scale_per_column(self) -> jnp.ndarray:
+        """(n_tiles, t) view regardless of stored granularity."""
+        if self.scale.ndim == 2:
+            return self.scale
+        return jnp.broadcast_to(self.scale[:, None],
+                                (self.n_tiles, self.tile))
+
+    def dense_part(self) -> jnp.ndarray:
+        table = jnp.asarray(codebooks.shared_table(), jnp.float32)
+        tiles = table[self.idx] * self.scale_per_column()[:, None, :]
+        return tiling.from_tiles(tiles, self.shape, self.tile)
+
+    def dequantize(self) -> jnp.ndarray:
+        return self.dense_part() + self.sparse.to_dense()
+
+
+def _nearest_idx(w_over_s: jnp.ndarray, lo: int, hi: int) -> jnp.ndarray:
+    """Nearest-codebook index within table[lo:hi+1], returned in global index
+    space.  Uses midpoint thresholds (codebook ascending)."""
+    table = jnp.asarray(codebooks.shared_table(), jnp.float32)[lo:hi + 1]
+    mids = (table[1:] + table[:-1]) / 2.0
+    return (jnp.searchsorted(mids, w_over_s) + lo).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def quantize_tiles(tiles: jnp.ndarray, classes: jnp.ndarray,
+                   cfg: HaloConfig,
+                   fisher_tiles: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assign codebook indices + scales.  tiles: (n, t, t).
+
+    Returns scale (n,) for tile granularity or (n, t) for column
+    granularity (one scale per tile column, i.e. per output channel slice).
+    """
+    n, t, _ = tiles.shape
+    per_col = cfg.scale_granularity == "column"
+    w = tiles.astype(jnp.float32)                      # (n, t, t)
+    fw = None
+    if cfg.fisher_weighted_scale and fisher_tiles is not None:
+        fw = fisher_tiles.astype(jnp.float32)
+        fw = fw / (fw.mean(axis=(1, 2), keepdims=True) + 1e-30)
+
+    table = jnp.asarray(codebooks.shared_table(), jnp.float32)
+    f3_lo, f3_hi = codebooks.f3_index_range()
+    # scale anchors use the *symmetric* magnitude ceiling (64 for F2): the
+    # lone -128 entry is a bonus level, not the coverage bound -- anchoring
+    # on 128 would clip positive tails at 0.55*absmax.  With cmax_f2 = 8 *
+    # cmax_f3 and a shared relative grid, every F3-achievable scale has an
+    # F2 counterpart with strictly denser levels, so F2 error <= F3 error.
+    cmax_f2 = 64.0
+    cmax_f3 = float(np.abs(codebooks.class_codebook(2)).max())       # 8
+    is_f3 = classes == codebooks.TILE_CLASS_F3                       # (n,)
+
+    if per_col:
+        absmax = jnp.abs(w).max(axis=1) + 1e-12                      # (n, t)
+        base = jnp.where(is_f3[:, None], absmax / cmax_f3,
+                         absmax / cmax_f2)                           # (n, t)
+        sel = is_f3[:, None, None]
+    else:
+        absmax = jnp.abs(w).max(axis=(1, 2), keepdims=False) + 1e-12  # (n,)
+        base = jnp.where(is_f3, absmax / cmax_f3, absmax / cmax_f2)
+        sel = is_f3[:, None, None]
+
+    grid = jnp.asarray(cfg.scale_grid, jnp.float32)
+
+    def eval_candidate(r):
+        s = base * r                       # (n, t) or (n,)
+        s3 = s[:, None, :] if per_col else s[:, None, None]
+        ws = w / s3
+        idx3 = _nearest_idx(ws, f3_lo, f3_hi)
+        idx2 = _nearest_idx(ws, 0, 15)
+        idx = jnp.where(sel, idx3, idx2)
+        err = (table[idx] * s3 - w) ** 2
+        if fw is not None:
+            err = err * fw
+        # reduce over rows only (per-column search) or the whole tile
+        red = err.sum(axis=1) if per_col else err.sum(axis=(1, 2))
+        return red, idx
+
+    errs, idxs = jax.lax.map(eval_candidate, grid)
+    best = jnp.argmin(errs, axis=0)        # (n, t) or (n,)
+    if per_col:
+        idx = jnp.take_along_axis(idxs, best[None, :, None, :], axis=0)[0]
+        scale = (base * grid[best]).astype(jnp.float32)       # (n, t)
+    else:
+        idx = jnp.take_along_axis(idxs, best[None, :, None, None], axis=0)[0]
+        scale = (base * grid[best]).astype(jnp.float32)       # (n,)
+    return idx.astype(jnp.uint8), scale
+
+
+def halo_quantize_tensor(w: jnp.ndarray,
+                         fisher_g2: Optional[jnp.ndarray],
+                         cfg: HaloConfig = HaloConfig(),
+                         theta: Optional[float] = None) -> HaloQuantized:
+    """Full Algorithm 1 for one (K, N) matrix."""
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got {w.shape}")
+    theta = cfg.theta if theta is None else theta
+    w = w.astype(jnp.float32)
+
+    dense, sparse, _ = outliers.split_salient_and_outliers(
+        w, fisher_g2, n_sigma=cfg.n_sigma, salient_frac=cfg.salient_frac)
+
+    tiles = tiling.to_tiles(dense, cfg.tile)
+    if fisher_g2 is not None:
+        scores = sensitivity.tile_scores(fisher_g2, cfg.tile)
+        fisher_tiles = tiling.to_tiles(fisher_g2, cfg.tile)
+    else:  # fall back to magnitude-based scores (calibration-free mode)
+        scores = tiling.to_tiles(w * w, cfg.tile).mean(axis=(1, 2))
+        fisher_tiles = None
+    res = assign.assign_classes(scores, theta)
+
+    idx, scale = quantize_tiles(tiles, res.classes, cfg, fisher_tiles)
+    return HaloQuantized(idx=idx, scale=scale, classes=res.classes,
+                         sparse=sparse, shape=tuple(w.shape), tile=cfg.tile)
+
+
+def effective_bits(hq: HaloQuantized) -> float:
+    """Paper SIV-B: B_eff = sum_i P_i * b_i over the weight population."""
+    n_total = hq.shape[0] * hq.shape[1]
+    t2 = hq.tile * hq.tile
+    classes = np.asarray(jax.device_get(hq.classes))
+    n_f3 = int((classes == codebooks.TILE_CLASS_F3).sum()) * t2
+    n_f2 = int((classes == codebooks.TILE_CLASS_F2).sum()) * t2
+    # padded tiles overcount; renormalize the class mix onto the true count
+    dense_total = min(n_f3 + n_f2, n_total)
+    frac = dense_total / (n_f3 + n_f2)
+    n_f3, n_f2 = n_f3 * frac, n_f2 * frac
+    nnz = hq.sparse.nnz
+    bits = (n_f3 * np.log2(9) + n_f2 * 4.0 + nnz * 8.0)
+    # fp16 scale overhead (per tile or per tile-column)
+    bits += float(np.prod(hq.scale.shape)) * 16.0
+    return float(bits / n_total)
+
+
+def quant_error(hq: HaloQuantized, w: jnp.ndarray) -> float:
+    """Relative Frobenius reconstruction error."""
+    diff = hq.dequantize() - w.astype(jnp.float32)
+    return float(jnp.linalg.norm(diff) / (jnp.linalg.norm(w) + 1e-12))

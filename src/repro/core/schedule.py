@@ -1,0 +1,106 @@
+"""DVFS transition scheduling across a quantized model (paper SIII-C3).
+
+Tiles sharing a frequency class are clustered into contiguous execution
+groups; each class is entered once per layer (or once per model with
+cross-layer grouping), so reconfiguration cost is amortized over the group.
+The schedule is purely an execution *order* -- quantization decided offline
+fixes each tile's class, and reordering independent weight tiles cannot
+change results (outputs accumulate per output-tile; ordering of K-tiles only
+reorders a sum).
+
+`DvfsSchedule` is what a deployment consumes: per-class tile index lists, the
+operating point per class, and the transition count/overhead estimate.  The
+Pallas `halo_matmul` kernel realizes the same idea on TPU by iterating its
+grid class-major (see kernels/halo_matmul.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from ..hw import mac_model
+from ..hw.dvfs import SYSTOLIC_DOMAIN, DvfsDomain, OperatingPoint
+from . import codebooks
+from .quantize import HaloQuantized
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassGroup:
+    class_id: int
+    point: OperatingPoint
+    tile_indices: np.ndarray       # flat tile ids executed in this group
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_indices.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class DvfsSchedule:
+    groups: Tuple[ClassGroup, ...]   # slowest class first ("ramp up")
+    num_transitions: int
+    transition_time_s: float
+
+    def execution_order(self) -> np.ndarray:
+        return np.concatenate([g.tile_indices for g in self.groups])
+
+    def class_fractions(self) -> Dict[str, float]:
+        total = sum(g.n_tiles for g in self.groups)
+        return {codebooks.CLASS_NAMES[g.class_id]: g.n_tiles / max(total, 1)
+                for g in self.groups}
+
+
+def schedule_tensor(hq: HaloQuantized,
+                    domain: DvfsDomain = SYSTOLIC_DOMAIN) -> DvfsSchedule:
+    """Schedule one quantized tensor's tiles."""
+    classes = np.asarray(hq.classes)
+    return schedule_classes(classes, domain)
+
+
+def schedule_classes(classes: np.ndarray,
+                     domain: DvfsDomain = SYSTOLIC_DOMAIN) -> DvfsSchedule:
+    classes = np.asarray(classes)
+    groups: List[ClassGroup] = []
+    for cls in sorted(np.unique(classes)):          # slow class first
+        crit_ns = 1.0 / codebooks.CLASS_FREQ_GHZ[int(cls)]
+        point = domain.fastest_point_for_delay(crit_ns)
+        idx = np.nonzero(classes == cls)[0]
+        groups.append(ClassGroup(int(cls), point, idx))
+    n_trans = max(len(groups) - 1, 0)
+    return DvfsSchedule(groups=tuple(groups), num_transitions=n_trans,
+                        transition_time_s=n_trans * domain.transition_time_s)
+
+
+def schedule_model(quantized: Dict[str, HaloQuantized],
+                   domain: DvfsDomain = SYSTOLIC_DOMAIN,
+                   cross_layer: bool = True) -> Dict[str, object]:
+    """Whole-model schedule summary.
+
+    cross_layer=True groups same-class tiles across consecutive layers (the
+    paper's "tiles mapped to that level are executed together"): transitions
+    then count class *changes* along the concatenated schedule, typically
+    2-3 per model.
+    """
+    per_tensor = {name: schedule_tensor(hq, domain)
+                  for name, hq in quantized.items()}
+    if cross_layer:
+        seq: List[int] = []
+        for name in per_tensor:
+            seq.extend(int(g.class_id) for g in per_tensor[name].groups)
+        # executing all F1 groups, then F2, then F3 across the whole model:
+        n_trans = max(len(set(seq)) - 1, 0)
+    else:
+        n_trans = sum(s.num_transitions for s in per_tensor.values())
+    total_tiles = sum(hq.n_tiles for hq in quantized.values())
+    f3 = sum(int((np.asarray(hq.classes) == codebooks.TILE_CLASS_F3).sum())
+             for hq in quantized.values())
+    return {
+        "per_tensor": per_tensor,
+        "num_transitions": n_trans,
+        "transition_overhead_s": n_trans * domain.transition_time_s,
+        "f3_fraction": f3 / max(total_tiles, 1),
+        "f2_fraction": 1.0 - f3 / max(total_tiles, 1),
+    }

@@ -1,0 +1,52 @@
+"""Weight-sensitivity analysis via the diagonal Fisher information (Eq. 1-2).
+
+``F = (1/|D|) sum_d g_d g_d^T`` approximated by its diagonal ``E[g^2]`` over a
+calibration set -- the SqueezeLLM/paper recipe.  Per-weight scores drive
+salient-weight extraction (top 0.05%); per-tile means (Eq. 2) drive the
+tile-class assignment.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tiling
+
+
+def fisher_diag(loss_fn: Callable, params, batches: Iterable,
+                grad_dtype=jnp.float32):
+    """Accumulate E[g^2] over calibration batches.
+
+    loss_fn(params, batch) -> scalar loss.  Returns a pytree shaped like
+    `params` holding the running mean of squared gradients.
+    """
+    grad_fn = jax.jit(jax.grad(loss_fn))
+
+    acc = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+    count = 0
+    for batch in batches:
+        g = grad_fn(params, batch)
+        acc = jax.tree.map(lambda a, gi: a + gi.astype(grad_dtype) ** 2, acc, g)
+        count += 1
+    if count == 0:
+        raise ValueError("no calibration batches supplied")
+    return jax.tree.map(lambda a: a / count, acc)
+
+
+def weight_scores(g2: jnp.ndarray) -> jnp.ndarray:
+    """Per-weight saliency Lambda_W = diag-Fisher (already E[g^2])."""
+    return g2
+
+
+def tile_scores(g2: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """Eq. 2: per-tile mean of squared gradients.  (K,N) -> (n_tiles,)."""
+    tiles = tiling.to_tiles(g2, tile)
+    return tiles.mean(axis=(1, 2))
+
+
+def empirical_fisher_tensor(g2: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convenience: (per-weight scores, total mass) for reporting."""
+    return g2, g2.sum()

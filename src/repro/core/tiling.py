@@ -1,0 +1,56 @@
+"""Reshape weight matrices into hardware tiles and back (paper Alg. 1 l.4).
+
+Tiles are ``t x t`` blocks matching the systolic array / MXU; matrices are
+zero-padded up to tile multiples.  Layout: ``(K, N) -> (kt*nt, t, t)`` with
+tiles ordered row-major over the ``(kt, nt)`` grid, so tile ``i`` covers
+``K[t*(i//nt) : ...], N[t*(i%nt) : ...]``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def padded_dims(k: int, n: int, tile: int) -> Tuple[int, int]:
+    return (-(-k // tile) * tile, -(-n // tile) * tile)
+
+
+def grid_dims(k: int, n: int, tile: int) -> Tuple[int, int]:
+    return (-(-k // tile), -(-n // tile))
+
+
+def pad_matrix(w: jnp.ndarray, tile: int) -> jnp.ndarray:
+    k, n = w.shape
+    kp, np_ = padded_dims(k, n, tile)
+    return jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+
+def to_tiles(w: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(K, N) -> (kt*nt, tile, tile); pads with zeros as needed."""
+    wp = pad_matrix(w, tile)
+    kp, np_ = wp.shape
+    kt, nt = kp // tile, np_ // tile
+    return (wp.reshape(kt, tile, nt, tile)
+              .transpose(0, 2, 1, 3)
+              .reshape(kt * nt, tile, tile))
+
+
+def from_tiles(tiles: jnp.ndarray, shape: Tuple[int, int], tile: int) -> jnp.ndarray:
+    """(kt*nt, tile, tile) -> (K, N), dropping padding."""
+    k, n = shape
+    kt, nt = grid_dims(k, n, tile)
+    wp = (tiles.reshape(kt, nt, tile, tile)
+               .transpose(0, 2, 1, 3)
+               .reshape(kt * tile, nt * tile))
+    return wp[:k, :n]
+
+
+def tile_grid_coords(n_tiles: int, k: int, n: int, tile: int) -> np.ndarray:
+    """(n_tiles, 2) int32 (kt_idx, nt_idx) for each flat tile index."""
+    kt, nt = grid_dims(k, n, tile)
+    assert kt * nt == n_tiles
+    idx = np.arange(n_tiles)
+    return np.stack([idx // nt, idx % nt], axis=1).astype(np.int32)

@@ -1,0 +1,4 @@
+"""Hardware models: Booth MAC timing/energy, DVFS domains, accelerator sims,
+and TPU v5e roofline constants."""
+
+from . import dvfs, gpu, mac_model, systolic, tpu_specs  # noqa: F401

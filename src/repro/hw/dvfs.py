@@ -1,0 +1,110 @@
+"""DVFS operating points and transition-scheduling cost model.
+
+Paper Table I levels, verbatim:
+
+  GPU:            (0.9 V, 1.5 GHz), (1.0 V, 2.0 GHz), (1.1 V, 2.8 GHz)
+  Systolic (TPU): (1.0 V, 1.9 GHz), (1.1 V, 2.4 GHz), (1.2 V, 3.7 GHz)
+
+Dynamic power scales as ``P ~ C * V^2 * f`` (activity folded into the MAC
+energy LUT); static power scales roughly with V.  DVFS transitions cost tens
+of ns to a few us (paper SIII-C3, citing ASPLOS'23 "Predict; don't react");
+HALO clusters all tiles of one class into a single contiguous group so each
+inference pays only (num distinct classes - 1) transitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    name: str
+    voltage_v: float
+    freq_ghz: float
+
+    @property
+    def freq_hz(self) -> float:
+        return self.freq_ghz * 1e9
+
+    def energy_scale(self, v_nominal: float) -> float:
+        """Dynamic-energy multiplier vs. the nominal-voltage LUT: E ~ V^2."""
+        return (self.voltage_v / v_nominal) ** 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DvfsDomain:
+    """An accelerator clock/voltage domain with its supported points."""
+
+    name: str
+    points: Tuple[OperatingPoint, ...]
+    v_nominal: float
+    transition_time_s: float = 1e-6   # conservative end of "tens of ns .. few us"
+    transition_energy_j: float = 5e-7
+
+    def point(self, name: str) -> OperatingPoint:
+        for p in self.points:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+    def best_point_for_delay(self, critical_path_ns: float) -> OperatingPoint:
+        """Paper SIII-C1: argmin energy s.t. 1/f >= critical path."""
+        feasible = [p for p in self.points
+                    if 1.0 / p.freq_ghz >= critical_path_ns - 1e-9]
+        if not feasible:
+            feasible = [min(self.points, key=lambda p: p.freq_ghz)]
+        return min(feasible, key=lambda p: p.energy_scale(self.v_nominal) * p.freq_ghz)
+
+    def fastest_point_for_delay(self, critical_path_ns: float) -> OperatingPoint:
+        """Highest safe frequency given a class critical path."""
+        feasible = [p for p in self.points
+                    if 1.0 / p.freq_ghz >= critical_path_ns - 1e-9]
+        if not feasible:
+            feasible = [min(self.points, key=lambda p: p.freq_ghz)]
+        return max(feasible, key=lambda p: p.freq_ghz)
+
+
+# Paper Table I -------------------------------------------------------------
+
+SYSTOLIC_DOMAIN = DvfsDomain(
+    name="systolic",
+    points=(
+        OperatingPoint("F1", 1.0, 1.9),
+        OperatingPoint("F2", 1.1, 2.4),
+        OperatingPoint("F3", 1.2, 3.7),
+    ),
+    v_nominal=1.0,
+)
+
+GPU_DOMAIN = DvfsDomain(
+    name="gpu",
+    points=(
+        OperatingPoint("G1", 0.9, 1.5),
+        OperatingPoint("G2", 1.0, 2.0),
+        OperatingPoint("G3", 1.1, 2.8),
+    ),
+    v_nominal=0.9,
+)
+
+
+def schedule_transitions(class_per_tile: Sequence[int]) -> Dict[str, object]:
+    """Cluster tiles by frequency class into contiguous execution groups.
+
+    Returns the executed order (all tiles of a class together, slowest class
+    first so the array "ramps up"), the number of DVFS transitions paid, and
+    per-class tile counts.  Reordering is legal because tile programs are
+    independent (paper SIII-C3).
+    """
+    arr = np.asarray(class_per_tile, np.int32)
+    order = np.argsort(arr, kind="stable")
+    classes, counts = np.unique(arr, return_counts=True)
+    return {
+        "order": order,
+        "classes": classes,
+        "counts": counts,
+        "num_transitions": max(int(classes.size) - 1, 0),
+    }

@@ -1,0 +1,109 @@
+"""Analytic GPU performance/energy model (paper SIV-E, Figs. 12-13).
+
+The paper extends AccelSim to an RTX 2080 Ti-class part with the Table I GPU
+DVFS levels and evaluates HALO against W8A8.  We model the GPU as a
+latency/throughput roofline with a DVFS-scalable SM domain:
+
+  t_kernel = max( flops / (peak_flops * f/f_nom),  bytes / dram_bw )
+
+Weight bytes scale with the scheme's stored bit-width; HALO executes the
+low-sensitivity tile groups at G3 (2.8 GHz) and the high-sensitivity ones at
+G2 (2.0 GHz), with the outlier SpMV fused into the epilogue (it is <0.5% of
+FLOPs).  LLM decode is DRAM-bound, so HALO's 4-bit weights also cut the
+memory term -- on GPUs the win is bandwidth + clock, on the systolic array it
+is clock alone; this matches the paper's observation that GPU gains are
+milder than systolic gains.
+
+Energy = P_const * t + P_sm(V, f) * t_compute + e_dram * bytes, mirroring the
+AccelWattch constant/static/dynamic decomposition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence, Tuple
+
+from .dvfs import GPU_DOMAIN, DvfsDomain
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuSpec:
+    name: str = "rtx2080ti-class"
+    peak_int8_tops: float = 215e12      # tensor-core int8 at nominal clock
+    peak_fp16_tflops: float = 108e12
+    dram_bw_Bps: float = 616e9
+    f_nominal_ghz: float = 2.0          # G2 point
+    p_constant_w: float = 55.0          # fans, PCIe, idle logic
+    p_sm_nominal_w: float = 160.0       # SM dynamic at (1.0 V, 2.0 GHz)
+    e_dram_pj_per_byte: float = 18.0
+
+
+DEFAULT_GPU = GpuSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuScheme:
+    name: str
+    weight_bits: float
+    act_bits: float
+    # fraction of weight-tile groups executed at each DVFS point name
+    point_fractions: Mapping[str, float]
+    fp16: bool = False
+
+
+def gpu_baseline(name: str) -> GpuScheme:
+    if name == "fp16":
+        return GpuScheme("fp16", 16, 16, {"G2": 1.0}, fp16=True)
+    if name == "w8a8":
+        return GpuScheme("w8a8", 8, 8, {"G2": 1.0})
+    if name == "w4a8":
+        return GpuScheme("w4a8", 4, 8, {"G2": 1.0})
+    raise KeyError(name)
+
+
+def gpu_halo(f3_frac: float, f2_frac: float, name: str = "halo") -> GpuScheme:
+    # low-sensitivity groups ride G3 (2.8 GHz); high-sensitivity stay G2.
+    return GpuScheme(name, 4.0 + 16.0 / (128 * 128), 8,
+                     {"G3": f3_frac, "G2": f2_frac})
+
+
+@dataclasses.dataclass
+class GpuSimResult:
+    time_s: float
+    compute_time_s: float
+    memory_time_s: float
+    energy_j: float
+    energy_breakdown: Dict[str, float]
+
+
+def simulate_matmuls(layer_shapes: Sequence[Tuple[int, int, int]],
+                     scheme: GpuScheme,
+                     spec: GpuSpec = DEFAULT_GPU,
+                     domain: DvfsDomain = GPU_DOMAIN) -> GpuSimResult:
+    peak = spec.peak_fp16_tflops if scheme.fp16 else spec.peak_int8_tops
+    t_comp = t_mem = 0.0
+    e_sm = e_dram = 0.0
+    for (m, k, n) in layer_shapes:
+        flops = 2.0 * m * k * n
+        bytes_ = (k * n * scheme.weight_bits / 8.0
+                  + m * k * scheme.act_bits / 8.0 + m * n * 2.0)
+        for pt_name, frac in scheme.point_fractions.items():
+            if frac <= 0.0:
+                continue
+            pt = domain.point(pt_name)
+            fscale = pt.freq_ghz / spec.f_nominal_ghz
+            tc = frac * flops / (peak * fscale)
+            tm = frac * bytes_ / spec.dram_bw_Bps
+            t_comp += tc
+            t_mem += tm
+            # SM power ~ C V^2 f relative to nominal point
+            p_sm = (spec.p_sm_nominal_w
+                    * (pt.voltage_v / domain.point("G2").voltage_v) ** 2 * fscale)
+            e_sm += p_sm * max(tc, tm * 0.35)   # SMs partially idle when DRAM-bound
+        e_dram += bytes_ * spec.e_dram_pj_per_byte * 1e-12
+    total_t = max(t_comp, t_mem)
+    e_const = spec.p_constant_w * total_t
+    return GpuSimResult(
+        time_s=total_t, compute_time_s=t_comp, memory_time_s=t_mem,
+        energy_j=e_sm + e_dram + e_const,
+        energy_breakdown={"constant": e_const, "sm": e_sm, "dram": e_dram})

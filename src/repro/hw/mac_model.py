@@ -1,0 +1,205 @@
+"""Behavioral timing/energy model of an 8-bit Booth-Wallace MAC unit.
+
+The paper characterizes a Synopsys DW02_MAC (Booth encoding, Wallace tree
+reduction, final carry-propagate adder) with PrimeTime static timing analysis
+and finds the worst-case critical-path delay of ``w * a + y`` depends strongly
+on the *weight* operand (paper Figs. 3-5): weight values whose recoding
+activates few partial-product rows admit much higher clock frequencies, and
+the paper anchors three frequency classes:
+
+  * 9 weight values   admit a 3.7 GHz clock   (class F3, low-sensitivity tiles)
+  * 16 weight values  admit a 2.4 GHz clock   (class F2, high-sensitivity tiles)
+  * all 256 values    admit a 1.9 GHz clock   (class F1, outliers / salient)
+
+We cannot run PrimeTime in this container, so this module is a *behavioral*
+model calibrated to those anchors.  Weights are recoded into canonical
+signed-digit (CSD / non-adjacent) form -- the minimal-partial-product booth
+recoding used by DesignWare multipliers -- and the critical path decomposes as
+
+  delay(w) = t_enc + t_csa * stages(nnz(w)) + t_hi * [msb(w) >= 4]
+
+where ``nnz`` is the number of nonzero signed digits (active partial-product
+rows -> CSA tree depth ``stages = ceil(log2(nnz+1))``) and the step term
+models the upper carry-lookahead block of the final adder engaging only when
+the most significant active digit sits in the high nibble.  Dynamic energy
+follows switching activity:  ``energy(w) = e_base + e_pp*nnz + e_msb*msb``.
+
+The classes that fall out are exactly the paper's:
+
+  F3 = {0, +-1, +-2, +-4, +-8}                      (nnz<=1, msb<=3; 9 values)
+  F2 = F3 + {+-16, +-32, +-64, -128}                (nnz<=1;         16 values)
+  F1 = all int8                                     (worst path; multi-PP)
+
+i.e. the fast codebooks are the sign*2^k ("logarithmic") values -- single
+active partial product, minimal switching -- matching the peaked shape of the
+paper's Fig. 4 and the timing/power correlation of Fig. 5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+WEIGHT_VALUES = np.arange(INT8_MIN, INT8_MAX + 1, dtype=np.int32)  # (256,)
+
+# Paper anchors (Table I systolic-array DVFS levels).
+F3_GHZ, F2_GHZ, F1_GHZ = 3.7, 2.4, 1.9
+
+
+def csd_digits(w: int) -> Tuple[int, ...]:
+    """Canonical signed-digit (non-adjacent form) recoding, LSB first.
+
+    Digits in {-1, 0, +1}; minimal number of nonzeros; no two adjacent
+    nonzeros.  Reconstructs w exactly: ``w = sum_i d_i * 2**i``.
+    """
+    w = int(w)
+    if not INT8_MIN <= w <= INT8_MAX:
+        raise ValueError(f"weight {w} outside int8 range")
+    n, digits = w, []
+    while n != 0:
+        if n & 1:
+            d = 2 - (n & 3)  # +-1 such that (n - d) % 4 == 0
+            if d == 2:       # n % 4 == 0 unreachable here; keep math exact
+                d = -2
+            digits.append(d)
+            n -= d
+        else:
+            digits.append(0)
+        n >>= 1
+    return tuple(digits) if digits else (0,)
+
+
+def nnz_pp(w: int) -> int:
+    """Number of active partial-product rows (nonzero CSD digits)."""
+    return sum(1 for d in csd_digits(w) if d != 0)
+
+
+def msb_pp(w: int) -> int:
+    """Bit position of the most significant active partial product (0 for w=0)."""
+    d = csd_digits(w)
+    pos = 0
+    for i, di in enumerate(d):
+        if di != 0:
+            pos = i
+    return pos
+
+
+def _stages(nnz: int) -> int:
+    """CSA reduction-tree depth for `nnz` partial products."""
+    return int(np.ceil(np.log2(nnz + 1))) if nnz > 0 else 0
+
+
+@functools.lru_cache(maxsize=None)
+def _max_stages() -> int:
+    return max(_stages(nnz_pp(int(w))) for w in WEIGHT_VALUES)
+
+
+@dataclasses.dataclass(frozen=True)
+class MacTimingParams:
+    """Coefficients (ns / pJ) of the behavioral delay & energy model.
+
+    Defaults are solved from the paper's three frequency anchors:
+      t_enc + t_csa*1                  = 1/3.7   (single PP, low nibble)
+      t_enc + t_csa*1 + t_hi           = 1/2.4   (single PP, high nibble)
+      t_enc + t_csa*S_max + t_hi       = 1/1.9   (worst-case value)
+    """
+
+    t_enc: float = 0.0
+    t_csa: float = 0.0
+    t_hi: float = 0.0
+    e_base: float = 0.15   # clocking + sequencing energy per MAC (pJ)
+    e_pp: float = 0.28     # per active partial-product row
+    e_msb: float = 0.012   # per bit of carry-chain actually exercised
+
+    def __post_init__(self):
+        if self.t_csa == 0.0:
+            d3, d2, d1 = 1.0 / F3_GHZ, 1.0 / F2_GHZ, 1.0 / F1_GHZ
+            s_max = _max_stages()
+            t_csa = (d1 - d2) / max(s_max - 1, 1)
+            t_hi = d2 - d3
+            t_enc = d3 - t_csa
+            object.__setattr__(self, "t_csa", t_csa)
+            object.__setattr__(self, "t_hi", t_hi)
+            object.__setattr__(self, "t_enc", t_enc)
+
+    def delay_ns(self, w: int) -> float:
+        n, m = nnz_pp(w), msb_pp(w)
+        return self.t_enc + self.t_csa * max(_stages(n), 1) + self.t_hi * (m >= 4)
+
+    def energy_pj(self, w: int) -> float:
+        return self.e_base + self.e_pp * nnz_pp(w) + self.e_msb * msb_pp(w)
+
+
+DEFAULT_PARAMS = MacTimingParams()
+
+
+@functools.lru_cache(maxsize=None)
+def delay_lut(params: MacTimingParams = DEFAULT_PARAMS) -> np.ndarray:
+    """(256,) float32 ns worst-case delay per weight value (index = w + 128)."""
+    return np.array([params.delay_ns(int(w)) for w in WEIGHT_VALUES], np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def energy_lut(params: MacTimingParams = DEFAULT_PARAMS) -> np.ndarray:
+    """(256,) float32 pJ dynamic energy per MAC (index = w + 128)."""
+    return np.array([params.energy_pj(int(w)) for w in WEIGHT_VALUES], np.float32)
+
+
+def achievable_freq_ghz(params: MacTimingParams = DEFAULT_PARAMS) -> np.ndarray:
+    """(256,) max clock (GHz) per weight value == 1/delay.  Paper Fig. 4."""
+    return (1.0 / delay_lut(params)).astype(np.float32)
+
+
+def max_freq_for_values(values: np.ndarray,
+                        params: MacTimingParams = DEFAULT_PARAMS) -> float:
+    """Highest clock every value in `values` sustains (GHz) == min over set."""
+    values = np.asarray(values, np.int32)
+    if values.size == 0:
+        return float(achievable_freq_ghz(params).max())
+    lut = delay_lut(params)
+    return float(1.0 / lut[values + 128].max())
+
+
+# ---------------------------------------------------------------------------
+# Frequency classes (the paper's 9 / 16 / 256 grouping)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def frequency_classes() -> Dict[str, np.ndarray]:
+    """The paper's three classes as {name: sorted int32 value array}.
+
+    F3 (9 values, 3.7 GHz):  single partial product in the low nibble.
+    F2 (16 values, 2.4 GHz): single partial product anywhere (all sign*2^k).
+    F1 (256 values, 1.9 GHz): the full int8 range.
+    """
+    single = np.array([w for w in WEIGHT_VALUES if nnz_pp(int(w)) <= 1], np.int32)
+    f3 = np.array([w for w in single if msb_pp(int(w)) <= 3], np.int32)
+    return {"F3": np.sort(f3), "F2": np.sort(single), "F1": WEIGHT_VALUES.copy()}
+
+
+CLASS_FREQ_GHZ = {"F3": F3_GHZ, "F2": F2_GHZ, "F1": F1_GHZ}
+# class id used in packed tensors: 0 -> F1 (slow), 1 -> F2, 2 -> F3 (fast)
+CLASS_IDS = {"F1": 0, "F2": 1, "F3": 2}
+ID_TO_CLASS = {v: k for k, v in CLASS_IDS.items()}
+
+
+def validate_against_paper(params: MacTimingParams = DEFAULT_PARAMS) -> Dict[str, float]:
+    """Sanity metrics tying the behavioral model to the paper's anchors."""
+    classes = frequency_classes()
+    lut_e = energy_lut(params)
+    f = achievable_freq_ghz(params)
+    return {
+        "f3_ghz": max_freq_for_values(classes["F3"], params),
+        "f2_ghz": max_freq_for_values(classes["F2"], params),
+        "f1_ghz": max_freq_for_values(classes["F1"], params),
+        "f3_size": int(classes["F3"].size),
+        "f2_size": int(classes["F2"].size),
+        # paper Fig. 3: weight 64 clocks ~2x faster than -127
+        "w64_over_wm127": float(f[64 + 128] / f[-127 + 128]),
+        # paper Fig. 5: timing & power correlate
+        "delay_energy_corr": float(np.corrcoef(delay_lut(params), lut_e)[0, 1]),
+    }

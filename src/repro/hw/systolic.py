@@ -1,0 +1,245 @@
+"""Cycle/energy simulator for a weight-stationary systolic array with a
+global DVFS unit (the paper's custom SystemVerilog design, modeled analytically).
+
+Model
+-----
+A ``t x t`` int8 MAC array (t = HALO tile size, 128 default == TPU MXU) executes
+``(M, K) @ (K, N)`` by iterating weight tiles; per weight tile it pays
+
+  cycles(tile) = t (weight preload) + M (activation streaming) + 2t (drain)
+
+Every tile carries a frequency class; tiles of one class execute contiguously
+(one DVFS transition per class, paper SIII-C3), so
+
+  T_compute = sum_cls cycles(cls) / f(cls) + (n_cls - 1) * t_dvfs
+
+Baselines (FP16 / W8A8 / W4A8 / W3A8) are *hardware-agnostic*: the deployment
+cannot prove a shorter critical path, so the array stays at the nominal point
+(F1 = 1.9 GHz; FP16 uses a slower wide-datapath clock).  That asymmetry -- not
+raw bit-width -- is the paper's headline speedup mechanism.
+
+Memory system: double-buffered weight fetch from DRAM through an SRAM buffer;
+activations streamed once per (M, K) pass per tile row.  Off-chip traffic
+scales with stored bits/weight (HALO: 4-bit codebook indices + per-tile scale
++ <0.5% sparse 8-bit outliers).  Energy integrates the per-value MAC LUT
+(switching activity), buffer/DRAM per-byte costs, DVFS transition energy and
+leakage * time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import mac_model
+from .dvfs import SYSTOLIC_DOMAIN, DvfsDomain, OperatingPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryParams:
+    dram_bandwidth_Bps: float = 819e9      # HBM-class
+    dram_energy_pj_per_byte: float = 20.0
+    sram_energy_pj_per_byte: float = 0.15  # wide banked reads, 22nm-ish
+    leakage_w: float = 2.0                 # array + buffers
+    act_bits: int = 8                      # activations A8 everywhere (paper)
+    spmv_lanes: int = 4096                 # dedicated SpMV engine width
+
+
+DEFAULT_MEM = MemoryParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """How a quantization scheme occupies the array.
+
+    class_fractions: fraction of weight tiles per frequency-class name; the
+      class also fixes which codebook the tile's weights live in.
+    weight_bits: stored bits per dense weight (memory traffic).
+    mac_energy_pj: mean per-MAC dynamic energy at nominal V (from the LUT over
+      the scheme's actual value distribution).
+    sparse_frac: fraction of weights routed to the SpMV engine (HALO: 0.0045).
+    fp16: wide-datapath mode (clock capped, 4x MAC energy).
+    """
+
+    name: str
+    class_fractions: Mapping[str, float]
+    weight_bits: float
+    mac_energy_pj: float
+    sparse_frac: float = 0.0
+    fp16: bool = False
+
+
+# Wide fp datapath: ~2x int8 critical path plus ~30% fewer MACs/mm^2; both
+# folded into an effective throughput clock for the same 128x128 grid.
+FP16_CLOCK_GHZ = 0.80
+FP16_MAC_ENERGY_SCALE = 4.0
+
+
+def mean_mac_energy(values: np.ndarray, weights: Optional[np.ndarray] = None) -> float:
+    """Mean per-MAC energy (pJ) over an int8 value distribution."""
+    lut = mac_model.energy_lut()
+    values = np.asarray(values, np.int32)
+    e = lut[values + 128]
+    if weights is None:
+        return float(e.mean())
+    w = np.asarray(weights, np.float64)
+    return float((e * w).sum() / w.sum())
+
+
+def baseline_scheme(name: str) -> SchemeSpec:
+    """FP16 / W8A8 / W4A8 / W3A8 baselines (hardware-agnostic -> F1 clock)."""
+    rng = np.random.default_rng(0)
+    if name == "fp16":
+        vals = rng.integers(-128, 128, 4096)
+        return SchemeSpec("fp16", {"F1": 1.0}, 16.0,
+                          mean_mac_energy(vals) * FP16_MAC_ENERGY_SCALE, fp16=True)
+    if name == "w8a8":
+        vals = np.clip(rng.normal(0, 42, 65536), -128, 127).astype(np.int32)
+        return SchemeSpec("w8a8", {"F1": 1.0}, 8.0, mean_mac_energy(vals))
+    if name == "w4a8":
+        vals = np.clip(rng.normal(0, 2.7, 65536), -8, 7).astype(np.int32)
+        return SchemeSpec("w4a8", {"F1": 1.0}, 4.0, mean_mac_energy(vals))
+    if name == "w3a8":
+        vals = np.clip(rng.normal(0, 1.4, 65536), -4, 3).astype(np.int32)
+        return SchemeSpec("w3a8", {"F1": 1.0}, 3.0, mean_mac_energy(vals))
+    raise KeyError(name)
+
+
+def halo_scheme(f3_frac: float, f2_frac: float,
+                sparse_frac: float = 0.0045,
+                name: str = "halo") -> SchemeSpec:
+    """HALO with the given tile-class mix (f3 + f2 must be ~1)."""
+    classes = mac_model.frequency_classes()
+    # codebook value usage ~ log-quantized gaussian: low exponents dominate
+    e3 = mean_mac_energy(classes["F3"], weights=np.array([1, 2, 4, 6, 8, 6, 4, 2, 1]))
+    w2 = np.array([1, 1, 2, 3, 5, 8, 11, 14, 16, 14, 11, 8, 5, 3, 2, 1], np.float64)
+    e2 = mean_mac_energy(classes["F2"], weights=w2)
+    mac_e = (f3_frac * e3 + f2_frac * e2) / max(f3_frac + f2_frac, 1e-9)
+    return SchemeSpec(name, {"F3": f3_frac, "F2": f2_frac},
+                      weight_bits=4.0 + 16.0 / (128 * 128),  # idx + per-tile scale
+                      mac_energy_pj=mac_e, sparse_frac=sparse_frac)
+
+
+@dataclasses.dataclass
+class SimResult:
+    time_s: float
+    compute_time_s: float
+    memory_time_s: float
+    spmv_time_s: float
+    dvfs_transitions: int
+    energy_j: float
+    energy_breakdown: Dict[str, float]
+
+    def normalized_to(self, other: "SimResult") -> Dict[str, float]:
+        return {"time": self.time_s / other.time_s,
+                "energy": self.energy_j / other.energy_j}
+
+
+def simulate_matmul(m: int, k: int, n: int, scheme: SchemeSpec,
+                    tile: int = 128,
+                    domain: DvfsDomain = SYSTOLIC_DOMAIN,
+                    mem: MemoryParams = DEFAULT_MEM) -> SimResult:
+    """Simulate one (m,k) @ (k,n) on the array under `scheme`."""
+    classes = mac_model.frequency_classes()
+    fp16 = scheme.fp16
+    kt, nt = -(-k // tile), -(-n // tile)
+    n_tiles = kt * nt
+    cycles_per_tile = tile + m + 2 * tile
+
+    # --- compute time: per-class contiguous groups ---
+    compute_t, n_groups = 0.0, 0
+    mac_count = 0.0
+    for cls_name, frac in scheme.class_fractions.items():
+        if frac <= 0.0:
+            continue
+        n_groups += 1
+        if fp16:
+            f_ghz = FP16_CLOCK_GHZ
+        else:
+            crit_ns = 1.0 / mac_model.CLASS_FREQ_GHZ[cls_name]
+            f_ghz = domain.fastest_point_for_delay(crit_ns).freq_ghz
+        compute_t += frac * n_tiles * cycles_per_tile / (f_ghz * 1e9)
+        mac_count += frac * n_tiles * m * tile * tile
+    transitions = max(n_groups - 1, 0)
+    compute_t += transitions * domain.transition_time_s
+
+    # --- SpMV engine for outliers/salient (paper: <1% of exec time) ---
+    nnz = scheme.sparse_frac * k * n
+    spmv_t = (nnz * m) / (mem.spmv_lanes * 1.9e9) if nnz else 0.0
+
+    # --- memory time: DRAM sees each tensor once (weights/acts/outputs);
+    # activation re-reads across weight-tile columns come from SRAM.
+    w_bytes = k * n * scheme.weight_bits / 8.0
+    a_bytes = m * k * mem.act_bits / 8.0
+    o_bytes = m * n * 4.0                        # fp32 partials written back
+    sram_restream_bytes = a_bytes * nt           # per weight-tile-column reuse
+    mem_t = (w_bytes + a_bytes + o_bytes) / mem.dram_bandwidth_Bps
+
+    # weight fetch double-buffers behind compute; activations stream.
+    total_t = max(compute_t, mem_t) + spmv_t
+
+    # --- energy ---
+    e_mac = 0.0
+    for cls_name, frac in scheme.class_fractions.items():
+        if frac <= 0.0:
+            continue
+        if fp16:
+            vscale = 1.0
+        else:
+            crit_ns = 1.0 / mac_model.CLASS_FREQ_GHZ[cls_name]
+            pt = domain.fastest_point_for_delay(crit_ns)
+            vscale = pt.energy_scale(domain.v_nominal)
+        e_mac += (frac * n_tiles * m * tile * tile) * scheme.mac_energy_pj * vscale
+    e_mac *= 1e-12
+    e_sram = (w_bytes + sram_restream_bytes + o_bytes) * mem.sram_energy_pj_per_byte * 1e-12
+    e_dram = (w_bytes + a_bytes + o_bytes) * mem.dram_energy_pj_per_byte * 1e-12
+    e_static = mem.leakage_w * total_t
+    e_dvfs = transitions * domain.transition_energy_j
+    energy = e_mac + e_sram + e_dram + e_static + e_dvfs
+
+    return SimResult(
+        time_s=total_t, compute_time_s=compute_t, memory_time_s=mem_t,
+        spmv_time_s=spmv_t, dvfs_transitions=transitions, energy_j=energy,
+        energy_breakdown={"mac": e_mac, "sram": e_sram, "dram": e_dram,
+                          "static": e_static, "dvfs": e_dvfs})
+
+
+def simulate_layers(layer_shapes: Sequence[Tuple[int, int, int]],
+                    scheme: SchemeSpec, tile: int = 128,
+                    mem: MemoryParams = DEFAULT_MEM) -> SimResult:
+    """Sum a sequence of (m, k, n) matmuls (one forward pass of a model)."""
+    total = None
+    for (m, k, n) in layer_shapes:
+        r = simulate_matmul(m, k, n, scheme, tile=tile, mem=mem)
+        if total is None:
+            total = r
+        else:
+            total = SimResult(
+                time_s=total.time_s + r.time_s,
+                compute_time_s=total.compute_time_s + r.compute_time_s,
+                memory_time_s=total.memory_time_s + r.memory_time_s,
+                spmv_time_s=total.spmv_time_s + r.spmv_time_s,
+                dvfs_transitions=total.dvfs_transitions + r.dvfs_transitions,
+                energy_j=total.energy_j + r.energy_j,
+                energy_breakdown={kk: total.energy_breakdown[kk] + r.energy_breakdown[kk]
+                                  for kk in total.energy_breakdown})
+    assert total is not None
+    return total
+
+
+def decoder_layer_shapes(d_model: int, d_ff: int, n_layers: int,
+                         vocab: int, seq: int = 2048, batch: int = 1,
+                         gated: bool = True) -> List[Tuple[int, int, int]]:
+    """(m,k,n) matmul list for a decoder-only LM forward (weights only)."""
+    m = seq * batch
+    per_layer = [
+        (m, d_model, 3 * d_model),          # qkv (approx; GQA folds into this)
+        (m, d_model, d_model),              # out proj
+        (m, d_model, (2 if gated else 1) * d_ff),
+        (m, d_ff, d_model),
+    ]
+    shapes = per_layer * n_layers
+    shapes.append((m, d_model, vocab))
+    return shapes

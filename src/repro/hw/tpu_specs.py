@@ -1,0 +1,42 @@
+"""TPU v5e roofline constants used by the dry-run analysis (target hardware).
+
+These are the numbers mandated by the reproduction brief:
+  peak bf16 compute  : 197 TFLOP/s per chip
+  HBM bandwidth      : 819 GB/s per chip
+  ICI bandwidth      : ~50 GB/s per link
+plus mesh/topology conventions for the production meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12     # FLOP/s
+    peak_int8_ops: float = 394e12       # OP/s (2x bf16)
+    hbm_bandwidth: float = 819e9        # B/s
+    hbm_bytes: float = 16e9             # 16 GB HBM per chip
+    ici_link_bandwidth: float = 50e9    # B/s per link (brief: ~50 GB/s/link)
+    vmem_bytes: float = 128e6           # ~128 MB VMEM
+    mxu_shape: tuple = (128, 128)       # systolic array == HALO tile
+
+
+V5E = ChipSpec()
+
+SINGLE_POD_CHIPS = 256   # 16 x 16
+MULTI_POD_CHIPS = 512    # 2 pods
+
+
+def compute_time_s(hlo_flops: float, chips: int, spec: ChipSpec = V5E) -> float:
+    return hlo_flops / (chips * spec.peak_bf16_flops)
+
+
+def memory_time_s(hlo_bytes: float, chips: int, spec: ChipSpec = V5E) -> float:
+    return hlo_bytes / (chips * spec.hbm_bandwidth)
+
+
+def collective_time_s(coll_bytes: float, chips: int, spec: ChipSpec = V5E) -> float:
+    return coll_bytes / (chips * spec.ici_link_bandwidth)

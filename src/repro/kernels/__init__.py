@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for HALO deployment (validated in interpret mode on
+CPU): halo_matmul (codebook dequant + class-grouped MXU matmul), spmv
+(gather-free hypersparse outlier path), int8_matmul (W8A8 baseline)."""
+
+from . import halo_matmul, int8_matmul, ops, ref, spmv  # noqa: F401

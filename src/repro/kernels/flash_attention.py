@@ -1,0 +1,252 @@
+"""Pallas TPU flash-attention kernels (forward + backward).
+
+The pure-JAX flash path (models/flash.py) is numerically exact but
+materializes (chunk x chunk) f32 score blocks between dots at every step --
+real HBM traffic on any backend.  These kernels keep the entire block
+pipeline in VMEM: HBM sees q/k/v/out (+ lse) once in the forward and
+q/k/v/out/dout once plus dq/dk/dv writes in the backward, which is the
+traffic the roofline's "flash_vmem" accounting models.
+
+Layout: inputs are (BH, S, D) -- batch*heads flattened by the wrapper; the
+forward grid is (BH, S/bq) with an inner fori_loop over kv blocks (causal:
+only j <= i); the backward runs two passes, dkv-major and dq-major, each
+re-computing p from (q, k, lse).  Block sizes default to 512 x 512 with D
+padded to a lane multiple.  Validated in interpret mode against
+models/flash.py (itself validated against dense attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _causal_mask(i, j, bq, bk, window):
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = qpos >= kpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                bq, bk, n_kv, scale, window, softcap):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(_causal_mask(i, j, bq, bk, window), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    hi = jnp.minimum((i + 1) * bq // bk + ((i + 1) * bq % bk != 0), n_kv)
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (i * bq - window) // bk)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, q_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "window", "softcap", "interpret"))
+def flash_fwd(q, k, v, bq=512, bk=512, window=None, softcap=None,
+              interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k,v: (BH, S, D) -> (out (BH,S,D), lse (BH,S))."""
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = float(1.0 / np.sqrt(d))
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, n_kv=s // bk,
+                               scale=scale, window=window, softcap=softcap)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, bq, bk, n_q, scale, window, softcap):
+    j = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (0, pl.dslice(i * bq, bq), slice(None))
+                    ).astype(jnp.float32)
+        do = pl.load(do_ref, (0, pl.dslice(i * bq, bq), slice(None))
+                     ).astype(jnp.float32)
+        lse = pl.load(lse_ref, (0, pl.dslice(i * bq, bq)))
+        delta = pl.load(delta_ref, (0, pl.dslice(i * bq, bq)))
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pre = s
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _causal_mask(i, j, bq, bk, window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv_new = dv + jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        if softcap is not None:
+            th = jnp.tanh(pre * (1.0 / softcap))
+            ds = ds * (1.0 - th * th)
+        ds = ds * scale
+        dk_new = dk + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    lo = (j * bk) // bq
+    hi = n_q
+    if window is not None:
+        hi = jnp.minimum(n_q, ((j + 1) * bk + window) // bq + 1)
+    dk0 = jnp.zeros((bk, k_ref.shape[-1]), jnp.float32)
+    dv0 = jnp.zeros((bk, v_ref.shape[-1]), jnp.float32)
+    dk, dv = jax.lax.fori_loop(lo, hi, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, *, bq, bk, n_kv, scale, window, softcap):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    def body(j, dq):
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pre = s
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _causal_mask(i, j, bq, bk, window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        if softcap is not None:
+            th = jnp.tanh(pre * (1.0 / softcap))
+            ds = ds * (1.0 - th * th)
+        ds = ds * scale
+        return dq + jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    hi = jnp.minimum((i + 1) * bq // bk + ((i + 1) * bq % bk != 0), n_kv)
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (i * bq - window) // bk)
+    dq0 = jnp.zeros((bq, q_ref.shape[-1]), jnp.float32)
+    dq = jax.lax.fori_loop(lo, hi, body, dq0)
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "window", "softcap", "interpret"))
+def flash_bwd(q, k, v, out, lse, dout, bq=512, bk=512, window=None,
+              softcap=None, interpret: bool = False):
+    """Backward: returns (dq, dk, dv), each (BH, S, D)."""
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    scale = float(1.0 / np.sqrt(d))
+    delta = jnp.einsum("bsd,bsd->bs", out.astype(jnp.float32),
+                       dout.astype(jnp.float32))
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, bq=bq, bk=bk, n_q=s // bq, scale=scale,
+        window=window, softcap=softcap)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(bh, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, s), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, s), lambda b, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, d), q.dtype)] * 2,
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, bq=bq, bk=bk, n_kv=s // bk, scale=scale,
+        window=window, softcap=softcap)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    return dq, dk, dv

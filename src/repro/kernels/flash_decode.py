@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode kernel with fused int8-KV dequantization.
+
+Single-token attention over a long cache is pure memory streaming; with an
+int8-quantized cache (KIVI-style per-position scales) the kernel reads the
+cache at 1 byte/element and dequantizes in VMEM -- halving decode's HBM
+bound vs bf16 and never materializing a dequantized cache in HBM (which the
+XLA fallback path does; the roofline's kvdec_vmem scope models this kernel).
+
+Layout: q (BK, G, D) -- BK = batch*kv_heads, G = q heads per kv head;
+k_q/v_q (BK, S, D) int8; k_s/v_s (BK, S) f32; length (BK, 1) int32.
+Grid: one step per BK row; inner fori over S blocks with online softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                   *, bs, n_blocks, scale, window, softcap):
+    b = pl.program_id(0)
+    q = q_ref[0].astype(jnp.float32)                # (G, D)
+    length = len_ref[b]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kq = pl.load(kq_ref, (0, pl.dslice(j * bs, bs), slice(None)))
+        ks = pl.load(ks_ref, (0, pl.dslice(j * bs, bs)))
+        vq = pl.load(vq_ref, (0, pl.dslice(j * bs, bs), slice(None)))
+        vs = pl.load(vs_ref, (0, pl.dslice(j * bs, bs)))
+        k = kq.astype(jnp.float32) * ks[:, None]    # dequant in VMEM
+        v = vq.astype(jnp.float32) * vs[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+        valid = kpos < length
+        if window is not None:
+            valid &= kpos >= (length - window)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    g, d = q_ref.shape[1], q_ref.shape[2]
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bs", "window", "softcap", "interpret"))
+def flash_decode_int8(q: jnp.ndarray,              # (BK, G, D)
+                      k_q: jnp.ndarray,            # (BK, S, D) int8
+                      k_s: jnp.ndarray,            # (BK, S) f32
+                      v_q: jnp.ndarray,
+                      v_s: jnp.ndarray,
+                      length: jnp.ndarray,         # (BK,) int32
+                      bs: int = 512,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    bk, s, d = k_q.shape
+    g = q.shape[1]
+    bs = min(bs, s)
+    assert s % bs == 0
+    scale = float(1.0 / np.sqrt(d))
+    kernel = functools.partial(_decode_kernel, bs=bs, n_blocks=s // bs,
+                               scale=scale, window=window, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bk,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, L: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, L: (b, 0, 0)),
+            pl.BlockSpec((1, s), lambda b, L: (b, 0)),
+            pl.BlockSpec((1, s, d), lambda b, L: (b, 0, 0)),
+            pl.BlockSpec((1, s), lambda b, L: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, L: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bk, g, d), jnp.float32),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k_q, k_s, v_q, v_s)

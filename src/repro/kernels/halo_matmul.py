@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: HALO codebook matmul with class-grouped tile schedule.
+
+Computes ``out (M, N) = x (M, K) @ dequant(W_halo)`` where the weight is
+stored as 4-bit codebook indices (two per byte, packed along N) plus a
+per-(128x128)-tile fp32 scale.  Design notes:
+
+* **Gather-free dequant**: the shared 16-entry codebook is the sign*2^k
+  table ``[-128,-64,...,-1,0,1,...,64]``, so index -> value is pure
+  arithmetic (``+-exp2``), no VMEM gather -- VPU-friendly, then the MXU does
+  the (bm,128)x(128,128) product per tile.
+* **Class-grouped schedule** (paper SIII-C3 adapted to the MXU): the grid's
+  tile axis walks a *scheduled order* delivered via scalar prefetch.  Tiles
+  are ordered column-major with the K-tiles of each output column sorted by
+  frequency class, so same-class tiles execute contiguously (the DVFS
+  grouping) while output accumulation still sees consecutive visits.  On
+  real silicon the DVFS controller keys off this order; on TPU it also
+  gives the weight-DMA a regular class-banded stride.
+* fp32 accumulation in VMEM scratch; out block written on each column's
+  last scheduled tile.
+
+BlockSpec tiling: x (bm, 128) VMEM; packed idx (128, 64) uint8 VMEM;
+scale (1, 1) SMEM-ish block; out (bm, 128).  bm defaults to 128 (MXU-square)
+and shrinks for small M (decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128
+
+
+def _decode_idx(idx: jnp.ndarray) -> jnp.ndarray:
+    """4-bit codebook index -> fp32 value of the shared sign*2^k table."""
+    idxf = idx.astype(jnp.float32)
+    neg = -jnp.exp2(7.0 - idxf)          # idx 0..7  -> -128..-1
+    pos = jnp.exp2(idxf - 9.0)           # idx 9..15 -> 1..64
+    return jnp.where(idx < 8, neg, jnp.where(idx == 8, 0.0, pos))
+
+
+def _halo_kernel(kt_ref, nt_ref, first_ref, last_ref,   # scalar prefetch
+                 x_ref, idx_ref, scale_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+
+    @pl.when(first_ref[j] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = idx_ref[...]                               # (128, 64) uint8
+    lo = packed & jnp.uint8(0xF)
+    hi = packed >> jnp.uint8(4)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(TILE, TILE)
+    # per-tile-column scale row broadcasts over the tile's K rows (VPU)
+    w = _decode_idx(idx) * scale_ref[0, :][None, :]
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(last_ref[j] == 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret", "out_dtype"))
+def halo_matmul_packed(x: jnp.ndarray,
+                       idx_packed: jnp.ndarray,      # (Kp, Np//2) uint8
+                       scale: jnp.ndarray,           # (kt*nt, TILE) f32
+                       order_kt: jnp.ndarray,        # (n_tiles,) int32
+                       order_nt: jnp.ndarray,
+                       order_first: jnp.ndarray,     # 1 on first tile of col
+                       order_last: jnp.ndarray,      # 1 on last tile of col
+                       bm: int = 128,
+                       out_dtype=jnp.float32,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x: (M, Kp) fp; returns (M, Np).  Caller pads/slices true shapes.
+
+    `scale` holds one fp32 row per tile (row-major over the (kt, nt) grid):
+    per-tile-column scales; a scalar-scale tensor broadcasts into rows."""
+    m, kp = x.shape
+    npk = idx_packed.shape[1] * 2
+    kt, nt = kp // TILE, npk // TILE
+    n_tiles = int(order_kt.shape[0])
+    assert n_tiles == kt * nt
+    assert scale.shape == (n_tiles, TILE), scale.shape
+
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(mp // bm, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, TILE),
+                         lambda i, j, okt, ont, of, ol: (i, okt[j])),
+            pl.BlockSpec((TILE, TILE // 2),
+                         lambda i, j, okt, ont, of, ol: (okt[j], ont[j])),
+            pl.BlockSpec((1, TILE),
+                         lambda i, j, okt, ont, of, ol:
+                         (okt[j] * nt + ont[j], 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, TILE),
+                               lambda i, j, okt, ont, of, ol: (i, ont[j])),
+        scratch_shapes=[pltpu.VMEM((bm, TILE), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _halo_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, npk), out_dtype),
+        interpret=interpret,
+    )(order_kt, order_nt, order_first, order_last, x, idx_packed, scale)
+    return out[:m]
+
+
+def make_schedule(classes: np.ndarray, kt: int, nt: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Class-grouped tile order (column-major, class-sorted within column).
+
+    classes: (kt*nt,) tile classes in row-major (kt, nt) layout.  Returns
+    (order_kt, order_nt, first, last) int32 arrays of length kt*nt.
+    """
+    classes = np.asarray(classes).reshape(kt, nt)
+    okt, ont, first, last = [], [], [], []
+    for ni in range(nt):
+        col_cls = classes[:, ni]
+        ks = np.argsort(col_cls, kind="stable")       # slow class first
+        for pos, ki in enumerate(ks):
+            okt.append(ki)
+            ont.append(ni)
+            first.append(1 if pos == 0 else 0)
+            last.append(1 if pos == kt - 1 else 0)
+    return (np.asarray(okt, np.int32), np.asarray(ont, np.int32),
+            np.asarray(first, np.int32), np.asarray(last, np.int32))
+
+
+def natural_schedule(kt: int, nt: int):
+    """Unscheduled baseline order (column-major, K ascending)."""
+    return make_schedule(np.zeros(kt * nt, np.int32), kt, nt)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: W8A8 integer matmul baseline.
+
+``out = (x_q (M,K) int8 @ w_q (K,N) int8) * x_scale (M,1) * w_scale (1,N)``
+with int32 MXU accumulation and a fused dequant epilogue on the final
+K step.  This is the baseline HALO is compared against on hardware: same
+memory layout discipline, no codebook, no DVFS classes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128
+
+
+def _int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
+    k_steps = pl.num_programs(2)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(kk == k_steps - 1)
+    def _():
+        deq = (acc_ref[...].astype(jnp.float32)
+               * xs_ref[...].astype(jnp.float32)
+               * ws_ref[...].astype(jnp.float32))
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret",
+                                    "out_dtype"))
+def int8_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                x_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                bm: int = 128, bn: int = TILE, bk: int = TILE,
+                out_dtype=jnp.float32, interpret: bool = False
+                ) -> jnp.ndarray:
+    """x_q (M,K) int8, w_q (K,N) int8, x_scale (M,1) f32, w_scale (1,N) f32."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    if pm or pk:
+        x_q = jnp.pad(x_q, ((0, pm), (0, pk)))
+        x_scale = jnp.pad(x_scale, ((0, pm), (0, 0)), constant_values=1.0)
+    if pk or pn:
+        w_q = jnp.pad(w_q, ((0, pk), (0, pn)))
+        w_scale = jnp.pad(w_scale, ((0, 0), (0, pn)), constant_values=1.0)
+    mp, kp, np_ = m + pm, k + pk, n + pn
+
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)
+    return out[:m, :n]

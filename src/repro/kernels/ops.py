@@ -1,0 +1,134 @@
+"""Public kernel API: packing from core.HaloQuantized + jit'd dispatch.
+
+``pack_halo`` converts a HaloQuantized tensor into the deployment layout
+(packed 4-bit indices, per-tile scale matrix, class-grouped schedule, sparse
+chunks); ``halo_matmul`` runs the Pallas dense kernel + SpMV kernel and adds
+the two streams.  On CPU (this container) kernels run in interpret mode;
+on TPU the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import tiling
+from ..core.quantize import HaloQuantized
+from . import halo_matmul as hk
+from . import spmv as sk
+from .int8_matmul import int8_matmul
+from .halo_matmul import TILE
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HaloPacked:
+    """Deployment layout of one quantized matrix."""
+
+    idx_packed: jnp.ndarray          # (Kp, Np//2) uint8
+    scale: jnp.ndarray               # (kt*nt, TILE) f32 per-tile-column
+    order_kt: jnp.ndarray            # schedule (class-grouped)
+    order_nt: jnp.ndarray
+    order_first: jnp.ndarray
+    order_last: jnp.ndarray
+    chunks: Optional[sk.SparseChunks]
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True),
+                                               default=(0, 0))
+
+    @property
+    def padded_shape(self) -> Tuple[int, int]:
+        kp = self.idx_packed.shape[0]
+        return kp, self.idx_packed.shape[1] * 2
+
+
+def pack_halo(hq: HaloQuantized, scheduled: bool = True) -> HaloPacked:
+    """HaloQuantized (tile=128) -> deployment layout."""
+    if hq.tile != TILE:
+        raise ValueError(f"kernel requires tile=128, got {hq.tile}")
+    k, n = hq.shape
+    kt, nt = tiling.grid_dims(k, n, TILE)
+
+    idx_full = tiling.from_tiles(hq.idx.astype(jnp.int32), (kt * TILE, nt * TILE),
+                                 TILE).astype(jnp.uint8)
+    # F1-class zero index is 8 ("0" entry); padding already encodes idx from
+    # zero-padded weights which quantize to index 8 -> decode to 0.  Pack
+    # pairs along N: byte j = lo(2j) | hi(2j+1) << 4.
+    lo = idx_full[:, 0::2]
+    hi = idx_full[:, 1::2]
+    idx_packed = (lo | (hi << jnp.uint8(4))).astype(jnp.uint8)
+
+    scale = hq.scale_per_column()                 # (kt*nt, TILE)
+    classes = np.asarray(jax.device_get(hq.classes))
+    if scheduled:
+        okt, ont, of, ol = hk.make_schedule(classes, kt, nt)
+    else:
+        okt, ont, of, ol = hk.natural_schedule(kt, nt)
+
+    sp = hq.sparse
+    nnz = int(sp.row.shape[0])
+    chunks = None
+    if nnz:
+        vals = (np.asarray(jax.device_get(sp.val), np.float32)
+                * np.asarray(jax.device_get(sp.chan_scale), np.float32)[
+                    np.asarray(jax.device_get(sp.col))])
+        chunks = sk.bucket_sparse(np.asarray(jax.device_get(sp.row)),
+                                  np.asarray(jax.device_get(sp.col)),
+                                  vals, (kt * TILE, nt * TILE))
+    return HaloPacked(idx_packed=idx_packed, scale=scale,
+                      order_kt=jnp.asarray(okt), order_nt=jnp.asarray(ont),
+                      order_first=jnp.asarray(of), order_last=jnp.asarray(ol),
+                      chunks=chunks, shape=(k, n))
+
+
+def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
+                bm: int = 128, interpret: Optional[bool] = None,
+                out_dtype=None) -> jnp.ndarray:
+    """x (..., K) @ W_halo -> (..., N); dense codebook kernel + SpMV kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    out_dtype = out_dtype or x.dtype
+    k, n = packed.shape
+    kp, np_ = packed.padded_shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if kp != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+    bm_eff = min(bm, max(8, 1 << (int(np.prod(lead)) - 1).bit_length())) \
+        if lead else bm
+    out = hk.halo_matmul_packed(
+        x2, packed.idx_packed, packed.scale, packed.order_kt,
+        packed.order_nt, packed.order_first, packed.order_last,
+        bm=bm_eff, out_dtype=jnp.float32, interpret=interpret)
+    if packed.chunks is not None:
+        out = out + sk.spmv_matmul(x2, packed.chunks, bm=bm_eff,
+                                   out_dtype=jnp.float32,
+                                   interpret=interpret)
+    return out[:, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def quantize_activations_int8(x: jnp.ndarray
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token symmetric int8 activation quantization (for int8_matmul)."""
+    absmax = jnp.abs(x).max(axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def w8a8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Quantize activations per-token and run the int8 kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q, x_scale = quantize_activations_int8(x2)
+    out = int8_matmul(x_q, w_q, x_scale, w_scale.reshape(1, -1),
+                      interpret=interpret)
+    return out.reshape(lead + (w_q.shape[1],)).astype(x.dtype)

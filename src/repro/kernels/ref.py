@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import codebooks, tiling
+from .spmv import SparseChunks, TILE
+
+
+def halo_matmul_ref(x: jnp.ndarray, idx: jnp.ndarray, scale: jnp.ndarray,
+                    shape, tile: int) -> jnp.ndarray:
+    """x (M, K) @ dequant(idx (n_tiles,t,t), scale (n_tiles,)) -> (M, N)."""
+    table = jnp.asarray(codebooks.shared_table(), jnp.float32)
+    tiles = table[idx] * scale[:, None, None]
+    w = tiling.from_tiles(tiles, shape, tile)
+    return jnp.matmul(x.astype(jnp.float32), w)
+
+
+def halo_matmul_padded_ref(x: jnp.ndarray, idx_packed: jnp.ndarray,
+                           scale_rows: jnp.ndarray) -> jnp.ndarray:
+    """Same contract as kernels.halo_matmul.halo_matmul_packed.
+    scale_rows: (kt*nt, TILE) per-tile-column scales."""
+    lo = idx_packed & jnp.uint8(0xF)
+    hi = idx_packed >> jnp.uint8(4)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(idx_packed.shape[0],
+                                               idx_packed.shape[1] * 2)
+    table = jnp.asarray(codebooks.shared_table(), jnp.float32)
+    w = table[idx]
+    kp, npk = w.shape
+    kt, nt = kp // TILE, npk // TILE
+    sc = scale_rows.reshape(kt, nt, TILE)
+    w = (w.reshape(kt, TILE, nt, TILE)
+          * sc[:, None, :, :]).reshape(kp, npk)
+    return jnp.matmul(x.astype(jnp.float32), w)
+
+
+def spmv_ref(x: jnp.ndarray, chunks: SparseChunks) -> jnp.ndarray:
+    """Dense reconstruction of the chunked sparse weight, then matmul."""
+    kpad, npad = chunks.shape
+    w = jnp.zeros((kpad, npad), jnp.float32)
+    rows = (chunks.chunk_kt[:, None] * TILE + chunks.rows).reshape(-1)
+    cols = (chunks.chunk_nt[:, None] * TILE + chunks.cols).reshape(-1)
+    vals = chunks.vals.reshape(-1)
+    w = w.at[rows, cols].add(vals)
+    return jnp.matmul(x.astype(jnp.float32), w)
+
+
+def int8_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                    x_scale: jnp.ndarray, w_scale: jnp.ndarray) -> jnp.ndarray:
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale * w_scale

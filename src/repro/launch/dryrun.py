@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  This module is the ONLY place the 512-device host platform is
+# requested -- tests/benchmarks see the real single CPU device.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from ..analysis import roofline as RL                     # noqa: E402
+from ..configs import ASSIGNED_ARCHS, get_config          # noqa: E402
+from ..configs.base import ModelConfig, ShapeConfig       # noqa: E402
+from ..dist import sharding as sh                         # noqa: E402
+from ..models import module as M                          # noqa: E402
+from ..models import transformer as T                     # noqa: E402
+from ..serving.engine import serve_step                   # noqa: E402
+from . import inputs as I                                 # noqa: E402
+from .mesh import make_production_mesh                    # noqa: E402
+from .train import TrainConfig, abstract_train_state, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), prove the sharding config is
+coherent, and record memory/cost/collective statistics for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k --mesh single
+"""
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _active_params(cfg: ModelConfig, specs) -> float:
+    """Active (routed) parameter count for MODEL_FLOPS on MoE archs."""
+    total = M.param_count(specs)
+    if cfg.moe is None:
+        return float(total)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: hasattr(x, "logical_axes"))[0]
+    expert_params = sum(
+        int(np.prod(s.shape)) for p, s in flat
+        if "experts" in (s.logical_axes or ()))
+    active = (total - expert_params
+              + expert_params * cfg.moe.top_k / cfg.moe.n_experts)
+    return float(active)
+
+
+def _train_cfg_for(cfg: ModelConfig, specs) -> TrainConfig:
+    from ..optim.adamw import AdamWConfig
+    n = M.param_count(specs)
+    big = n > 50e9
+    return TrainConfig(
+        grad_accum=cfg.grad_accum,
+        accum_dtype=jnp.bfloat16 if big else jnp.float32,
+        # 200B+ on a single 256-chip pod only fits with a factored second
+        # moment (EXPERIMENTS.md SDry-run): adamw bf16 moments need 10.6
+        # GiB/chip of state for nemotron-340b; adafactor needs ~6.2 GiB.
+        optimizer="adafactor" if n > 200e9 else "adamw",
+        adamw=AdamWConfig(
+            moment_dtype=jnp.bfloat16 if big else jnp.float32))
+
+
+def _sharded_bytes(tree) -> float:
+    """Per-device bytes of a ShapeDtypeStruct tree (honoring shardings)."""
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        shp = tuple(leaf.shape)
+        if getattr(leaf, "sharding", None) is not None:
+            shp = leaf.sharding.shard_shape(shp)
+        total += float(np.prod(shp)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _shardings_of(sds_tree):
+    """Sharding pytree from a ShapeDtypeStruct tree (for out_shardings --
+    without pinning outputs, GSPMD may replicate scan-carried caches)."""
+    return jax.tree.map(lambda s: s.sharding, sds_tree)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+               serve_quantized: bool = False):
+    """Returns (lowered, step_kind, tokens_for_model_flops, donated_bytes)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        specs = T.model_specs(cfg)
+        tcfg = _train_cfg_for(cfg, specs)
+        state = abstract_train_state(cfg, tcfg, mesh, rules)
+        batch = I.batch_specs(cfg, shape, mesh, rules)
+        step = make_train_step(cfg, tcfg)
+        metrics_sh = {"grad_norm": repl, "step": repl, "loss": repl,
+                      "lr": repl}
+        lowered = jax.jit(
+            step, donate_argnums=(0,),
+            out_shardings=(_shardings_of(state), metrics_sh),
+        ).lower(state, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return lowered, "train", tokens, _sharded_bytes(state)
+    if shape.kind == "prefill":
+        specs = T.model_specs(cfg)
+        p_sds = sh.abstract_with_sharding(specs, mesh, rules)
+        batch = I.batch_specs(cfg, shape, mesh, rules, with_labels=False)
+        _, cache_sds, lengths_sds = I.decode_input_specs(
+            cfg, shape, mesh, rules)
+        logits_sh = sh.logical_to_sharding(
+            ("batch", "act_vocab"),
+            (shape.global_batch, cfg.padded_vocab), mesh, rules)
+        fn = functools.partial(T.prefill, cfg=cfg, max_seq=shape.seq_len)
+        lowered = jax.jit(
+            lambda p, b: fn(p, batch=b),
+            out_shardings=(logits_sh, _shardings_of(cache_sds),
+                           lengths_sds.sharding),
+        ).lower(p_sds, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return lowered, "prefill", tokens, 0.0
+    if shape.kind == "decode":
+        specs = T.model_specs(cfg)
+        if serve_quantized:
+            from ..core.deploy import deploy_model_specs
+            specs = deploy_model_specs(specs)
+        p_sds = sh.abstract_with_sharding(specs, mesh, rules)
+        inputs, cache, lengths = I.decode_input_specs(cfg, shape, mesh, rules)
+        logits_sh = sh.logical_to_sharding(
+            ("batch", "act_vocab"),
+            (shape.global_batch, cfg.padded_vocab), mesh, rules)
+        fn = functools.partial(serve_step, cfg=cfg)
+        lowered = jax.jit(
+            lambda p, i, c, l: fn(p, inputs=i, cache=c, lengths=l),
+            donate_argnums=(2,),
+            out_shardings=(logits_sh, _shardings_of(cache),
+                           lengths.sharding),
+        ).lower(p_sds, inputs, cache, lengths)
+        tokens = shape.global_batch          # one new token per sequence
+        return lowered, "decode", tokens, _sharded_bytes(cache)
+    raise ValueError(shape.kind)
+
+
+def analytic_peak(cfg: ModelConfig, shape: ShapeConfig, kind: str,
+                  mesh, rules, state_bytes: float, cache_bytes: float,
+                  accum_itemsize: int) -> float:
+    """Structural per-device TPU residency estimate (documents the gap to
+    XLA:CPU's no-aliasing `temp`): persistent state + gradient accumulator
+    + saved layer-boundary activations + transient working set."""
+    chips = int(np.prod(list(mesh.shape.values())))
+    dp = chips // mesh.shape.get("model", 1)
+    d = cfg.d_model
+    if kind == "train":
+        micro_tokens = shape.global_batch * shape.seq_len \
+            / max(cfg.grad_accum, 1)
+        act = cfg.n_layers * (micro_tokens / dp) * d * 2      # bf16 carries
+        specs = T.model_specs(cfg)
+        grads = M.param_count(specs) * accum_itemsize / chips
+        logits = (micro_tokens / dp) * cfg.padded_vocab * 4 \
+            / mesh.shape.get("model", 1)
+        return state_bytes + grads + act * 1.5 + logits + 1e9
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        act = (tokens / dp) * d * 2 * 6       # ~6 live residual-width bufs
+        params = M.param_bytes(T.model_specs(cfg)) / chips
+        return params + cache_bytes + act
+    # decode
+    params = M.param_bytes(T.model_specs(cfg)) / chips
+    return params + cache_bytes + 1e9
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR, verbose: bool = True,
+             rules_override=None, cfg_transform=None,
+             serve_quantized: bool = False,
+             tag: str = "") -> Optional[dict]:
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    if not cfg.supports_shape(shape_name):
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: not runnable "
+                  f"(see DESIGN.md SArch-applicability)")
+        return None
+    shape = cfg.shape(shape_name)
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_override or I.arch_rules(cfg, kind=shape.kind)
+
+    t0 = time.time()
+    with sh.use_rules(mesh, rules):
+        lowered, kind, tokens, donated = lower_cell(
+            cfg, shape, mesh, rules, serve_quantized=serve_quantized)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        cost = None
+    hlo_text = compiled.as_text()
+
+    specs = T.model_specs(cfg)
+    n_active = _active_params(cfg, specs)
+    mflops = RL.model_flops(M.param_count(specs), n_active, tokens, kind)
+    tcfg = _train_cfg_for(cfg, specs)
+    accum_isz = jnp.dtype(tcfg.accum_dtype).itemsize
+    cache_bytes = donated if kind == "decode" else 0.0
+    if kind == "prefill":
+        _, cache_sds, _ = I.decode_input_specs(cfg, shape, mesh, rules)
+        cache_bytes = _sharded_bytes(cache_sds)
+    peak = analytic_peak(cfg, shape, kind, mesh, rules,
+                         state_bytes=donated if kind == "train" else 0.0,
+                         cache_bytes=cache_bytes, accum_itemsize=accum_isz)
+    report = RL.build_report(
+        arch=arch + (f"@{tag}" if tag else ""), shape=shape_name,
+        mesh_name=mesh_name, chips=chips,
+        step_kind=kind, hlo_text=hlo_text, memory_stats=mem,
+        cost_analysis=cost, model_flops_global=mflops,
+        donated_bytes=donated, analytic_peak_bytes=peak, notes=tag)
+    path = RL.save_report(report, out_dir)
+
+    if verbose:
+        gb = 1 / (1 << 30)
+        print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {report.argument_bytes*gb:.2f}GiB "
+              f"temp {report.temp_bytes*gb:.2f}GiB "
+              f"fits={report.fits_hbm} | dominant={report.dominant} "
+              f"roofline={report.roofline_fraction*100:.1f}% -> {path}")
+    return report.as_dict()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in cfg.shapes])
+        for shape in shapes:
+            for mesh_name in meshes:
+                try:
+                    run_cell(arch, shape, mesh_name, args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

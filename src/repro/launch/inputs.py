@@ -1,0 +1,92 @@
+"""Abstract input specs (ShapeDtypeStruct + sharding) for every
+(arch x shape x step-kind) cell -- the dry-run's allocation-free stand-ins.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist import sharding as sh
+from ..models import transformer as T
+
+
+def _sds(shape, dtype, axes, mesh: Optional[Mesh], rules) -> jax.ShapeDtypeStruct:
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    s = sh.logical_to_sharding(axes, shape, mesh, rules)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=s)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None, rules=None,
+                with_labels: bool = True,
+                microbatch: Optional[int] = None) -> Dict[str, Any]:
+    """Train/prefill batch stand-ins.  `microbatch` overrides global batch
+    (the train step reshapes (accum, micro, ...) internally -- specs here are
+    the *global* batch; grad-accum split happens inside train_step)."""
+    b = microbatch or shape.global_batch
+    s = shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.embeds_input:
+        out["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype,
+                             ("batch", "act_seq", "act_embed"), mesh, rules)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, ("batch", "act_seq"),
+                             mesh, rules)
+    out["positions"] = _sds((b, s), jnp.int32, ("batch", "act_seq"),
+                            mesh, rules)
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32, ("batch", "act_seq"),
+                             mesh, rules)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       mesh: Optional[Mesh] = None, rules=None
+                       ) -> Tuple[Dict[str, Any], Any, Any]:
+    """(inputs, cache, lengths) stand-ins for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embeds_input:
+        inputs = {"embeds": _sds((b, cfg.d_model), cfg.dtype,
+                                 ("batch", "act_embed"), mesh, rules)}
+    else:
+        inputs = {"tokens": _sds((b,), jnp.int32, ("batch",), mesh, rules)}
+    cache_sds = T.cache_specs(cfg, b, s)
+    cache_axes = T.cache_logical_axes(cfg)
+    if mesh is not None:
+        cache_sds = jax.tree.map(
+            lambda sds, axes: _sds(sds.shape, sds.dtype, axes, mesh, rules),
+            cache_sds, cache_axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    lengths = _sds((b,), jnp.int32, ("batch",), mesh, rules)
+    return inputs, cache_sds, lengths
+
+
+def arch_rules(cfg: ModelConfig, kind: Optional[str] = None):
+    """Per-arch logical-rule overrides (small-head archs keep attention
+    replicated over TP; KV caches shard by sequence instead).
+
+    Note: naive GSPMD sequence parallelism (act_seq -> model) was measured
+    *worse* for prefill here -- the blockwise attention's block gathers
+    force full re-replication collectives (see EXPERIMENTS.md SPerf).
+    Prefill memory is bounded by batch-microbatching instead
+    (cfg.prefill_microbatch).
+    """
+    over = {}
+    if not cfg.shard_heads:
+        over.update({"heads": None, "act_heads": None})
+    if kind == "train" and cfg.train_layout == "zero":
+        over.update({"batch": ("data", "model"), "act_heads": None,
+                     "act_mlp": None, "act_vocab": None})
+    if kind == "decode":
+        # weight-resident serving: params live TP-sharded (no FSDP axis), so
+        # decode never all-gathers weights; the data axis forms independent
+        # serving replicas.  Feasible for 100B+ archs only with 4-bit HALO
+        # weights -- bf16 would need 15+ GiB/chip for params alone (SPerf).
+        over.update({"embed": None})
+    return sh.make_rules(**over)

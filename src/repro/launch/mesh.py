@@ -1,0 +1,36 @@
+"""Production meshes.  Functions, not module constants -- importing this
+module never touches jax device state (required so smoke tests see 1 CPU
+device while the dry-run sees 512 host devices)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model") = 256 chips.
+    Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None, model_parallel: int = 16):
+    """Largest viable (data, model) mesh for the available device count --
+    the elastic-scaling path after losing hosts (dist.fault)."""
+    from ..dist.fault import viable_device_counts
+
+    avail = n_devices if n_devices is not None else len(jax.devices())
+    usable = viable_device_counts(avail, model_parallel)
+    if not usable:
+        # tiny meshes (tests): fall back to (1, avail)
+        return jax.make_mesh((1, avail), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    n = usable[0]
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,3 @@
+"""Model definitions: unified decoder, SSM/RG-LRU blocks, MoE, frontends."""
+
+from . import attention, layers, module, moe, rglru, scan_ops, ssm, transformer  # noqa: F401

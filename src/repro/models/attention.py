@@ -1,0 +1,203 @@
+"""Attention: triangular blockwise (flash-style) training/prefill attention,
+single-step decode attention, and the sequence-sharded decode combine.
+
+The blockwise path never materializes the (S, S) score matrix: it scans over
+the *lower-triangular list of (q-block, kv-block) pairs* carrying online
+softmax statistics, so memory is O(S * chunk) and FLOPs are exactly the
+causal (optionally windowed) blocks -- no masked-out waste.  This is the
+TPU-idiomatic pure-JAX flash scheme; a Pallas kernel can swap in underneath
+without changing callers.
+
+GQA/MQA: q heads are grouped over kv heads.  Soft-capping (gemma-2) applies
+to attention logits when configured.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import softcap
+
+NEG_INF = -1e30
+
+
+def _block_pairs(n_blocks: int, window_blocks: Optional[int]) -> np.ndarray:
+    """Static (P, 2) int32 list of causal (i, j) block pairs, row-major."""
+    pairs = []
+    for i in range(n_blocks):
+        j0 = 0 if window_blocks is None else max(0, i - window_blocks)
+        for j in range(j0, i + 1):
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "window", "attn_softcap", "scale_override"))
+def causal_blockwise_attention(
+    q: jnp.ndarray,             # (B, S, H, D)
+    k: jnp.ndarray,             # (B, S, Hkv, D)
+    v: jnp.ndarray,             # (B, S, Hkv, D)
+    chunk: int = 1024,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale_override: Optional[float] = None,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, O(S*chunk) memory."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    # GQA: repeat kv to the full head count.  A (h) -> (hkv, g) reshape
+    # would break 16-way TP head sharding (GSPMD cannot split one mesh axis
+    # across two dims) and trigger full-replication resharding; repeat-kv
+    # keeps every tensor's head axis shardable -- the Megatron-style choice
+    # when TP degree > kv heads.  kv duplication is transient/compute-only.
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    t = sp // chunk
+    scale = scale_override if scale_override is not None else 1.0 / np.sqrt(d)
+
+    # blocks-first layout: (T, B, H, chunk, D)
+    qb = q.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    window_blocks = None if window is None else -(-window // chunk)
+    pairs = jnp.asarray(_block_pairs(t, window_blocks))
+
+    m0 = jnp.full((t, b, h, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, b, h, chunk), jnp.float32)
+    a0 = jnp.zeros((t, b, h, chunk, d), jnp.float32)
+    pos = jnp.arange(chunk)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        # bf16 MXU inputs, f32 accumulation (native TPU dot path) -- keeps
+        # the block tensors half-width in HBM vs. upcasting q/k/v
+        sij = jnp.einsum("bhqd,bhsd->bhqs", qi, kj,
+                         preferred_element_type=jnp.float32) * scale
+        if attn_softcap is not None:
+            sij = softcap(sij, attn_softcap)
+        qpos = i * chunk + pos[:, None]
+        kpos = j * chunk + pos[None, :]
+        mask = qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        mask &= kpos < s          # padded keys
+        sij = jnp.where(mask, sij, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(mi, sij.max(axis=-1))
+        p = jnp.exp(sij - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bhqs,bhsd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,             # (B, H, D) one new token per sequence
+    k_cache: jnp.ndarray,       # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,       # (B, S, Hkv, D)
+    length: jnp.ndarray,        # (B,) valid cache lengths
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a (possibly partially filled) KV cache.
+
+    GQA grouping is expressed as a q-side reduction instead of a kv repeat:
+    the cache stays at its true kv-head count (kv_seq-sharded), scores are
+    computed per kv head by summing nothing -- we fold the g query heads per
+    kv head via einsum with an explicit group axis ON THE Q SIDE ONLY, so no
+    (h)->(hkv,g) reshape ever touches a sharded activation axis (q heads are
+    replicated in decode for the small-head archs and TP-sharded caches
+    shard over kv_seq, not heads)."""
+    b, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(d)
+    # keep the cache in its storage dtype: upcasting it would let XLA hoist
+    # a whole-cache fp32 convert out of the layer scan (2x cache memory);
+    # the MXU accumulates in fp32 via preferred_element_type regardless.
+    qg = q.reshape(b, hkv, g, d).astype(k_cache.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    kpos = jnp.arange(k_cache.shape[1])[None, :]
+    mask = kpos < length[:, None]
+    if window is not None:
+        mask &= kpos >= (length[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attention_partial(
+    q: jnp.ndarray, k_local: jnp.ndarray, v_local: jnp.ndarray,
+    valid_mask: jnp.ndarray,
+    attn_softcap: Optional[float] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Local flash-decode statistics over a KV-cache *shard*.
+
+    Returns (m, l, pv): row max, exp-sum and weighted V of the local chunk --
+    combined across shards by `combine_decode_partials` (inside shard_map
+    over the KV-sequence axis).
+    """
+    b, h, d = q.shape
+    hkv = k_local.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, g, d).astype(k_local.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_local,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    pv = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_local.dtype), v_local,
+                    preferred_element_type=jnp.float32)
+    return m, l, pv
+
+
+def combine_decode_partials(m, l, pv, axis_name: str) -> jnp.ndarray:
+    """LSE-combine flash-decode partials across `axis_name` shards."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    pv_g = jax.lax.psum(pv * corr[..., None], axis_name)
+    out = pv_g / jnp.maximum(l_g[..., None], 1e-30)
+    b, hkv, g, d = out.shape
+    return out.reshape(b, hkv * g, d)

@@ -1,0 +1,201 @@
+"""Flash attention with a hand-written VJP (pure JAX, TPU-fusion friendly).
+
+The autodiff of the blockwise forward stores every block's probability
+matrix (and mask) for the backward -- O(S * S) f32 traffic per layer that
+dominated the training memory roofline (EXPERIMENTS.md SPerf).  This module
+saves only (q, k, v, out, lse) and *recomputes* p per block in the backward,
+exactly like FlashAttention's dq/dk/dv recursion:
+
+  D_i   = rowsum(dout_i * out_i)
+  p_ij  = exp(q_i k_j^T * scale - lse_i)
+  dv_j += p_ij^T dout_i
+  dp    = dout_i v_j^T
+  ds    = p_ij * (dp - D_i) * scale        (softcap chain rule included)
+  dq_i += ds k_j ;  dk_j += ds^T q_i
+
+Inputs stay in their storage dtype (bf16) with fp32 MXU accumulation.
+GQA is handled by the caller (repeat-kv), windows/softcap are static.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _block_pairs(n_blocks: int, window_blocks: Optional[int]) -> np.ndarray:
+    pairs = []
+    for i in range(n_blocks):
+        j0 = 0 if window_blocks is None else max(0, i - window_blocks)
+        for j in range(j0, i + 1):
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32)
+
+
+@functools.lru_cache(maxsize=64)
+def make_flash_attention(chunk: int, window: Optional[int],
+                         attn_softcap: Optional[float],
+                         scale: float):
+    """Returns flash(q, k, v) for (B, S, H, D) bf16/f32 inputs, S % chunk == 0
+    handled by caller padding.  k/v must already be at full head count."""
+
+    def _mask(i, j, pos, s_valid):
+        qpos = i * chunk + pos[:, None]
+        kpos = j * chunk + pos[None, :]
+        m = qpos >= kpos
+        if window is not None:
+            m &= (qpos - kpos) < window
+        m &= kpos < s_valid
+        return m
+
+    def _scores(qi, kj, i, j, pos, s_valid):
+        sij = jnp.einsum("bhqd,bhsd->bhqs", qi, kj,
+                         preferred_element_type=jnp.float32) * scale
+        pre = sij
+        if attn_softcap is not None:
+            sij = attn_softcap * jnp.tanh(sij / attn_softcap)
+        sij = jnp.where(_mask(i, j, pos, s_valid), sij, NEG_INF)
+        return sij, pre
+
+    def forward(q, k, v, s_valid):
+        b, s, h, d = q.shape
+        t = s // chunk
+        qb = q.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        kb = k.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        vb = v.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        pairs = jnp.asarray(_block_pairs(
+            t, None if window is None else -(-window // chunk)))
+        m0 = jnp.full((t, b, h, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((t, b, h, chunk), jnp.float32)
+        a0 = jnp.zeros((t, b, h, chunk, d), jnp.float32)
+        pos = jnp.arange(chunk)
+
+        def step(carry, pair):
+            # the flash_vmem scope marks this block pipeline as Pallas-
+            # kernel-resident (kernels/flash_attention.py): the roofline
+            # charges only the block DMAs, not the VMEM intermediates.
+            with jax.named_scope("flash_vmem"):
+                m, l, acc = carry
+                i, j = pair[0], pair[1]
+                qi = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+                kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+                vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+                sij, _ = _scores(qi, kj, i, j, pos, s_valid)
+                mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+                li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+                ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+                m_new = jnp.maximum(mi, sij.max(axis=-1))
+                p = jnp.exp(sij - m_new[..., None])
+                corr = jnp.exp(mi - m_new)
+                l_new = li * corr + p.sum(axis=-1)
+                a_new = ai * corr[..., None] + jnp.einsum(
+                    "bhqs,bhsd->bhqd", p.astype(vj.dtype), vj,
+                    preferred_element_type=jnp.float32)
+                m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+                l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+                acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+                return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (t, b, h, chunk)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out_full = out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+        return out_full.astype(q.dtype), lse
+
+    def fwd(q, k, v, s_valid):
+        out, lse = forward(q, k, v, s_valid)
+        return out, (q, k, v, out, lse, s_valid)
+
+    def bwd(res, dout):
+        q, k, v, out, lse, s_valid = res
+        b, s, h, d = q.shape
+        t = s // chunk
+        qb = q.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        kb = k.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        vb = v.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        dob = dout.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        ob = out.reshape(b, t, chunk, h, d).transpose(1, 0, 3, 2, 4)
+        # D_i = rowsum(dout * out), fp32
+        D = jnp.einsum("tbhqd,tbhqd->tbhq", dob.astype(jnp.float32),
+                       ob.astype(jnp.float32))
+        pairs = jnp.asarray(_block_pairs(
+            t, None if window is None else -(-window // chunk)))
+        pos = jnp.arange(chunk)
+        dq0 = jnp.zeros((t, b, h, chunk, d), jnp.float32)
+        dk0 = jnp.zeros((t, b, h, chunk, d), jnp.float32)
+        dv0 = jnp.zeros((t, b, h, chunk, d), jnp.float32)
+
+        def step(carry, pair):
+            with jax.named_scope("flash_vmem"):
+                dq, dk, dv = carry
+                i, j = pair[0], pair[1]
+                qi = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+                kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+                vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+                doi = jax.lax.dynamic_index_in_dim(dob, i, 0, keepdims=False)
+                lsei = jax.lax.dynamic_index_in_dim(lse, i, 0, keepdims=False)
+                Di = jax.lax.dynamic_index_in_dim(D, i, 0, keepdims=False)
+                sij, pre = _scores(qi, kj, i, j, pos, s_valid)
+                p = jnp.exp(sij - lsei[..., None])      # (b,h,q,s) f32
+                dp = jnp.einsum("bhqd,bhsd->bhqs", doi, vj,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - Di[..., None])
+                if attn_softcap is not None:
+                    # d/dx [c*tanh(x/c)] = 1 - tanh^2(x/c)
+                    th = jnp.tanh(pre * (1.0 / attn_softcap))
+                    ds = ds * (1.0 - th * th)
+                ds = ds * scale
+                pd = p.astype(doi.dtype)
+                dsd = ds.astype(qi.dtype)
+                dv_j = jnp.einsum("bhqs,bhqd->bhsd", pd, doi,
+                                  preferred_element_type=jnp.float32)
+                dq_i = jnp.einsum("bhqs,bhsd->bhqd", dsd, kj,
+                                  preferred_element_type=jnp.float32)
+                dk_j = jnp.einsum("bhqs,bhqd->bhsd", dsd, qi,
+                                  preferred_element_type=jnp.float32)
+                dq = dq.at[i].add(dq_i)
+                dk = dk.at[j].add(dk_j)
+                dv = dv.at[j].add(dv_j)
+                return (dq, dk, dv), None
+
+        (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), pairs)
+
+        def back(x):
+            return (x.transpose(1, 0, 3, 2, 4)
+                     .reshape(b, s, h, d))
+
+        return (back(dq).astype(q.dtype), back(dk).astype(k.dtype),
+                back(dv).astype(v.dtype), None)
+
+    @jax.custom_vjp
+    def flash(q, k, v, s_valid):
+        return forward(q, k, v, s_valid)[0]
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    chunk: int = 1024, window: Optional[int] = None,
+                    attn_softcap: Optional[float] = None) -> jnp.ndarray:
+    """Drop-in causal attention: (B,S,H,D) x (B,S,Hkv,D)^2 -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+    fn = make_flash_attention(c, window, attn_softcap,
+                              float(1.0 / np.sqrt(d)))
+    out = fn(q, k, v, s)
+    return out[:, :s]

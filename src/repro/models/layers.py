@@ -1,0 +1,202 @@
+"""Shared neural-net layers: norms, activations, rotary embeddings, dense.
+
+All functional: ``f(params_subtree, x, ...) -> y``.  Dense weights may be
+``HaloQuantized``/``StackedHalo`` (dequantized on the fly on the reference
+path; the Pallas kernel path is wired in kernels/ops.py) so that a quantized
+model runs through exactly the same forward code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.apply import StackedHalo
+from ..core.quantize import HaloQuantized
+from .module import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# weights that may be quantized
+# ---------------------------------------------------------------------------
+
+def materialize(w: Any, dtype=None) -> jnp.ndarray:
+    """Dense view of a (possibly quantized) weight leaf."""
+    if isinstance(w, (HaloQuantized, StackedHalo)):
+        w = w.dequantize()
+    else:
+        from ..core.deploy import DeployQuantWeight
+        if isinstance(w, DeployQuantWeight):
+            w = w.dequantize(dtype or jnp.bfloat16)
+    return w if dtype is None else w.astype(dtype)
+
+
+def dense(x: jnp.ndarray, w: Any, compute_dtype=None) -> jnp.ndarray:
+    """x @ w with automatic dequantization of HALO weights.
+
+    Honors the A8 fake-quant context (quant.common.activations_quantized)
+    and the activation-statistics recorder (quant.calibrate) so baselines and
+    calibration reuse the exact model forward.  DeployQuantWeight matmuls
+    run under the halo_vmem scope: on TPU the Pallas halo_matmul kernel
+    dequantizes in VMEM (kernels/halo_matmul.py), so the roofline charges
+    only the 4-bit weight stream, not the XLA dequant intermediates.
+    """
+    from ..quant import common as qcommon
+    from ..quant import calibrate as qcal
+    from ..core.deploy import DeployQuantWeight
+    qcal.maybe_record(w, x)
+    x = qcommon.maybe_quantize_activation(x)
+    cd = compute_dtype or x.dtype
+    if isinstance(w, DeployQuantWeight):
+        with jax.named_scope("halo_vmem"):
+            wd = w.dequantize(cd)
+            return jnp.matmul(x.astype(cd), wd)
+    wd = materialize(w)
+    return jnp.matmul(x.astype(cd), wd.astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int, axis: str = "embed") -> ParamSpec:
+    return ParamSpec((d,), (axis,), init="ones")
+
+
+def _rmsnorm_impl(scale, x, eps, plus_one):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * s).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6,
+            plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm with a hand-written VJP.
+
+    The custom backward computes in fp32 but *returns the cotangent in the
+    activation dtype* -- default autodiff leaks fp32 residual-width
+    cotangents into every TP gradient all-reduce (2x collective bytes and
+    2x boundary HBM traffic measured on granite train; EXPERIMENTS.md
+    SPerf)."""
+    return _rmsnorm_impl(scale, x, eps, plus_one)
+
+
+def _rmsnorm_fwd(scale, x, eps, plus_one):
+    return _rmsnorm_impl(scale, x, eps, plus_one), (scale, x)
+
+
+def _rmsnorm_bwd(eps, plus_one, res, dy):
+    scale, x = res
+    xf = x.astype(jnp.float32)
+    g = dy.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = xf * r
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one \
+        else scale.astype(jnp.float32)
+    gs = g * s
+    dx = r * (gs - xhat * jnp.mean(xhat * gs, axis=-1, keepdims=True))
+    dscale = jnp.sum((g * xhat).reshape(-1, x.shape[-1]), axis=0)
+    return dscale.astype(scale.dtype), dx.astype(x.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def layernorm(scale: jnp.ndarray, bias: jnp.ndarray, x: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "squared_relu":      # Primer / nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec((vocab, d), ("vocab", "embed"), dtype=dtype,
+                     init="normal", init_scale=0.02)
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(x: jnp.ndarray, table_or_head: Any) -> jnp.ndarray:
+    """(..., d) -> (..., vocab).  Accepts an (V, d) tied table or (d, V) head."""
+    w = materialize(table_or_head)
+    if w.shape[0] == x.shape[-1]:
+        return jnp.matmul(x, w.astype(x.dtype))
+    return jnp.matmul(x, w.T.astype(x.dtype))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  valid_vocab: Optional[int] = None,
+                  label_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token NLL in fp32; padded vocab columns masked to -inf."""
+    lf = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        col = jnp.arange(logits.shape[-1])
+        lf = jnp.where(col >= valid_vocab, -1e30, lf)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if label_mask is not None:
+        return (nll * label_mask).sum() / jnp.maximum(label_mask.sum(), 1.0)
+    return nll.mean()

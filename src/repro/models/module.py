@@ -1,0 +1,102 @@
+"""Minimal functional parameter-spec system (pure JAX, no flax/haiku).
+
+A model definition is a nested dict of ``ParamSpec`` leaves.  From the spec
+tree we derive, without ever allocating device memory:
+
+  * ``abstract_params``  -> ShapeDtypeStruct tree (multi-pod dry-run input)
+  * ``logical_axes``     -> logical sharding axes per leaf (dist.sharding
+                            turns these into NamedSharding via rules)
+  * ``init_params``      -> real arrays (only for small/runnable models)
+
+Logical axis names used across the repo:
+  "embed"   d_model dim            "mlp"     d_ff dim
+  "heads"   q-heads*head_dim dim   "kv"      kv-heads*head_dim dim
+  "vocab"   vocabulary dim         "experts" MoE expert dim
+  "layers"  scan-stacked layer dim "seq"/"batch" activations only
+  None      replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | fan_in
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}")
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def initialize(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "fan_in":
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = self.init_scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, self.shape, jnp.float32) * std
+                    ).astype(self.dtype)
+        if self.init == "normal":
+            return (jax.random.normal(key, self.shape, jnp.float32)
+                    * self.init_scale).astype(self.dtype)
+        raise ValueError(self.init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable, specs) -> Any:
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def abstract_params(specs) -> Any:
+    return tree_map_specs(lambda s: s.abstract(), specs)
+
+
+def logical_axes(specs) -> Any:
+    return tree_map_specs(lambda s: s.logical_axes, specs)
+
+
+def init_params(specs, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [s.initialize(k) for s, k in zip(leaves, keys)])
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)[0]
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)[0]
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves))
+
+
+def stack_specs(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Prepend a stacked (scan) dimension to a per-layer spec."""
+    return dataclasses.replace(
+        spec, shape=(n,) + spec.shape,
+        logical_axes=(axis_name,) + spec.logical_axes)
+
+
+def stack_tree(specs, n: int, axis_name: str = "layers"):
+    return tree_map_specs(lambda s: stack_specs(s, n, axis_name), specs)

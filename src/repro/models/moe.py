@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with token-sort dispatch (dbrx / llama4-scout).
+
+Dispatch is the fixed-shape "sort tokens by expert" scheme:
+  router -> top-k (expert_id, weight) per token -> flatten -> stable-sort by
+  expert -> position-within-expert via running counts -> scatter into an
+  (E, C, d) buffer (capacity C, overflow dropped) -> per-expert batched
+  matmuls -> gather back and combine with routing weights.
+
+All shapes are static (jit/pjit friendly).  The (E, C, d) buffer carries the
+"experts" logical axis, so under expert parallelism GSPMD materializes the
+dispatch/return as all-to-all-style collectives over the "model" mesh axis.
+A load-balancing auxiliary loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoeConfig
+from .layers import activation, dense, materialize
+from .module import ParamSpec
+
+
+def moe_ffn_specs(d_model: int, d_ff: int, cfg: MoeConfig,
+                  dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    e = cfg.n_experts
+    wi_cols = (2 if cfg.gated else 1) * d_ff
+    return {
+        "router": ParamSpec((d_model, e), ("embed", None), dtype, "fan_in"),
+        "wi": ParamSpec((e, d_model, wi_cols), ("experts", "embed", "mlp"),
+                        dtype, "fan_in"),
+        "wo": ParamSpec((e, d_ff, d_model), ("experts", "mlp", "embed"),
+                        dtype, "fan_in"),
+    }
+
+
+def moe_ffn(p, x: jnp.ndarray, cfg: MoeConfig,
+            shard_fn=lambda a, axes: a,
+            token_chunks: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    token_chunks > 1 runs the dispatch/expert/combine pipeline over token
+    chunks sequentially (lax.map), dividing the (E, C, ff) capacity buffers
+    by the chunk count -- required to fit 32k-token prefills in HBM."""
+    b, s, d = x.shape
+    if token_chunks > 1 and (b * s) % token_chunks == 0:
+        xc = x.reshape(token_chunks, (b * s) // token_chunks, d)
+
+        def one(xi):                       # (chunk_t, d)
+            o, a = moe_ffn(p, xi[None], cfg, shard_fn, token_chunks=1)
+            return o[0], a
+
+        outs, auxes = jax.lax.map(one, xc)
+        return outs.reshape(b, s, d), auxes.mean()
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = dense(xt, p["router"], compute_dtype=jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                          # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux: E * sum_e (frac_tokens_e * mean_prob_e)
+    token_frac = jnp.mean(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(1), axis=0)
+    prob_frac = probs.mean(axis=0)
+    aux = cfg.router_aux_weight * e * jnp.sum(token_frac * prob_frac)
+
+    # ---- flatten, sort by expert ----
+    flat_e = top_e.reshape(-1)                                      # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_tok[order], flat_w[order]
+
+    # position within expert group = rank - first_rank_of_expert
+    counts = jnp.bincount(se, length=e)                             # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[se]
+
+    cap = int(t * k * cfg.capacity_factor / e + 0.999)
+    cap = max(cap, 1)
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+
+    # ---- dispatch into (E, C, d) ----
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    gathered = jnp.where(keep[:, None], xt[st], 0)
+    buf = buf.at[se, safe_pos].add(gathered)     # add: dropped slots collide
+    buf = shard_fn(buf, ("experts", None, "embed"))
+
+    # ---- expert computation (batched over E) ----
+    wi, wo = materialize(p["wi"]), materialize(p["wo"])
+    hid = jnp.einsum("ecd,edf->ecf", buf.astype(x.dtype), wi.astype(x.dtype))
+    if cfg.gated:
+        h1, h2 = jnp.split(hid, 2, axis=-1)
+        hid = activation(cfg.act, h1) * h2
+    else:
+        hid = activation(cfg.act, hid)
+    out_e = jnp.einsum("ecf,efd->ecd", hid, wo.astype(x.dtype))
+    out_e = shard_fn(out_e, ("experts", None, "embed"))
+
+    # ---- combine back ----
+    expert_out = out_e[se, safe_pos]                                # (T*k, d)
+    expert_out = jnp.where(keep[:, None], expert_out, 0)
+    contrib = expert_out * sw[:, None].astype(x.dtype)
+    out = jax.ops.segment_sum(contrib, st, num_segments=t)
+    return out.reshape(b, s, d), aux

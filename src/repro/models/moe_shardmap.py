@@ -1,0 +1,151 @@
+"""Expert-parallel MoE with explicit all-to-all dispatch (shard_map).
+
+GSPMD partitions the sort-based dispatch (models/moe.py) through scatter /
+gather ops and falls back to replicate+all-reduce -- measured 155 s of
+collective time per dbrx train step (EXPERIMENTS.md SPerf cell B).  This
+module is the production path: experts are sharded one-per-rank over the
+"model" axis and tokens move with two ``lax.all_to_all``s:
+
+  per rank: route local tokens -> bucket by destination expert rank
+  (capacity C per (src, dst) pair) -> all_to_all -> local expert FFN over
+  the 16 received buckets -> all_to_all back -> weighted combine.
+
+Collective volume per layer is exactly 2 x T_local * top_k * cf * d bytes
+(plus the transposed pair in the backward), vs. GSPMD's full-buffer
+all-reduces.  Shapes are static; dropping is per (src, dst) bucket.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import MoeConfig
+from .layers import activation
+
+
+def _bucket_by_dest(xt, top_e, top_w, n_dest: int, cap: int):
+    """Bucket (token, k) assignments by destination rank.
+
+    Returns (buckets (n_dest, cap, d), meta (n_dest, cap, 2) int32 holding
+    (flat assignment index + 1, expert_local_slot placeholder)).  Slot 0 in
+    meta means 'padding'."""
+    t, d = xt.shape
+    k = top_e.shape[1]
+    flat_e = top_e.reshape(-1)                        # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_tok[order]
+    counts = jnp.bincount(se, length=n_dest)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k) - starts[se]
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    buckets = jnp.zeros((n_dest, cap, d), xt.dtype)
+    buckets = buckets.at[se, safe_pos].add(
+        jnp.where(keep[:, None], xt[st], 0))
+    meta = jnp.zeros((n_dest, cap), jnp.int32)
+    meta = meta.at[se, safe_pos].max(
+        jnp.where(keep, order + 1, 0))                # assignment id + 1
+    return buckets, meta
+
+
+def moe_ffn_a2a(p, x: jnp.ndarray, cfg: MoeConfig, mesh,
+                axis: str = "model") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in replacement for moe_ffn using expert-parallel all-to-all.
+
+    Requires n_experts % mesh.shape[axis] == 0.  x: (B, S, d)."""
+    n_ranks = mesh.shape[axis]
+    assert cfg.n_experts % n_ranks == 0, (cfg.n_experts, n_ranks)
+    e_loc = cfg.n_experts // n_ranks
+    b, s, d = x.shape
+
+    batch_axes = tuple(a for a in ("data", "pod") if a in mesh.shape
+                       and b % mesh.shape[a] == 0)
+    bspec = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+    p_specs = {"router": P(), "wi": P(axis, None, None),
+               "wo": P(axis, None, None)}
+    # tokens split over the EP axis too (sequence dim) so each rank routes
+    # 1/n_ranks of the tokens -- without this every model-rank would
+    # redundantly process the whole data-shard (16x wasted FLOPs, measured)
+    seq_axis = axis if s % n_ranks == 0 else None
+    in_specs = (p_specs, P(bspec, seq_axis, None))
+    out_specs = (P(bspec, seq_axis, None), P())
+
+    def body(pp, xx):
+        bl, sl, _ = xx.shape
+        t = bl * sl
+        xt = xx.reshape(t, d)
+        logits = (xt.astype(jnp.float32)
+                  @ pp["router"].astype(jnp.float32))         # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        one_hot = jax.nn.one_hot(top_e, cfg.n_experts, dtype=jnp.float32)
+        aux = cfg.router_aux_weight * cfg.n_experts * jnp.sum(
+            one_hot.sum(1).mean(0) * probs.mean(0))
+        for a in batch_axes:
+            aux = jax.lax.pmean(aux, a)
+        aux = jax.lax.pmean(aux, axis)
+
+        # destination RANK of each assignment (expert // e_loc)
+        dest = top_e // e_loc
+        cap = max(int(t * cfg.top_k * cfg.capacity_factor / n_ranks
+                      + 0.999), 1)
+        buckets, meta = _bucket_by_dest(xt, dest, top_w, n_ranks, cap)
+        # remember which local expert each kept assignment wanted
+        flat_e_of_meta = jnp.where(
+            meta > 0, top_e.reshape(-1)[jnp.clip(meta - 1, 0)] % e_loc, 0)
+
+        # ---- exchange: (n_ranks, cap, d) -> (n_ranks, cap, d) ----
+        recv = jax.lax.all_to_all(buckets, axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        recv_e = jax.lax.all_to_all(flat_e_of_meta, axis, split_axis=0,
+                                    concat_axis=0, tiled=False)
+        recv_live = jax.lax.all_to_all((meta > 0).astype(jnp.int32), axis,
+                                       split_axis=0, concat_axis=0,
+                                       tiled=False)
+
+        # ---- local expert FFN over all received tokens ----
+        tok = recv.reshape(n_ranks * cap, d)
+        sel = jax.nn.one_hot(recv_e.reshape(-1), e_loc, dtype=tok.dtype) \
+            * recv_live.reshape(-1, 1)
+        # e_loc is small (1 for dbrx/llama4 on 16 ranks): compute per local
+        # expert and select
+        outs = jnp.zeros_like(tok)
+        for j in range(e_loc):
+            hid = tok @ pp["wi"][j].astype(tok.dtype)
+            if cfg.gated:
+                h1, h2 = jnp.split(hid, 2, axis=-1)
+                hid = activation(cfg.act, h1) * h2
+            else:
+                hid = activation(cfg.act, hid)
+            outs = outs + (hid @ pp["wo"][j].astype(tok.dtype)) \
+                * sel[:, j:j + 1]
+
+        # ---- return path ----
+        back = jax.lax.all_to_all(outs.reshape(n_ranks, cap, d), axis,
+                                  split_axis=0, concat_axis=0, tiled=False)
+
+        # combine: scatter outputs back to tokens with routing weights
+        flat_tok = jnp.repeat(jnp.arange(t), cfg.top_k)
+        flat_w = top_w.reshape(-1)
+        out_flat = jnp.zeros((t, d), xx.dtype)
+        contrib = back.reshape(n_ranks * cap, d)
+        # meta holds assignment-id+1 at (dest_rank, slot)
+        aid = jnp.clip(meta.reshape(-1) - 1, 0)
+        live = (meta.reshape(-1) > 0)
+        tok_of = flat_tok[aid]
+        w_of = jnp.where(live, flat_w[aid], 0.0)
+        out_flat = out_flat.at[tok_of].add(
+            (contrib * w_of[:, None]).astype(xx.dtype))
+        return out_flat.reshape(bl, sl, d), aux
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return fn(p, x)

@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {branch1: linear_x -> causal conv1d -> RG-LRU;
+             branch2: linear_y -> GeLU} -> elementwise product -> linear_out.
+
+RG-LRU cell (diagonal, gated; gates are *block-diagonal* per head, as in the
+reference implementation -- which also makes them shard cleanly over TP):
+  r_t = sigmoid(W_a h_in + b_a)            recurrence gate
+  i_t = sigmoid(W_x h_in + b_x)            input gate
+  log_a_t = -c * softplus(Lambda) * r_t    (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal recurrence -> shared chunked scan.  Projections/gates are MAC
+matmuls (HALO-quantizable); Lambda and the scan are not.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, rmsnorm
+from .module import ParamSpec
+from .scan_ops import chunked_diag_scan, diag_scan_step
+
+RG_LRU_C = 8.0
+GATE_BLOCKS = 16   # block-diagonal gate heads (divides every d_rnn we use)
+
+
+def rglru_block_specs(d_model: int, d_rnn: int, conv_k: int = 4,
+                      dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    db = d_rnn // GATE_BLOCKS
+    assert db * GATE_BLOCKS == d_rnn, (d_rnn, GATE_BLOCKS)
+    return {
+        "ln": ParamSpec((d_model,), ("embed",), dtype, init="ones"),
+        "wx": ParamSpec((d_model, d_rnn), ("embed", "mlp"), dtype, "fan_in"),
+        "wy": ParamSpec((d_model, d_rnn), ("embed", "mlp"), dtype, "fan_in"),
+        "conv_w": ParamSpec((conv_k, d_rnn), (None, "mlp"), dtype, "normal", 0.1),
+        "conv_b": ParamSpec((d_rnn,), ("mlp",), dtype, "zeros"),
+        "gate_a_w": ParamSpec((GATE_BLOCKS, db, db), ("mlp", None, None),
+                              dtype, "fan_in"),
+        "gate_a_b": ParamSpec((d_rnn,), ("mlp",), dtype, "zeros"),
+        "gate_x_w": ParamSpec((GATE_BLOCKS, db, db), ("mlp", None, None),
+                              dtype, "fan_in"),
+        "gate_x_b": ParamSpec((d_rnn,), ("mlp",), dtype, "zeros"),
+        "lam": ParamSpec((d_rnn,), ("mlp",), dtype, "normal", 0.8),
+        "out": ParamSpec((d_rnn, d_model), ("mlp", "embed"), dtype, "fan_in"),
+    }
+
+
+class RglruState(NamedTuple):
+    conv: jnp.ndarray    # (B, conv_k - 1, d_rnn)
+    h: jnp.ndarray       # (B, d_rnn) fp32
+
+
+def init_rglru_state(batch: int, d_rnn: int, conv_k: int = 4,
+                     dtype=jnp.float32) -> RglruState:
+    return RglruState(conv=jnp.zeros((batch, conv_k - 1, d_rnn), dtype),
+                      h=jnp.zeros((batch, d_rnn), jnp.float32))
+
+
+def _block_diag_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (..., d_rnn) times block-diagonal w (nb, db, db) -> (..., d_rnn)."""
+    from .layers import materialize   # quantized stacked gate support
+    w = materialize(w)
+    nb, db, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, db))
+    yb = jnp.einsum("...nd,nde->...ne", xb, w.astype(x.dtype))
+    return yb.reshape(x.shape)
+
+
+def _cell_coeffs(p, xc: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(a_t, b_t) of the diagonal recurrence for conv output xc (..., d_rnn)."""
+    r = jax.nn.sigmoid(_block_diag_matmul(xc, p["gate_a_w"]) + p["gate_a_b"])
+    i = jax.nn.sigmoid(_block_diag_matmul(xc, p["gate_x_w"]) + p["gate_x_b"])
+    log_a = (-RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc).astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def rglru_block(p, x: jnp.ndarray, scan_chunk: int = 256,
+                return_state: bool = False):
+    """Full-sequence forward. x: (B,S,d) -> (B,S,d) with residual."""
+    hin = rmsnorm(p["ln"], x)
+    xb = dense(hin, p["wx"])
+    yb = jax.nn.gelu(dense(hin, p["wy"]))
+    xc = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, b = _cell_coeffs(p, xc)
+    h0 = jnp.zeros((x.shape[0], xc.shape[-1]), jnp.float32)
+    hs, h_last = chunked_diag_scan(a, b, h0, chunk=scan_chunk)
+    out = (hs.astype(x.dtype) * yb)
+    out = x + dense(out, p["out"]).astype(x.dtype)
+    if not return_state:
+        return out
+    km1 = p["conv_w"].shape[0] - 1
+    conv_tail = xb[:, -km1:, :]
+    pad = km1 - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, RglruState(conv=conv_tail, h=h_last)
+
+
+def rglru_decode_step(p, x: jnp.ndarray, state: RglruState
+                      ) -> Tuple[jnp.ndarray, RglruState]:
+    """One-token step. x: (B,d)."""
+    hin = rmsnorm(p["ln"], x)
+    xb = dense(hin, p["wx"])
+    yb = jax.nn.gelu(dense(hin, p["wy"]))
+    win = jnp.concatenate([state.conv, xb[:, None, :]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+    a, b = _cell_coeffs(p, xc)
+    h_new = diag_scan_step(a, b, state.h)
+    out = (h_new.astype(x.dtype) * yb)
+    out = x + dense(out, p["out"]).astype(x.dtype)
+    return out, RglruState(conv=win[:, 1:], h=h_new)

@@ -1,0 +1,61 @@
+"""Chunked diagonal linear recurrences: h_t = a_t * h_{t-1} + b_t.
+
+Shared by Mamba-1's selective scan and RecurrentGemma's RG-LRU.  A pure
+``associative_scan`` over the full sequence materializes O(S log S)
+intermediates -- ruinous at 4k-500k tokens -- so we scan sequentially over
+fixed-size chunks and run the associative scan only within a chunk:
+memory O(B * chunk * d * log chunk), exact same result.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_diag_scan(a: jnp.ndarray, b: jnp.ndarray,
+                      h0: jnp.ndarray, chunk: int = 256
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run h_t = a_t * h_{t-1} + b_t along axis 1 (sequence).
+
+    a, b: (B, S, ...) with identical trailing dims; h0: (B, ...).
+    Returns (h_all (B, S, ...), h_final (B, ...)).  S padded internally to a
+    chunk multiple (a=1, b=0 padding keeps the state unchanged).
+    """
+    bsz, s = a.shape[0], a.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.concatenate(
+            [a, jnp.ones((bsz, pad) + a.shape[2:], a.dtype)], axis=1)
+        b = jnp.concatenate(
+            [b, jnp.zeros((bsz, pad) + b.shape[2:], b.dtype)], axis=1)
+    n_chunks = a.shape[1] // chunk
+    a_c = a.reshape((bsz, n_chunks, chunk) + a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape((bsz, n_chunks, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def chunk_step(h, ab):
+        a_i, b_i = ab                                   # (B, chunk, ...)
+        # fold carry-in into the first step's b
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(_combine, (a_i, b_i), axis=1)
+        return bb[:, -1], bb
+
+    h_last, h_chunks = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_all = h_chunks.swapaxes(0, 1).reshape((bsz, n_chunks * chunk) + a.shape[2:])
+    return h_all[:, :s], h_last
+
+
+def diag_scan_step(a: jnp.ndarray, b: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Single decode step of the same recurrence."""
+    return a * h + b

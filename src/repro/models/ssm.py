@@ -1,0 +1,133 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b's layer).
+
+Structure (arXiv:2312.00752): in_proj -> (x, z); x through causal depthwise
+conv1d + SiLU; input-dependent (dt, B, C) from x; discretized diagonal SSM
+scan; gated by SiLU(z); out_proj.  The recurrence is diagonal per (channel,
+state) pair -> runs on the shared chunked scan.
+
+HALO applicability note (DESIGN.md S3.2): the in/x/dt/out projections are
+ordinary MAC matmuls and are quantized; A_log/D/conv/dt biases and the scan
+itself stay dense.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, rmsnorm
+from .module import ParamSpec
+from .scan_ops import chunked_diag_scan, diag_scan_step
+
+
+class SsmDims(NamedTuple):
+    d_model: int
+    d_inner: int       # expand * d_model (falcon-mamba: 2 * 4096 = 8192)
+    d_state: int       # 16
+    dt_rank: int       # ceil(d_model / 16)
+    conv_k: int = 4
+
+
+def ssm_dims(d_model: int, d_state: int = 16, expand: int = 2,
+             conv_k: int = 4) -> SsmDims:
+    return SsmDims(d_model, expand * d_model, d_state,
+                   -(-d_model // 16), conv_k)
+
+
+def mamba_block_specs(dims: SsmDims, dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    d, di, ds, dr, ck = dims
+    return {
+        "ln": ParamSpec((d,), ("embed",), dtype, init="ones"),
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp"), dtype, "fan_in"),
+        "conv_w": ParamSpec((ck, di), (None, "mlp"), dtype, "normal", 0.1),
+        "conv_b": ParamSpec((di,), ("mlp",), dtype, "zeros"),
+        "x_proj": ParamSpec((di, dr + 2 * ds), ("mlp", None), dtype, "fan_in"),
+        "dt_w": ParamSpec((dr, di), (None, "mlp"), dtype, "fan_in"),
+        "dt_b": ParamSpec((di,), ("mlp",), dtype, "normal", 0.1),
+        "A_log": ParamSpec((di, ds), ("mlp", None), dtype, "normal", 0.5),
+        "D": ParamSpec((di,), ("mlp",), dtype, "ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed"), dtype, "fan_in"),
+    }
+
+
+class MambaState(NamedTuple):
+    """Decode-time recurrent state of one layer."""
+    conv: jnp.ndarray   # (B, conv_k - 1, d_inner)
+    ssm: jnp.ndarray    # (B, d_inner, d_state)
+
+
+def init_mamba_state(batch: int, dims: SsmDims, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, dims.conv_k - 1, dims.d_inner), dtype),
+        ssm=jnp.zeros((batch, dims.d_inner, dims.d_state), jnp.float32))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq. x: (B,S,di); w: (k,di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_inner(p, x: jnp.ndarray, dims: SsmDims
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Input-dependent discretization. x: (B,S,di) post-conv activations.
+    Returns (a_bar, b_bar_x, C) for the diagonal recurrence."""
+    d, di, ds, dr, _ = dims
+    dbc = dense(x, p["x_proj"])
+    dt_low, bc = dbc[..., :dr], dbc[..., dr:]
+    b_in, c_in = bc[..., :ds], bc[..., ds:]
+    dt = jax.nn.softplus(dense(dt_low, p["dt_w"]) + p["dt_b"])      # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (di,ds)
+    a_bar = jnp.exp(dt[..., None].astype(jnp.float32) * a)          # (B,S,di,ds)
+    bx = (dt * x)[..., None] * b_in[..., None, :].astype(jnp.float32)
+    return a_bar, bx.astype(jnp.float32), c_in.astype(jnp.float32)
+
+
+def mamba_block(p, x: jnp.ndarray, dims: SsmDims,
+                scan_chunk: int = 256,
+                return_state: bool = False):
+    """Full-sequence forward (train / prefill). x: (B,S,d) -> (B,S,d).
+
+    With return_state=True also returns the MambaState a decoder would
+    continue from (final ssm state + last conv_k-1 pre-conv activations).
+    """
+    h = rmsnorm(p["ln"], x)
+    xz = dense(h, p["in_proj"])
+    x1_pre, z = jnp.split(xz, 2, axis=-1)
+    x1 = jax.nn.silu(_causal_conv(x1_pre, p["conv_w"], p["conv_b"]))
+    a_bar, bx, c_in = _ssm_inner(p, x1, dims)
+    h0 = jnp.zeros((x.shape[0], dims.d_inner, dims.d_state), jnp.float32)
+    hs, h_last = chunked_diag_scan(a_bar, bx, h0, chunk=scan_chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_in)
+    y = y.astype(x1.dtype) + p["D"] * x1
+    y = y * jax.nn.silu(z)
+    out = x + dense(y, p["out_proj"]).astype(x.dtype)
+    if not return_state:
+        return out
+    km1 = dims.conv_k - 1
+    conv_tail = x1_pre[:, -km1:, :]
+    pad = km1 - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, MambaState(conv=conv_tail, ssm=h_last)
+
+
+def mamba_decode_step(p, x: jnp.ndarray, state: MambaState, dims: SsmDims
+                      ) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token step. x: (B,d) -> (B,d), updated state."""
+    h = rmsnorm(p["ln"], x)
+    xz = dense(h, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)                               # (B,di)
+    win = jnp.concatenate([state.conv, x1[:, None, :]], axis=1)     # (B,k,di)
+    x1 = jax.nn.silu(jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"])
+    a_bar, bx, c_in = _ssm_inner(p, x1[:, None, :], dims)
+    h_new = diag_scan_step(a_bar[:, 0], bx[:, 0], state.ssm)        # (B,di,ds)
+    y = jnp.einsum("bdn,bn->bd", h_new, c_in[:, 0]).astype(x1.dtype)
+    y = y + p["D"] * x1
+    y = y * jax.nn.silu(z)
+    out = x + dense(y, p["out_proj"]).astype(x.dtype)
+    return out, MambaState(conv=win[:, 1:], ssm=h_new)

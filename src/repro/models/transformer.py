@@ -1,0 +1,601 @@
+"""Unified decoder-only model covering all assigned architectures.
+
+A model is a periodic program of blocks (``cfg.block_pattern``):
+  "attn"        global causal attention + MLP/MoE
+  "attn_local"  sliding-window attention + MLP/MoE
+  "rec"         RG-LRU recurrent mixer + MLP
+  "mamba"       Mamba-1 block (no separate MLP)
+
+Layers are stacked per period position and scanned over periods (remat'd);
+non-divisible remainders are unrolled with their own parameters.  The same
+block functions serve full-sequence forward/prefill and single-token decode,
+with caches (KV / SSM / RG-LRU states) stacked alongside the parameter
+stacks.  Weights may be HaloQuantized -- `layers.dense` dequantizes
+transparently, so PTQ'd models run through this exact code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard_activation
+from . import rglru, ssm
+from .attention import (causal_blockwise_attention, decode_attention)
+from .layers import (activation, apply_rope, cross_entropy, dense,
+                     embed_lookup, layernorm, materialize, rmsnorm, softcap)
+from .module import ParamSpec, stack_tree
+from .moe import moe_ffn, moe_ffn_specs
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = {"scale": ParamSpec((d,), ("embed",), cfg.dtype,
+                            init="zeros" if cfg.norm_plus_one else "ones")}
+    if cfg.norm_type == "layernorm":
+        s["bias"] = ParamSpec((d,), ("embed",), cfg.dtype, init="zeros")
+    return s
+
+
+def _apply_norm(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm_type == "layernorm":
+        return layernorm(p["scale"], p["bias"], x, cfg.norm_eps)
+    return rmsnorm(p["scale"], x, cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+def _mlp_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.moe is not None:
+        s: Dict[str, Any] = {"ln": _norm_specs(cfg)}
+        s.update(moe_ffn_specs(d, ff, cfg.moe, cfg.dtype))
+        return s
+    cols = (2 if cfg.gated_mlp else 1) * ff
+    s = {
+        "ln": _norm_specs(cfg),
+        "wi": ParamSpec((d, cols), ("embed", "mlp"), cfg.dtype, "fan_in"),
+        "wo": ParamSpec((ff, d), ("mlp", "embed"), cfg.dtype, "fan_in"),
+    }
+    if cfg.use_bias:
+        s["bi"] = ParamSpec((cols,), ("mlp",), cfg.dtype, "zeros")
+        s["bo"] = ParamSpec((d,), ("embed",), cfg.dtype, "zeros")
+    return s
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    s: Dict[str, Any] = {
+        "ln": _norm_specs(cfg),
+        "wq": ParamSpec((d, h * dh), ("embed", "heads"), cfg.dtype, "fan_in"),
+        "wk": ParamSpec((d, hkv * dh), ("embed", "kv"), cfg.dtype, "fan_in"),
+        "wv": ParamSpec((d, hkv * dh), ("embed", "kv"), cfg.dtype, "fan_in"),
+        "wo": ParamSpec((h * dh, d), ("heads", "embed"), cfg.dtype, "fan_in"),
+    }
+    if cfg.use_bias:
+        for nm, dim in (("bq", h * dh), ("bk", hkv * dh), ("bv", hkv * dh)):
+            s[nm] = ParamSpec((dim,), ("heads" if nm == "bq" else "kv",),
+                              cfg.dtype, "zeros")
+        s["bo"] = ParamSpec((d,), ("embed",), cfg.dtype, "zeros")
+    return s
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind == "mamba":
+        return {"mamba": ssm.mamba_block_specs(
+            ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                         cfg.conv_k), cfg.dtype)}
+    if kind == "rec":
+        d_rnn = cfg.d_rnn or cfg.d_model
+        return {"rec": rglru.rglru_block_specs(cfg.d_model, d_rnn, cfg.conv_k,
+                                               cfg.dtype),
+                "mlp": _mlp_specs(cfg)}
+    if kind in ("attn", "attn_local"):
+        return {"attn": _attn_specs(cfg), "mlp": _mlp_specs(cfg)}
+    raise ValueError(kind)
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {}
+    if not cfg.embeds_input:
+        specs["embed"] = ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"), cfg.dtype,
+                                   "normal", 0.02)
+    if cfg.pos_emb == "learned":
+        specs["pos_embed"] = ParamSpec((cfg.max_position, cfg.d_model),
+                                       (None, "embed"), cfg.dtype,
+                                       "normal", 0.02)
+    specs["final_norm"] = _norm_specs(cfg)
+    if not cfg.tied_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                     ("embed", "vocab"), cfg.dtype, "fan_in")
+    specs["period"] = tuple(
+        stack_tree(block_specs(cfg, kind), cfg.n_periods)
+        for kind in cfg.block_pattern)
+    specs["remainder"] = tuple(
+        block_specs(cfg, kind) for kind in cfg.remainder_pattern)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+class AttnCache(NamedTuple):
+    """KV cache; int8 mode stores per-(position, head) scales alongside
+    (KIVI-style post-RoPE quantization) -- halves decode cache residency
+    and HBM read traffic (SPerf cell C)."""
+
+    k: jnp.ndarray   # (B, S_max, Hkv, Dh) storage dtype (bf16 or int8)
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray] = None   # (B, S_max, Hkv) f32, int8 only
+    v_scale: Optional[jnp.ndarray] = None
+
+
+def _quantize_kv(x: jnp.ndarray):
+    """(..., Hkv, Dh) -> (int8 values, per-(...,Hkv) f32 scales)."""
+    absmax = jnp.abs(x.astype(jnp.float32)).max(axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jnp.ndarray, scale: Optional[jnp.ndarray],
+                   dtype) -> jnp.ndarray:
+    if scale is None:
+        return q
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind == "mamba":
+        dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                            cfg.conv_k)
+        return ssm.MambaState(
+            conv=jax.ShapeDtypeStruct((batch, cfg.conv_k - 1, dims.d_inner),
+                                      cfg.dtype),
+            ssm=jax.ShapeDtypeStruct((batch, dims.d_inner, dims.d_state),
+                                     jnp.float32))
+    if kind == "rec":
+        d_rnn = cfg.d_rnn or cfg.d_model
+        return rglru.RglruState(
+            conv=jax.ShapeDtypeStruct((batch, cfg.conv_k - 1, d_rnn),
+                                      cfg.dtype),
+            h=jax.ShapeDtypeStruct((batch, d_rnn), jnp.float32))
+    if kind in ("attn", "attn_local"):
+        seq = max_seq
+        if kind == "attn_local" and cfg.local_window is not None:
+            seq = min(max_seq, cfg.local_window)
+        shp = (batch, seq, cfg.n_kv_heads, cfg.head_dim_)
+        if cfg.kv_cache_dtype == "int8":
+            sshp = (batch, seq, cfg.n_kv_heads)
+            return AttnCache(
+                k=jax.ShapeDtypeStruct(shp, jnp.int8),
+                v=jax.ShapeDtypeStruct(shp, jnp.int8),
+                k_scale=jax.ShapeDtypeStruct(sshp, jnp.float32),
+                v_scale=jax.ShapeDtypeStruct(sshp, jnp.float32))
+        return AttnCache(k=jax.ShapeDtypeStruct(shp, cfg.dtype),
+                         v=jax.ShapeDtypeStruct(shp, cfg.dtype))
+    raise ValueError(kind)
+
+
+def _stack_sds(tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), tree)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract cache pytree (ShapeDtypeStructs)."""
+    period = tuple(
+        _stack_sds(_block_cache_spec(cfg, kind, batch, max_seq), cfg.n_periods)
+        for kind in cfg.block_pattern)
+    rem = tuple(_block_cache_spec(cfg, kind, batch, max_seq)
+                for kind in cfg.remainder_pattern)
+    return {"period": period, "remainder": rem}
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes per cache leaf, mirroring cache_specs structure."""
+
+    def block_axes(kind: str, stacked: bool):
+        lead = ("layers",) if stacked else ()
+        if kind == "mamba":
+            return ssm.MambaState(conv=lead + ("batch", None, "act_mlp"),
+                                  ssm=lead + ("batch", "act_mlp", None))
+        if kind == "rec":
+            return rglru.RglruState(conv=lead + ("batch", None, "act_mlp"),
+                                    h=lead + ("batch", "act_mlp"))
+        kv_axes = lead + ("batch", "kv_seq", "kv", None)
+        sc_axes = lead + ("batch", "kv_seq", "kv")
+        if cfg.kv_cache_dtype == "int8":
+            return AttnCache(k=kv_axes, v=kv_axes,
+                             k_scale=sc_axes, v_scale=sc_axes)
+        return AttnCache(k=kv_axes, v=kv_axes)
+
+    return {"period": tuple(block_axes(k, True) for k in cfg.block_pattern),
+            "remainder": tuple(block_axes(k, False)
+                               for k in cfg.remainder_pattern)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_forward(p, cfg: ModelConfig, x: jnp.ndarray, kind: str,
+                  positions: jnp.ndarray,
+                  return_kv: bool = False):
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    hin = _apply_norm(p["ln"], cfg, x)
+    q = dense(hin, p["wq"]) + (p.get("bq", 0) if cfg.use_bias else 0)
+    k = dense(hin, p["wk"]) + (p.get("bk", 0) if cfg.use_bias else 0)
+    v = dense(hin, p["wv"]) + (p.get("bv", 0) if cfg.use_bias else 0)
+    q = shard_activation(q.reshape(b, s, h, dh),
+                         ("batch", "act_seq", "act_heads", None))
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.local_window if kind == "attn_local" else None
+    if cfg.flash_vjp:
+        from .flash import flash_attention
+        out = flash_attention(q, k, v, chunk=cfg.attn_chunk, window=window,
+                              attn_softcap=cfg.attn_softcap)
+    else:
+        out = causal_blockwise_attention(
+            q, k, v, chunk=cfg.attn_chunk, window=window,
+            attn_softcap=cfg.attn_softcap)
+    out = dense(out.reshape(b, s, h * dh), p["wo"]) \
+        + (p.get("bo", 0) if cfg.use_bias else 0)
+    y = x + out.astype(x.dtype)
+    kv = (k, v) if return_kv else None
+    return y, kv
+
+
+def _mlp_forward(p, cfg: ModelConfig, x: jnp.ndarray):
+    hin = _apply_norm(p["ln"], cfg, x)
+    if cfg.moe is not None:
+        pp = {k: v for k, v in p.items() if k != "ln"}
+        from ..dist.sharding import active_mesh
+        mesh = active_mesh()
+        if (cfg.moe_impl == "a2a" and mesh is not None
+                and "model" in mesh.shape
+                and cfg.moe.n_experts % mesh.shape["model"] == 0):
+            from .moe_shardmap import moe_ffn_a2a
+            out, aux = moe_ffn_a2a(pp, hin, cfg.moe, mesh)
+        else:
+            out, aux = moe_ffn(pp, hin, cfg.moe, shard_fn=shard_activation,
+                               token_chunks=cfg.moe_token_chunks)
+        return x + out.astype(x.dtype), aux
+    hmid = dense(hin, p["wi"]) + (p.get("bi", 0) if cfg.use_bias else 0)
+    if cfg.gated_mlp:
+        h1, h2 = jnp.split(hmid, 2, axis=-1)
+        hmid = activation(cfg.activation, h1) * h2
+    else:
+        hmid = activation(cfg.activation, hmid)
+    hmid = shard_activation(hmid, ("batch", "act_seq", "act_mlp"))
+    out = dense(hmid, p["wo"]) + (p.get("bo", 0) if cfg.use_bias else 0)
+    return x + out.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def block_forward(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                  positions: jnp.ndarray, return_cache: bool = False,
+                  max_seq: int = 0):
+    """One block, full sequence.  Returns (x, aux, cache_entry | None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    if kind == "mamba":
+        dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                            cfg.conv_k)
+        if return_cache:
+            x, cache_entry = ssm.mamba_block(p["mamba"], x, dims,
+                                             cfg.scan_chunk, return_state=True)
+        else:
+            x = ssm.mamba_block(p["mamba"], x, dims, cfg.scan_chunk)
+        return x, aux, cache_entry
+    if kind == "rec":
+        if return_cache:
+            x, cache_entry = rglru.rglru_block(p["rec"], x, cfg.scan_chunk,
+                                               return_state=True)
+        else:
+            x = rglru.rglru_block(p["rec"], x, cfg.scan_chunk)
+        x, aux = _mlp_forward(p["mlp"], cfg, x)
+        return x, aux, cache_entry
+    x, kv = _attn_forward(p["attn"], cfg, x, kind, positions,
+                          return_kv=return_cache)
+    if return_cache and kv is not None:
+        k, v = kv
+        s = k.shape[1]
+        seq_cap = max_seq
+        if kind == "attn_local" and cfg.local_window is not None:
+            seq_cap = min(max_seq, cfg.local_window)
+            k, v = k[:, -seq_cap:], v[:, -seq_cap:]
+            if s >= seq_cap:
+                # ring alignment: buffer[i] <- abs position p, p % cap == i
+                shift = s % seq_cap
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+        pad = seq_cap - k.shape[1]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            cache_entry = AttnCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        else:
+            cache_entry = AttnCache(k=k, v=v)
+    x, aux = _mlp_forward(p["mlp"], cfg, x)
+    return x, aux, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# block decode (single token)
+# ---------------------------------------------------------------------------
+
+def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                 cache, lengths: jnp.ndarray):
+    """One block, one token.  x: (B, d).  Returns (x, new_cache)."""
+    if kind == "mamba":
+        dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                            cfg.conv_k)
+        x, new_state = ssm.mamba_decode_step(p["mamba"], x, cache, dims)
+        return x, new_state
+    if kind == "rec":
+        x, new_state = rglru.rglru_decode_step(p["rec"], x, cache)
+        x, _ = _mlp_forward(p["mlp"], cfg, x[:, None, :])
+        return x[:, 0], new_state
+
+    # attention decode
+    b, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ap = p["attn"]
+    hin = _apply_norm(ap["ln"], cfg, x)
+    q = dense(hin, ap["wq"]) + (ap.get("bq", 0) if cfg.use_bias else 0)
+    k = dense(hin, ap["wk"]) + (ap.get("bk", 0) if cfg.use_bias else 0)
+    v = dense(hin, ap["wv"]) + (ap.get("bv", 0) if cfg.use_bias else 0)
+    q = q.reshape(b, h, dh)
+    k = k.reshape(b, hkv, dh)
+    v = v.reshape(b, hkv, dh)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q.reshape(b, 1, h, dh), lengths[:, None],
+                       cfg.rope_theta).reshape(b, h, dh)
+        k = apply_rope(k.reshape(b, 1, hkv, dh), lengths[:, None],
+                       cfg.rope_theta).reshape(b, hkv, dh)
+
+    s_max = cache.k.shape[1]
+    if kind == "attn_local" and cfg.local_window is not None \
+            and s_max <= cfg.local_window:
+        slot = lengths % s_max                       # ring buffer
+    else:
+        slot = jnp.minimum(lengths, s_max - 1)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        kc = cache.k.at[jnp.arange(b), slot].set(kq)
+        vc = cache.v.at[jnp.arange(b), slot].set(vq)
+        ksc = cache.k_scale.at[jnp.arange(b), slot].set(ks)
+        vsc = cache.v_scale.at[jnp.arange(b), slot].set(vs)
+        new_cache = AttnCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+        # kvdec_vmem: on TPU the fused int8-KV flash-decode kernel
+        # (kernels/flash_decode.py) streams the int8 cache and dequantizes
+        # in VMEM; the XLA fallback below materializes the dequant, which
+        # the roofline's scope rule discounts accordingly.
+        with jax.named_scope("kvdec_vmem"):
+            kd = _dequantize_kv(kc, ksc, cfg.dtype)   # per-layer transient
+            vd = _dequantize_kv(vc, vsc, cfg.dtype)
+    else:
+        kc = cache.k.at[jnp.arange(b), slot].set(k.astype(cache.k.dtype))
+        vc = cache.v.at[jnp.arange(b), slot].set(v.astype(cache.v.dtype))
+        new_cache = AttnCache(k=kc, v=vc)
+        kd, vd = kc, vc
+    new_len = lengths + 1
+
+    window = cfg.local_window if kind == "attn_local" else None
+    if kind == "attn_local" and s_max <= (cfg.local_window or s_max):
+        # ring buffer holds exactly the window; all valid entries attend
+        valid = jnp.minimum(new_len, s_max)
+        out = decode_attention(q, kd, vd, valid, window=None,
+                               attn_softcap=cfg.attn_softcap)
+    else:
+        out = decode_attention(q, kd, vd, new_len, window=window,
+                               attn_softcap=cfg.attn_softcap)
+    out = dense(out.reshape(b, h * dh), ap["wo"]) \
+        + (ap.get("bo", 0) if cfg.use_bias else 0)
+    x = x + out.astype(x.dtype)
+    x, _ = _mlp_forward(p["mlp"], cfg, x[:, None, :])
+    return x[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_lookup(materialize(params["embed"]), batch["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_emb == "learned":
+        pos = batch["positions"]
+        x = x + jnp.take(materialize(params["pos_embed"]), pos, axis=0)
+    return shard_activation(x.astype(cfg.dtype),
+                            ("batch", "act_seq", "act_embed"))
+
+
+def _logits(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = _apply_norm(params["final_norm"], cfg, x)
+    if cfg.tied_embeddings:
+        w = materialize(params["embed"])
+        logits = jnp.matmul(x, w.T.astype(x.dtype))
+    else:
+        logits = dense(x, params["lm_head"])
+    logits = softcap(logits, cfg.logit_softcap)
+    axes = ("batch", "act_seq", "act_vocab") if logits.ndim == 3 \
+        else ("batch", "act_vocab")
+    return shard_activation(logits, axes)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence logits.  batch: tokens (B,S) or embeds (B,S,d),
+    positions (B,S).  Returns (logits, aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     x.shape[:2])
+
+    def period_fn(carry, period_params):
+        x, aux = carry
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            x, a, _ = block_forward(period_params[pos_i], cfg, kind, x,
+                                    positions)
+            aux = aux + a
+        x = shard_activation(x, ("batch", "act_seq", "act_embed"))
+        return (x, aux), None
+
+    step = _maybe_remat(period_fn, cfg)
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params["period"])
+    for rp, kind in zip(params["remainder"], cfg.remainder_pattern):
+        x, a, _ = block_forward(rp, cfg, kind, x, positions)
+        aux = aux + a
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    logits, aux = forward(params, cfg, batch)
+    nll = cross_entropy(logits, batch["labels"], valid_vocab=cfg.vocab,
+                        label_mask=batch.get("label_mask"))
+    return nll + aux
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            max_seq: int):
+    """Process a full prompt, building the cache.  Returns
+    (last-position logits (B, V), cache, lengths (B,)).
+
+    cfg.prefill_microbatch > 1 scans over batch slices so long-prompt
+    activation transients scale with B/m while the returned cache is the
+    full batch (microbatch caches are restitched along the batch axis)."""
+    mb = cfg.prefill_microbatch
+    b_total = (batch["embeds"] if cfg.embeds_input
+               else batch["tokens"]).shape[0]
+    if mb > 1 and b_total % mb == 0:
+        split = jax.tree.map(
+            lambda x: x.reshape((mb, b_total // mb) + x.shape[1:]), batch)
+        logits, caches, lengths = jax.lax.map(
+            lambda mbb: _prefill_once(params, _cfg_no_mb(cfg), mbb, max_seq),
+            split)
+
+        # restitch the microbatch axis into each cache leaf's batch axis
+        def stitch(leaf, axes):
+            bpos = axes.index("batch")
+            moved = jnp.moveaxis(leaf, 0, bpos)           # (..., mb, B/mb, ..)
+            return moved.reshape(moved.shape[:bpos] + (b_total,)
+                                 + moved.shape[bpos + 2:])
+
+        cache = jax.tree.map(stitch, caches, cache_logical_axes(cfg))
+        return (logits.reshape(b_total, -1), cache,
+                lengths.reshape(b_total))
+    return _prefill_once(params, cfg, batch, max_seq)
+
+
+def _cfg_no_mb(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, prefill_microbatch=1)
+
+
+def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                  max_seq: int):
+    x = _embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def period_fn(carry, period_params):
+        x = carry
+        entries = []
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            x, _, ce = block_forward(period_params[pos_i], cfg, kind, x,
+                                     positions, return_cache=True,
+                                     max_seq=max_seq)
+            entries.append(ce)
+        x = shard_activation(x, ("batch", "act_seq", "act_embed"))
+        return x, tuple(entries)
+
+    step = _maybe_remat(period_fn, cfg)
+    x, period_cache = jax.lax.scan(step, x, params["period"])
+    rem_cache = []
+    for rp, kind in zip(params["remainder"], cfg.remainder_pattern):
+        x, _, ce = block_forward(rp, cfg, kind, x, positions,
+                                 return_cache=True, max_seq=max_seq)
+        rem_cache.append(ce)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    lengths = jnp.full((b,), s, jnp.int32)
+    cache = {"period": period_cache, "remainder": tuple(rem_cache)}
+    return logits, cache, lengths
+
+
+def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
+                cache, lengths: jnp.ndarray):
+    """One decode step.  inputs: token (B,) or embeds (B, d).
+    Returns (logits (B, V), new_cache, new_lengths)."""
+    if cfg.embeds_input:
+        x = inputs["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_lookup(materialize(params["embed"]), inputs["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(materialize(params["pos_embed"]),
+                         jnp.minimum(lengths, cfg.max_position - 1), axis=0)
+    x = shard_activation(x, ("batch", "act_embed"))
+
+    def period_fn(x, xs):
+        period_params, cache_slice = xs
+        new_entries = []
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            x, nc = block_decode(period_params[pos_i], cfg, kind, x,
+                                 cache_slice[pos_i], lengths)
+            new_entries.append(nc)
+        return x, tuple(new_entries)
+
+    x, new_period = jax.lax.scan(period_fn, x,
+                                 (params["period"], cache["period"]))
+    new_rem = []
+    for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
+                            cache["remainder"]):
+        x, nc = block_decode(rp, cfg, kind, x, ce, lengths)
+        new_rem.append(nc)
+    logits = _logits(params, cfg, x)
+    new_cache = {"period": new_period, "remainder": tuple(new_rem)}
+    return logits, new_cache, lengths + 1

@@ -1,0 +1,128 @@
+"""Adafactor-style factored second moment (Shazeer & Stern, 1804.04235).
+
+For a (.., K, N) weight the second moment is stored as row/col factors
+(K + N numbers instead of K*N): with first moment in bf16 this cuts
+optimizer state from 2x to ~1x of the parameter bytes -- the difference
+between nemotron-4-340b fitting a single 256-chip v5e pod or not
+(EXPERIMENTS.md SDry-run).  Vectors keep a full second moment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import global_norm
+
+
+class FactoredState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment (bf16 by default)
+    vr: Any          # row factor  (.., K) or full moment for vectors
+    vc: Any          # col factor  (.., N) or zeros(0) for vectors
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    b1: float = 0.9
+    decay: float = 0.99          # second-moment decay (paper uses schedule)
+    eps: float = 1e-30
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.bfloat16
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params, cfg: AdafactorConfig = AdafactorConfig()) -> FactoredState:
+    def vr_of(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_of(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return FactoredState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype),
+                        params),
+        vr=jax.tree.map(vr_of, params),
+        vc=jax.tree.map(vc_of, params))
+
+
+def update(grads, state: FactoredState, params, lr,
+           cfg: AdafactorConfig = AdafactorConfig()
+           ) -> Tuple[Any, FactoredState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        s = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * s.astype(g.dtype), grads)
+    d = cfg.decay
+
+    def upd(g, m, vr, vc, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps
+        if _factored(p):
+            vr_new = d * vr + (1 - d) * g2.mean(axis=-1)
+            vc_new = d * vc + (1 - d) * g2.mean(axis=-2)
+            denom = (vr_new[..., None] * vc_new[..., None, :]
+                     / jnp.maximum(vr_new.mean(axis=-1)[..., None, None],
+                                   cfg.eps))
+            ghat = gf * jax.lax.rsqrt(denom + cfg.eps)
+        else:
+            vr_new = d * vr + (1 - d) * g2
+            vc_new = vc
+            ghat = gf * jax.lax.rsqrt(vr_new + cfg.eps)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * ghat
+        delta = m_new
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(cfg.moment_dtype), vr_new, vc_new
+
+    def upd_leaf(i):
+        return jax.tree.map(lambda g, m, vr, vc, p: upd(g, m, vr, vc, p)[i],
+                            grads, state.mu, state.vr, state.vc, params)
+
+    new_params = upd_leaf(0)
+    new_mu = upd_leaf(1)
+    new_vr = upd_leaf(2)
+    new_vc = upd_leaf(3)
+    return (new_params,
+            FactoredState(step=step, mu=new_mu, vr=new_vr, vc=new_vc),
+            {"grad_norm": gnorm, "step": step})
+
+
+def state_specs(param_specs, cfg: AdafactorConfig = AdafactorConfig()):
+    from ..models.module import ParamSpec, tree_map_specs
+
+    def mu_of(s: ParamSpec):
+        return ParamSpec(s.shape, s.logical_axes, cfg.moment_dtype, "zeros")
+
+    def vr_of(s: ParamSpec):
+        if len(s.shape) >= 2:
+            return ParamSpec(s.shape[:-1], s.logical_axes[:-1],
+                             jnp.float32, "zeros")
+        return ParamSpec(s.shape, s.logical_axes, jnp.float32, "zeros")
+
+    def vc_of(s: ParamSpec):
+        if len(s.shape) >= 2:
+            return ParamSpec(s.shape[:-2] + s.shape[-1:],
+                             s.logical_axes[:-2] + s.logical_axes[-1:],
+                             jnp.float32, "zeros")
+        return ParamSpec((0,), (None,), jnp.float32, "zeros")
+
+    return FactoredState(
+        step=ParamSpec((), (), jnp.int32, "zeros"),
+        mu=tree_map_specs(mu_of, param_specs),
+        vr=tree_map_specs(vr_of, param_specs),
+        vc=tree_map_specs(vc_of, param_specs))

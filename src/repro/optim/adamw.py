@@ -1,0 +1,101 @@
+"""Sharded AdamW with optional bf16 moments (no optax in this container).
+
+Moments inherit each parameter's sharding (the update is elementwise, so
+GSPMD keeps optimizer state ZeRO-sharded wherever params are FSDP-sharded).
+bf16 moments halve optimizer memory -- required to fit nemotron-340B on
+256 x 16 GB (see EXPERIMENTS.md SDry-run).  Skips HaloQuantized leaves --
+PTQ'd params are frozen by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32     # bf16 for the >=100B archs
+    clip_norm: Optional[float] = 1.0
+
+
+def init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def update(grads, state: AdamWState, params, lr,
+           cfg: AdamWConfig = AdamWConfig()) -> Tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:      # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype)
+
+    def upd_leaf(g, m, v, p):
+        # layer-stacked tensors update via lax.map over the stack so the
+        # fp32 scratch is one layer-slice, not the whole stack (the ZeRO-
+        # style chunked-optimizer trick; matters for the 100B+ archs).
+        if p.ndim >= 3 and p.shape[0] >= 8:
+            return jax.lax.map(lambda a: upd(*a), (g, m, v, p))
+        return upd(g, m, v, p)
+
+    # three passes (XLA CSE merges the shared math under jit); a tuple-typed
+    # transpose would confuse pytrees that already contain tuples.
+    new_params = jax.tree.map(lambda g, m, v, p: upd_leaf(g, m, v, p)[0],
+                              grads, state.mu, state.nu, params)
+    new_mu = jax.tree.map(lambda g, m, v, p: upd_leaf(g, m, v, p)[1],
+                          grads, state.mu, state.nu, params)
+    new_nu = jax.tree.map(lambda g, m, v, p: upd_leaf(g, m, v, p)[2],
+                          grads, state.mu, state.nu, params)
+    metrics = {"grad_norm": gnorm, "step": step}
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+def state_specs(param_specs, cfg: AdamWConfig = AdamWConfig()):
+    """ParamSpec tree for the optimizer state (for dry-run abstract inputs)."""
+    from ..models.module import ParamSpec, tree_map_specs
+
+    def mom(s: ParamSpec):
+        return ParamSpec(s.shape, s.logical_axes, cfg.moment_dtype, "zeros")
+
+    return AdamWState(
+        step=ParamSpec((), (), jnp.int32, "zeros"),
+        mu=tree_map_specs(mom, param_specs),
+        nu=tree_map_specs(mom, param_specs))

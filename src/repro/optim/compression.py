@@ -1,0 +1,113 @@
+"""PowerSGD gradient compression with error feedback (arXiv:1905.13727).
+
+Cuts data-parallel all-reduce bytes by factor ~(K*N)/(r*(K+N)) per matrix:
+instead of reducing G (K, N), workers reduce P = G Q (K, r) and
+Q' = G^T P (N, r) -- two rank-r factors -- and reconstruct G_hat = P Q'^T.
+The residual G - G_hat feeds back into the next step's gradient (error
+feedback), preserving convergence.
+
+Usage is shard_map-style data parallelism (see examples/compressed_dp.py):
+the main GSPMD train path lets XLA place the all-reduces, and this module
+provides the drop-in compressed reducer for DP axes where interconnect is
+the bottleneck (e.g. the cross-pod "pod" axis over DCN).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PowerSGDState(NamedTuple):
+    q: Any        # per-matrix (N, r) iterate, warm-started across steps
+    error: Any    # per-matrix error-feedback buffer (K, N)
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 4
+    min_size: int = 16_384        # smaller tensors reduce uncompressed
+    warm_start: bool = True
+
+
+def _orthonormalize(m: jnp.ndarray) -> jnp.ndarray:
+    """Gram-Schmidt columns (r is small; QR would also do)."""
+    q, _ = jnp.linalg.qr(m.astype(jnp.float32))
+    return q
+
+
+def _compressible(g: jnp.ndarray, cfg: PowerSGDConfig) -> bool:
+    return g.ndim >= 2 and g.size >= cfg.min_size
+
+
+def init_state(grads, cfg: PowerSGDConfig = PowerSGDConfig(),
+               key: Optional[jax.Array] = None) -> PowerSGDState:
+    key = key if key is not None else jax.random.PRNGKey(17)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(g, k):
+        if not _compressible(g, cfg):
+            return jnp.zeros((0,), jnp.float32)
+        n = g.reshape(g.shape[0], -1).shape[1] if g.ndim == 2 else \
+            int(jnp.prod(jnp.asarray(g.shape[1:])))
+        return jax.random.normal(k, (n, cfg.rank), jnp.float32)
+
+    qs = [one(g, k) for g, k in zip(leaves, keys)]
+    errs = [jnp.zeros(g.shape, jnp.float32) if _compressible(g, cfg)
+            else jnp.zeros((0,), jnp.float32) for g in leaves]
+    return PowerSGDState(q=jax.tree_util.tree_unflatten(treedef, qs),
+                         error=jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def compressed_mean(grads, state: PowerSGDState, axis_name: str,
+                    cfg: PowerSGDConfig = PowerSGDConfig()
+                    ) -> Tuple[Any, PowerSGDState]:
+    """Inside shard_map over `axis_name`: mean-reduce grads with PowerSGD.
+
+    Returns (reduced grads identical on all members, new state).
+    """
+    nmem = jax.lax.psum(1, axis_name)
+
+    def one(g, q, e):
+        if not _compressible(g, cfg):
+            return jax.lax.pmean(g, axis_name), q, e
+        shape = g.shape
+        g2 = g.reshape(shape[0], -1).astype(jnp.float32) + e.reshape(
+            shape[0], -1)
+        p = g2 @ q                                   # (K, r)
+        p = jax.lax.psum(p, axis_name) / nmem
+        p = _orthonormalize(p)
+        q_new = g2.T @ p                             # (N, r)
+        q_new = jax.lax.psum(q_new, axis_name) / nmem
+        g_hat = p @ q_new.T
+        err = (g2 - g_hat)                           # local error feedback
+        return (g_hat.reshape(shape).astype(g.dtype),
+                q_new if cfg.warm_start else q,
+                err.reshape(shape))
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_q = jax.tree_util.tree_flatten(state.q)[0]
+    flat_e = jax.tree_util.tree_flatten(state.error)[0]
+    outs = [one(g, q, e) for g, q, e in zip(flat_g, flat_q, flat_e)]
+    g_out = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    q_out = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    e_out = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return g_out, PowerSGDState(q=q_out, error=e_out)
+
+
+def compression_ratio(grads, cfg: PowerSGDConfig = PowerSGDConfig()) -> float:
+    """Bytes(un-compressed) / bytes(compressed) for reporting."""
+    full = compressed = 0
+    for g in jax.tree.leaves(grads):
+        full += g.size
+        if _compressible(g, cfg):
+            k = g.shape[0]
+            n = g.size // k
+            compressed += cfg.rank * (k + n)
+        else:
+            compressed += g.size
+    return full / max(compressed, 1)

@@ -1,0 +1,4 @@
+"""Baseline PTQ methods the paper compares against (RTN, SmoothQuant, GPTQ,
+ZeroQuant) plus shared quantization primitives and activation calibration."""
+
+from . import calibrate, common, gptq, rtn, smoothquant, zeroquant  # noqa: F401

@@ -1,0 +1,141 @@
+"""Activation calibration: record per-input-channel statistics at each dense.
+
+SmoothQuant needs per-channel activation absmax; GPTQ needs the input Gram
+matrix H = E[x x^T].  The recorder keys statistics by the identity of the
+weight leaf (stable in eager mode); run the model *unjitted* on a few
+calibration batches inside `recording(params)`, then translate to param
+paths with `stats_by_path`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Recorder:
+    """Keys statistics by (stacked-param path, layer index)."""
+
+    def __init__(self, collect_gram: bool = False):
+        self.absmax: Dict[tuple, np.ndarray] = {}
+        self.gram: Dict[tuple, np.ndarray] = {}
+        self.count: Dict[tuple, int] = {}
+        self.collect_gram = collect_gram
+        self._id_to_key: Dict[int, tuple] = {}
+
+    def register(self, tree, path_prefix: str, layer: Optional[int]) -> None:
+        """Map concrete leaf ids -> (path, layer) before a block executes."""
+        from ..core.apply import _path_str
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            full = (f"{path_prefix}/{_path_str(path)}"
+                    if path_prefix else _path_str(path))
+            self._id_to_key[id(leaf)] = (full, layer)
+
+    def record(self, wid: int, x: jnp.ndarray) -> None:
+        key = self._id_to_key.get(wid)
+        if key is None:
+            return
+        xf = np.asarray(jax.device_get(x), np.float32).reshape(-1, x.shape[-1])
+        am = np.abs(xf).max(axis=0)
+        if key in self.absmax:
+            self.absmax[key] = np.maximum(self.absmax[key], am)
+            self.count[key] += xf.shape[0]
+        else:
+            self.absmax[key] = am
+            self.count[key] = xf.shape[0]
+        if self.collect_gram:
+            g = xf.T @ xf
+            self.gram[key] = self.gram.get(key, 0.0) + g
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rec: Optional[Recorder] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def recording(collect_gram: bool = False):
+    rec = Recorder(collect_gram)
+    prev = _CTX.rec
+    _CTX.rec = rec
+    try:
+        yield rec
+    finally:
+        _CTX.rec = prev
+
+
+def maybe_record(w: Any, x: jnp.ndarray) -> None:
+    rec = _CTX.rec
+    if rec is None or isinstance(x, jax.core.Tracer):
+        return
+    try:
+        wid = id(w)
+    except Exception:
+        return
+    if hasattr(x, "shape") and x.ndim >= 2:
+        rec.record(wid, x)
+
+
+def calibrated_forward(params, cfg, batch):
+    """Forward pass with layer scans unrolled in Python so the recorder sees
+    concrete per-layer weights (inside lax.scan everything is a tracer and
+    nothing records).  Numerically identical to transformer.forward."""
+    from ..models import transformer as T
+    rec = _CTX.rec
+    assert rec is not None, "use inside calibrate.recording()"
+
+    x = T._embed_inputs(params, cfg, batch)
+    rec.register({k: v for k, v in params.items()
+                  if k not in ("period", "remainder")}, "", None)
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        import jax.numpy as jnp
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    layer = 0
+    for i in range(cfg.n_periods):
+        for p_i, kind in enumerate(cfg.block_pattern):
+            block = jax.tree.map(lambda l: l[i], params["period"][p_i])
+            rec.register(block, f"period/{p_i}", i)
+            x, _, _ = T.block_forward(block, cfg, kind, x, positions)
+            layer += 1
+    for rp, kind in zip(params["remainder"], cfg.remainder_pattern):
+        rec.register(rp, "remainder", None)
+        x, _, _ = T.block_forward(rp, cfg, kind, x, positions)
+    return T._logits(params, cfg, x)
+
+
+def stats_by_path(rec: Recorder, params) -> Dict[str, Dict[str, Any]]:
+    """Aggregate recorded stats: per stacked-param path, a merged view
+    (absmax: max over layers; gram: count-weighted mean) plus per-layer
+    entries under "layers" for slice-wise quantizers."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for (path, layer), am in rec.absmax.items():
+        entry = out.setdefault(path, {"layers": {}})
+        entry["absmax"] = (np.maximum(entry["absmax"], am)
+                          if "absmax" in entry else am)
+        sub = {"absmax": am, "count": rec.count[(path, layer)]}
+        if (path, layer) in rec.gram:
+            g = rec.gram[(path, layer)] / max(rec.count[(path, layer)], 1)
+            sub["gram"] = g
+            if "gram" in entry:
+                entry["gram"] = entry["gram"] + g
+                entry["_gram_n"] = entry["_gram_n"] + 1
+            else:
+                entry["gram"] = g.copy()
+                entry["_gram_n"] = 1
+        if layer is not None:
+            entry["layers"][layer] = sub
+    for entry in out.values():
+        if "_gram_n" in entry:
+            entry["gram"] = entry["gram"] / entry.pop("_gram_n")
+    return out

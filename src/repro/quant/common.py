@@ -1,0 +1,92 @@
+"""Shared uniform quantization primitives for the baseline methods.
+
+All baselines here are *fake-quant* for accuracy evaluation (quantize ->
+dequantize in fp32), matching how the paper compares perplexities; deployment
+kernels live in kernels/.  Activation A8 is per-token dynamic symmetric,
+toggled through a context so every `layers.dense` call picks it up.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def symmetric_scale(w: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.abs(w).max() if axis is None else jnp.abs(w).max(
+        axis=axis, keepdims=True)
+    return jnp.maximum(absmax, 1e-12) / qmax
+
+
+def quantize_symmetric(w: jnp.ndarray, bits: int, axis=None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int levels, scale). axis: reduction axes for per-channel scales."""
+    scale = symmetric_scale(w, bits, axis)
+    qmin, qmax = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(w / scale), qmin, qmax)
+    return q, scale
+
+
+def fake_quant_symmetric(w: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    q, scale = quantize_symmetric(w, bits, axis)
+    return q * scale
+
+
+def quantize_asymmetric(w: jnp.ndarray, bits: int, axis=None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """-> (uint levels, scale, zero_point)."""
+    if axis is None:
+        lo, hi = w.min(), w.max()
+    else:
+        lo = w.min(axis=axis, keepdims=True)
+        hi = w.max(axis=axis, keepdims=True)
+    qmax = 2.0 ** bits - 1
+    scale = jnp.maximum(hi - lo, 1e-12) / qmax
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(w / scale) + zp, 0, qmax)
+    return q, scale, zp
+
+
+def fake_quant_asymmetric(w: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    q, scale, zp = quantize_asymmetric(w, bits, axis)
+    return (q - zp) * scale
+
+
+def fake_quant_act_per_token(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Per-token (last-dim grouped) dynamic symmetric activation quant."""
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.abs(x).max(axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+# --- activation-quant context (read by layers.dense at trace time) ---------
+
+class _ActQuantCtx(threading.local):
+    def __init__(self):
+        self.bits: Optional[int] = None
+
+
+_ACT_CTX = _ActQuantCtx()
+
+
+@contextlib.contextmanager
+def activations_quantized(bits: Optional[int] = 8):
+    prev = _ACT_CTX.bits
+    _ACT_CTX.bits = bits
+    try:
+        yield
+    finally:
+        _ACT_CTX.bits = prev
+
+
+def maybe_quantize_activation(x: jnp.ndarray) -> jnp.ndarray:
+    if _ACT_CTX.bits is None:
+        return x
+    return fake_quant_act_per_token(x, _ACT_CTX.bits)

@@ -1,0 +1,100 @@
+"""GPTQ (arXiv:2210.17323) baseline: Hessian-guided error-compensating
+weight quantization.
+
+For each weight matrix W (K, N) with layer-input Gram H = E[x x^T] (K, K),
+quantize input-rows one at a time in blocks; after quantizing row k, the
+remaining rows absorb the scaled quantization error via the Cholesky factor
+of the (damped) inverse Hessian -- the standard GPTQ recursion, offline in
+numpy (quantization is a one-time cost).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.apply import _path_str, default_should_quantize
+
+
+def gptq_quantize_matrix(w: np.ndarray, gram: Optional[np.ndarray],
+                         bits: int, block: int = 128,
+                         percdamp: float = 0.01) -> np.ndarray:
+    """w: (K, N) fp32; gram: (K, K) E[x x^T] or None (falls back to identity,
+    which degenerates to RTN with error feedback along rows)."""
+    k, n = w.shape
+    wq = w.copy().astype(np.float64)
+    h = (gram.astype(np.float64).copy() if gram is not None
+         else np.eye(k))
+    # dead input channels
+    dead = np.diag(h) <= 0
+    h[dead, dead] = 1.0
+    wq[dead, :] = 0.0
+    damp = percdamp * float(np.mean(np.diag(h)))
+    h[np.diag_indices(k)] += max(damp, 1e-8)
+
+    # per-output-channel symmetric scale from the original weights
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = np.maximum(np.abs(w).max(axis=0), 1e-12) / qmax   # (N,)
+
+    # inverse Hessian Cholesky (upper)
+    hinv = np.linalg.inv(h)
+    # enforce symmetry for numerical stability
+    hinv = (hinv + hinv.T) / 2.0
+    try:
+        u = np.linalg.cholesky(hinv).T        # upper triangular
+    except np.linalg.LinAlgError:
+        hinv += np.eye(k) * (1e-6 * np.trace(hinv) / k)
+        u = np.linalg.cholesky(hinv).T
+
+    for b0 in range(0, k, block):
+        b1 = min(b0 + block, k)
+        w_blk = wq[b0:b1].copy()
+        err_blk = np.zeros_like(w_blk)
+        for i in range(b1 - b0):
+            kk = b0 + i
+            d = u[kk, kk]
+            q = np.clip(np.round(w_blk[i] / scale), -qmax - 1, qmax)
+            dq = q * scale
+            err = (w_blk[i] - dq) / d
+            # compensate remaining rows inside the block
+            if i + 1 < b1 - b0:
+                w_blk[i + 1:] -= np.outer(u[kk, b0 + i + 1:b1], err)
+            err_blk[i] = err
+            w_blk[i] = dq
+        wq[b0:b1] = w_blk
+        # propagate block error to all later rows
+        if b1 < k:
+            wq[b1:] -= u[b0:b1, b1:].T @ err_blk
+    # final clamp to the grid (rows were compensated after being quantized
+    # only within later blocks; re-round everything once for safety)
+    wq = np.clip(np.round(wq / scale), -qmax - 1, qmax) * scale
+    return wq.astype(np.float32)
+
+
+def gptq_params(params: Any, act_stats: Dict[str, Dict], bits: int,
+                should_quantize=None) -> Any:
+    sq = should_quantize or default_should_quantize
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        if not sq(pstr, leaf):
+            out.append(leaf)
+            continue
+        stats = act_stats.get(pstr, {})
+        gram = stats.get("gram")
+        w = np.asarray(jax.device_get(leaf), np.float32)
+        if w.ndim == 2:
+            wq = gptq_quantize_matrix(w, gram, bits)
+        else:
+            layers = stats.get("layers", {})
+            w2 = w.reshape((-1,) + w.shape[-2:])
+            wq = np.stack([
+                gptq_quantize_matrix(
+                    w2[j], layers.get(j, {}).get("gram", gram), bits)
+                for j in range(w2.shape[0])]).reshape(w.shape)
+        out.append(jnp.asarray(wq, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,32 @@
+"""Round-To-Nearest (RTN) WxA8 baseline: per-output-channel symmetric weight
+quantization at x in {8, 4, 3} bits; activations A8 via the shared context."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from ..core.apply import default_should_quantize, _path_str
+from .common import fake_quant_symmetric
+import jax
+
+
+def rtn_quantize_tensor(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-output-channel (last dim) symmetric RTN."""
+    reduce_axes = tuple(range(w.ndim - 1))
+    return fake_quant_symmetric(w.astype(jnp.float32), bits,
+                                axis=reduce_axes).astype(w.dtype)
+
+
+def rtn_quantize_params(params: Any, bits: int,
+                        should_quantize=None) -> Any:
+    sq = should_quantize or default_should_quantize
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        if sq(_path_str(path), leaf):
+            out.append(rtn_quantize_tensor(leaf, bits))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

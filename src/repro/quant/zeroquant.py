@@ -1,0 +1,80 @@
+"""ZeroQuant baselines (arXiv:2206.01861, AAAI'24 LoRC study).
+
+ZQ-Local: fine-grained quantization on t x t tiles (128x128 in the paper)
+with per-tile scale and zero-point, compensation ratio 1.0.
+ZQ-Global: fuses groups of 64 input channels and applies a global
+compensation factor 0.8 per tile's scale to reduce calibration complexity.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import tiling
+from ..core.apply import _path_str, default_should_quantize
+from .common import quantize_asymmetric
+
+
+def zq_local_tensor(w: jnp.ndarray, bits: int, tile: int = 128,
+                    compensation: float = 1.0) -> jnp.ndarray:
+    """Per-tile asymmetric quantization with per-tile (scale, zp)."""
+    wf = w.astype(jnp.float32)
+    tiles = tiling.to_tiles(wf, tile)                 # (n, t, t)
+    q, scale, zp = quantize_asymmetric(tiles, bits, axis=(1, 2))
+    deq = (q - zp) * (scale * compensation)
+    return tiling.from_tiles(deq, wf.shape, tile).astype(w.dtype)
+
+
+def zq_global_tensor(w: jnp.ndarray, bits: int, group: int = 64,
+                     compensation: float = 0.8) -> jnp.ndarray:
+    """Channel-group quantization: fuse `group` input rows per scale.
+
+    The global compensation factor rescales each group's reconstruction by
+    a least-squares-optimal scalar, damped by `compensation` toward 1 --
+    a deployable per-group constant (folds into the stored scale):
+      c* = <w, deq> / <deq, deq>;  w_hat = (1 + comp*(c*-1)) * deq
+    """
+    wf = w.astype(jnp.float32)
+    k, n = wf.shape
+    pad = (-k) % group
+    wp = jnp.pad(wf, ((0, pad), (0, 0)))
+    g = wp.reshape(-1, group, n)
+    q, scale, zp = quantize_asymmetric(g, bits, axis=(1,))
+    deq = (q - zp) * scale
+    num = (g * deq).sum(axis=1, keepdims=True)
+    den = (deq * deq).sum(axis=1, keepdims=True)
+    c_ls = jnp.clip(num / jnp.maximum(den, 1e-12), 0.5, 1.5)
+    deq = deq * (1.0 + compensation * (c_ls - 1.0))
+    return deq.reshape(k + pad, n)[:k].astype(w.dtype)
+
+
+def _map_tensor(fn, params, should_quantize=None):
+    sq = should_quantize or default_should_quantize
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        if not sq(_path_str(path), leaf):
+            out.append(leaf)
+            continue
+        if leaf.ndim == 2:
+            out.append(fn(leaf))
+        else:
+            w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+            out.append(jnp.stack([fn(w2[j]) for j in range(w2.shape[0])]
+                                 ).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zq_local_params(params: Any, bits: int, tile: int = 128,
+                    should_quantize=None) -> Any:
+    return _map_tensor(lambda w: zq_local_tensor(w, bits, tile), params,
+                       should_quantize)
+
+
+def zq_global_params(params: Any, bits: int, group: int = 64,
+                     should_quantize=None) -> Any:
+    return _map_tensor(lambda w: zq_global_tensor(w, bits, group), params,
+                       should_quantize)

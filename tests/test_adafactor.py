@@ -1,0 +1,71 @@
+"""Adafactor (factored second moment) optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adafactor as AF
+
+
+def test_factored_state_shapes():
+    params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,)),
+              "stack": jnp.zeros((4, 6, 10))}
+    st = AF.init(params)
+    assert st.vr["w"].shape == (16,)
+    assert st.vc["w"].shape == (8,)
+    assert st.vr["b"].shape == (8,)       # vectors keep full moment
+    assert st.vc["b"].shape == (0,)
+    assert st.vr["stack"].shape == (4, 6)
+    assert st.vc["stack"].shape == (4, 10)
+
+
+def test_quadratic_convergence():
+    target = jnp.asarray(np.random.default_rng(0)
+                         .normal(size=(16, 8)).astype(np.float32))
+    params = {"w": jnp.zeros((16, 8))}
+    cfg = AF.AdafactorConfig(weight_decay=0.0, clip_norm=None)
+    state = AF.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = AF.update(g, state, params, 0.05, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_state_smaller_than_adamw():
+    from repro.optim import adamw
+    from repro.models import module as M
+    params = {"w": jnp.zeros((256, 512), jnp.bfloat16)}
+    af = AF.init(params)
+    aw = adamw.init(params)
+
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    assert nbytes((af.mu, af.vr, af.vc)) < 0.6 * nbytes((aw.mu, aw.nu))
+
+
+def test_train_step_integration():
+    import repro.configs as configs
+    from repro.launch.train import TrainConfig, TrainState, make_train_step
+    from repro.models import module as M
+    from repro.models import transformer as T
+    cfg = configs.get_smoke_config("granite-8b")
+    tcfg = TrainConfig(optimizer="adafactor", grad_accum=1, total_steps=10,
+                       warmup_steps=1)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+    state = TrainState(params, AF.init(params, tcfg.adafactor))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab),
+             "positions": jnp.broadcast_to(jnp.arange(32), (2, 32))}
+    losses = []
+    for _ in range(4):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]

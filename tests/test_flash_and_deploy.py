@@ -1,0 +1,174 @@
+"""Flash attention (pure-JAX custom VJP + Pallas kernels), a2a MoE,
+deploy-format weights, int8 KV cache."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as configs
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.models.attention import causal_blockwise_attention, decode_attention
+from repro.models.flash import flash_attention
+
+
+class TestFlashVjp:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(32, 160), st.sampled_from([(4, 4), (4, 2)]),
+           st.sampled_from([None, 64]), st.sampled_from([None, 30.0]))
+    def test_forward_matches_blockwise(self, s, heads, window, cap):
+        h, hkv = heads
+        rng = np.random.default_rng(s)
+        q = jnp.asarray(rng.normal(size=(1, s, h, 16)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, s, hkv, 16)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, s, hkv, 16)).astype(np.float32))
+        a = flash_attention(q, k, v, chunk=32, window=window,
+                            attn_softcap=cap)
+        b = causal_blockwise_attention(q, k, v, chunk=32, window=window,
+                                       attn_softcap=cap)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_gradients_match_autodiff(self, rng):
+        q = jnp.asarray(rng.normal(size=(1, 96, 2, 8)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, 96, 2, 8)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, 96, 2, 8)).astype(np.float32))
+
+        def f_flash(q, k, v):
+            return (flash_attention(q, k, v, chunk=32) ** 2).sum()
+
+        def f_block(q, k, v):
+            return (causal_blockwise_attention(q, k, v, chunk=32) ** 2).sum()
+
+        gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+        gb = jax.grad(f_block, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gf, gb):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+
+
+class TestPallasFlash:
+    def test_fwd_bwd_vs_pure_jax(self, rng):
+        from repro.kernels.flash_attention import flash_bwd, flash_fwd
+        BH, S, D = 2, 128, 16
+        q = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))
+        do = jnp.asarray(rng.normal(size=(BH, S, D)).astype(np.float32))
+        out, lse = flash_fwd(q, k, v, bq=32, bk=32, interpret=True)
+        ref = flash_attention(q.reshape(BH, S, 1, D),
+                              k.reshape(BH, S, 1, D),
+                              v.reshape(BH, S, 1, D),
+                              chunk=32).reshape(BH, S, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        dq, dk, dv = flash_bwd(q, k, v, out, lse, do, bq=32, bk=32,
+                               interpret=True)
+
+        def loss(q, k, v):
+            o = flash_attention(q.reshape(BH, S, 1, D),
+                                k.reshape(BH, S, 1, D),
+                                v.reshape(BH, S, 1, D), chunk=32)
+            return (o.reshape(BH, S, D) * do).sum()
+
+        gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip((dq, dk, dv), (gq, gk, gv)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_flash_decode_int8(self, rng):
+        from repro.kernels.flash_decode import flash_decode_int8
+        from repro.models.transformer import _dequantize_kv, _quantize_kv
+        B, S, H, Hkv, D = 2, 64, 4, 2, 16
+        G = H // Hkv
+        q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+        length = jnp.array([50, 64], jnp.int32)
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ref = decode_attention(q, _dequantize_kv(kq, ks, jnp.float32),
+                               _dequantize_kv(vq, vs, jnp.float32), length)
+        out = flash_decode_int8(
+            q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D),
+            kq.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D),
+            ks.transpose(0, 2, 1).reshape(B * Hkv, S),
+            vq.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D),
+            vs.transpose(0, 2, 1).reshape(B * Hkv, S),
+            jnp.repeat(length, Hkv), bs=32, interpret=True)
+        out = out.reshape(B, Hkv, G, D).reshape(B, H, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestA2aMoe:
+    def test_matches_reference_single_device(self):
+        from repro.configs.base import MoeConfig
+        from repro.models.moe import moe_ffn, moe_ffn_specs
+        from repro.models.moe_shardmap import moe_ffn_a2a
+        cfg = MoeConfig(n_experts=4, top_k=2, capacity_factor=4.0)
+        p = M.init_params(moe_ffn_specs(16, 32, cfg, jnp.float32),
+                          jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with mesh:
+            ref, _ = moe_ffn(p, x, cfg)
+            out, _ = moe_ffn_a2a(p, x, cfg, mesh)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDeployWeights:
+    def test_dequant_matches_dense_part(self, rng):
+        from repro.core.deploy import pack_from_quantized
+        from repro.core.quantize import HaloConfig, halo_quantize_tensor
+        w = jnp.asarray(rng.normal(0, 0.05, (260, 140)).astype(np.float32))
+        hq = halo_quantize_tensor(w, None, HaloConfig())
+        dq = pack_from_quantized(hq)
+        np.testing.assert_allclose(
+            np.asarray(dq.dequantize(jnp.float32)),
+            np.asarray(hq.dense_part()), rtol=1e-6, atol=1e-6)
+
+    def test_deploy_specs_structure(self):
+        from repro.core.deploy import DeployQuantWeight, deploy_model_specs
+        cfg = configs.get_config("mistral-large-123b")
+        specs = deploy_model_specs(T.model_specs(cfg))
+        found = [l for l in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, DeployQuantWeight))
+            if isinstance(x := l, DeployQuantWeight)]
+        assert len(found) > 0
+        # idx arrays must be uint8 with halved last dims
+        for dw in found:
+            assert dw.idx_packed.dtype == jnp.uint8
+
+
+class TestInt8KvCache:
+    def test_decode_close_to_fp_cache(self):
+        cfg = dataclasses.replace(configs.get_smoke_config("granite-8b"),
+                                  dtype=jnp.float32)
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks,
+                 "positions": jnp.broadcast_to(jnp.arange(32), (2, 32))}
+        lg1, c1, l1 = T.prefill(params, cfg, batch, max_seq=48)
+        lg2, c2, l2 = T.prefill(params, cfg8, batch, max_seq=48)
+        assert c2["period"][0].k.dtype == jnp.int8
+        d1 = T.decode_step(params, cfg, {"tokens": toks[:, -1]}, c1, l1)[0]
+        d2 = T.decode_step(params, cfg8, {"tokens": toks[:, -1]}, c2, l2)[0]
+        rel = float(jnp.abs(d1 - d2).max() / (jnp.abs(d1).max() + 1e-9))
+        assert rel < 0.05
+
+    def test_quantize_roundtrip_error_bounded(self, rng):
+        from repro.models.transformer import _dequantize_kv, _quantize_kv
+        x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)).astype(np.float32))
+        q, s = _quantize_kv(x)
+        back = _dequantize_kv(q, s, jnp.float32)
+        err = np.abs(np.asarray(back - x))
+        step = np.asarray(s)[..., None]
+        assert (err <= step * 0.51 + 1e-7).all()

@@ -1,0 +1,157 @@
+"""HALO quantizer invariants (unit + hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assign, codebooks, outliers, tiling
+from repro.core.quantize import HaloConfig, effective_bits, halo_quantize_tensor, quant_error
+
+
+def make_weight(rng, k, n, scale=0.02):
+    return jnp.asarray(rng.normal(0, scale, (k, n)).astype(np.float32))
+
+
+def make_fisher(rng, k, n):
+    return jnp.asarray((rng.normal(0, 1, (k, n)) ** 2).astype(np.float32))
+
+
+class TestTiling:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(5, 200), st.integers(5, 200),
+           st.sampled_from([16, 32, 64, 128]))
+    def test_roundtrip(self, k, n, tile):
+        rng = np.random.default_rng(k * 1000 + n)
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        tiles = tiling.to_tiles(w, tile)
+        back = tiling.from_tiles(tiles, (k, n), tile)
+        assert back.shape == (k, n)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+    @given(st.integers(1, 300), st.integers(1, 300))
+    @settings(max_examples=25, deadline=None)
+    def test_grid_dims(self, k, n):
+        kt, nt = tiling.grid_dims(k, n, 64)
+        assert kt * 64 >= k and (kt - 1) * 64 < k
+        assert nt * 64 >= n and (nt - 1) * 64 < n
+
+
+class TestAssign:
+    def test_theta_monotone(self):
+        rng = np.random.default_rng(3)
+        scores = jnp.asarray(rng.exponential(size=200).astype(np.float32))
+        fracs = []
+        for theta in (0.5, 0.8, 0.95, 0.999):
+            res = assign.assign_classes(scores, theta)
+            f3 = float((np.asarray(res.classes)
+                        == codebooks.TILE_CLASS_F3).mean())
+            fracs.append(f3)
+        # higher retention -> fewer low-sensitivity (F3) tiles
+        assert all(a >= b - 1e-9 for a, b in zip(fracs, fracs[1:]))
+
+    def test_low_mask_is_bottom_of_ranking(self):
+        scores = jnp.asarray(np.array([5.0, 0.1, 3.0, 0.2, 0.1], np.float32))
+        low, k = assign.compute_adaptive_k(scores, theta=0.9)
+        low = np.asarray(low)
+        # the large-score tiles must not be classified low-sensitive
+        assert not low[0] and not low[2]
+
+    def test_retention_bound(self):
+        rng = np.random.default_rng(4)
+        scores = jnp.asarray(rng.exponential(size=500).astype(np.float32))
+        theta = 0.95
+        low, _ = assign.compute_adaptive_k(scores, theta)
+        retained = float(scores[~np.asarray(low)].sum() / scores.sum())
+        assert retained >= theta - 1e-5
+
+
+class TestOutliers:
+    def test_three_sigma(self, rng):
+        w = rng.normal(0, 1, (100, 100)).astype(np.float32)
+        w[3, 5] = 25.0
+        m = np.asarray(outliers.outlier_mask(jnp.asarray(w)))
+        assert m[3, 5]
+        assert m.mean() < 0.05
+
+    def test_sparse_roundtrip(self, rng):
+        w = jnp.asarray(rng.normal(0, 1, (64, 48)).astype(np.float32))
+        mask = jnp.asarray(rng.random((64, 48)) < 0.02)
+        dense, sp = outliers.extract_sparse(w, mask)
+        # dense part zeroed at mask
+        assert float(jnp.abs(jnp.where(mask, dense, 0)).max()) == 0
+        # reconstruction error bounded by 8-bit per-channel step
+        rec = dense + sp.to_dense()
+        err = np.asarray(jnp.abs(rec - w))[np.asarray(mask)]
+        step = np.asarray(sp.chan_scale).max()
+        assert err.max() <= step * 0.5 + 1e-6
+
+    def test_sparse_matmul_matches_dense(self, rng):
+        w = jnp.asarray(rng.normal(0, 1, (32, 40)).astype(np.float32))
+        mask = jnp.asarray(rng.random((32, 40)) < 0.05)
+        _, sp = outliers.extract_sparse(w, mask)
+        x = jnp.asarray(rng.normal(size=(7, 32)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(sp.matmul(x)),
+                                   np.asarray(x @ sp.to_dense()),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestHaloQuantize:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(40, 200), st.integers(40, 200),
+           st.sampled_from([32, 64]))
+    def test_invariants(self, k, n, tile):
+        rng = np.random.default_rng(k * 7 + n)
+        w = make_weight(rng, k, n)
+        g2 = make_fisher(rng, k, n)
+        hq = halo_quantize_tensor(w, g2, HaloConfig(tile=tile))
+        idx = np.asarray(hq.idx)
+        cls = np.asarray(hq.classes)
+        lo, hi = codebooks.f3_index_range()
+        # all indices fit 4 bits
+        assert idx.min() >= 0 and idx.max() <= 15
+        # F3 tiles use only the 9-value contiguous range
+        f3 = idx[cls == codebooks.TILE_CLASS_F3]
+        if f3.size:
+            assert f3.min() >= lo and f3.max() <= hi
+        # scales positive
+        assert np.asarray(hq.scale).min() > 0
+        # sparse fraction below 1.5% (0.45% nominal + slack for tiny tensors)
+        assert hq.sparse.nnz <= max(0.015 * k * n, 8)
+
+    def test_error_reasonable(self, rng):
+        w = make_weight(rng, 256, 256)
+        g2 = make_fisher(rng, 256, 256)
+        hq = halo_quantize_tensor(w, g2, HaloConfig(tile=64))
+        # log-codebook worst-case relative step is 1/3 -> rms err well below
+        assert quant_error(hq, w) < 0.25
+
+    def test_theta_tradesoff_bits_for_error(self, rng):
+        w = make_weight(rng, 256, 192)
+        g2 = make_fisher(rng, 256, 192)
+        cfg = HaloConfig(tile=32)
+        hq_perf = halo_quantize_tensor(w, g2, cfg, theta=0.5)
+        hq_acc = halo_quantize_tensor(w, g2, cfg, theta=0.999)
+        assert effective_bits(hq_perf) <= effective_bits(hq_acc) + 1e-9
+        assert quant_error(hq_acc, w) <= quant_error(hq_perf, w) + 1e-6
+
+    def test_effective_bits_in_paper_range(self, rng):
+        w = make_weight(rng, 512, 384)
+        g2 = make_fisher(rng, 512, 384)
+        hq = halo_quantize_tensor(w, g2, HaloConfig(tile=64))
+        bits = effective_bits(hq)
+        assert 3.0 <= bits <= 4.5      # paper Table II: 3.0-4.0 + overheads
+
+    def test_calibration_free_mode(self, rng):
+        w = make_weight(rng, 130, 70)
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=32))
+        assert quant_error(hq, w) < 0.3
+
+    def test_smaller_tiles_reduce_error(self, rng):
+        # paper SIV-D: finer tiles -> better fidelity
+        w = make_weight(rng, 256, 256)
+        g2 = make_fisher(rng, 256, 256)
+        errs = [quant_error(halo_quantize_tensor(
+            w, g2, HaloConfig(tile=t)), w) for t in (128, 32)]
+        assert errs[1] <= errs[0] + 1e-6

@@ -1,0 +1,73 @@
+"""Unit + property tests for the Booth MAC timing/energy model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.hw import mac_model as mm
+
+
+class TestCsdRecoding:
+    @given(st.integers(min_value=-128, max_value=127))
+    def test_roundtrip(self, w):
+        d = mm.csd_digits(w)
+        assert sum(di * 2**i for i, di in enumerate(d)) == w
+
+    @given(st.integers(min_value=-128, max_value=127))
+    def test_nonadjacent(self, w):
+        d = mm.csd_digits(w)
+        for i in range(len(d) - 1):
+            assert not (d[i] != 0 and d[i + 1] != 0)
+
+    @given(st.integers(min_value=-128, max_value=127))
+    def test_digits_in_range(self, w):
+        assert all(di in (-1, 0, 1) for di in mm.csd_digits(w))
+
+    def test_minimality_examples(self):
+        # CSD is the minimal-nonzero signed-digit form
+        assert mm.nnz_pp(0) == 0
+        for k in range(8):
+            if -128 <= 2**k <= 127:
+                assert mm.nnz_pp(2**k) == 1
+            assert mm.nnz_pp(-(2**k)) == 1
+        assert mm.nnz_pp(85) == 4          # 0b1010101
+        assert mm.nnz_pp(-127) == 2        # -128 + 1
+
+
+class TestFrequencyClasses:
+    def test_paper_anchors(self):
+        v = mm.validate_against_paper()
+        assert v["f3_size"] == 9
+        assert v["f2_size"] == 16
+        assert v["f3_ghz"] == pytest.approx(3.7, abs=1e-3)
+        assert v["f2_ghz"] == pytest.approx(2.4, abs=1e-3)
+        assert v["f1_ghz"] == pytest.approx(1.9, abs=1e-3)
+
+    def test_class_contents(self):
+        cls = mm.frequency_classes()
+        assert set(cls["F3"].tolist()) == {0, 1, -1, 2, -2, 4, -4, 8, -8}
+        f2 = set(cls["F2"].tolist())
+        assert f2 == {0, 1, -1, 2, -2, 4, -4, 8, -8,
+                      16, -16, 32, -32, 64, -64, -128}
+        assert set(cls["F3"].tolist()) <= f2
+
+    def test_f1_covers_all(self):
+        assert mm.frequency_classes()["F1"].size == 256
+
+    def test_delay_energy_correlation(self):
+        # paper Fig. 5: faster values also switch less
+        v = mm.validate_against_paper()
+        assert v["delay_energy_corr"] > 0.5
+
+    @given(st.integers(min_value=-128, max_value=127))
+    def test_luts_positive(self, w):
+        assert mm.delay_lut()[w + 128] > 0
+        assert mm.energy_lut()[w + 128] > 0
+
+    def test_class_freq_is_min_over_values(self):
+        cls = mm.frequency_classes()
+        f = mm.achievable_freq_ghz()
+        for name, vals in cls.items():
+            expect = min(f[v + 128] for v in vals)
+            assert mm.max_freq_for_values(vals) == pytest.approx(
+                float(expect), rel=1e-6)
