@@ -1,0 +1,13 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench-smoke bench-serving
+
+test:            ## tier-1 test suite
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
+	$(PYTHON) benchmarks/serving_latency.py --smoke
+
+bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
+	$(PYTHON) benchmarks/serving_latency.py

@@ -1,0 +1,146 @@
+"""Serving latency: dense vs XLA-dequant vs packed-kernel fast path.
+
+Measures prefill and decode tokens/s on the bench-llama config for the
+three weight formats the engine serves:
+
+  dense        fp32 weights, scan decode loop
+  xla_dequant  DeployQuantWeight, legacy per-token loop with per-call XLA
+               dequantization -- the pre-fast-path serving behavior
+  packed       HaloPacked via core.deploy.pack_params: pack-at-load,
+               jitted lax.scan decode, halo_matmul/SpMV kernels (Pallas on
+               TPU; interpret on this CPU container), single host sync
+
+Writes BENCH_serving.json at the repo root so the perf trajectory tracks
+the packed-path speedup (decode speedup_vs_dequant is the headline).
+
+  PYTHONPATH=src python benchmarks/serving_latency.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from benchmarks.common import bench_config                    # noqa: E402
+from repro.core import deploy                                 # noqa: E402
+from repro.core.apply import quantize_params                  # noqa: E402
+from repro.core.quantize import HaloConfig                    # noqa: E402
+from repro.models import module as M                          # noqa: E402
+from repro.models import transformer as T                     # noqa: E402
+from repro.serving.engine import Engine                       # noqa: E402
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serving.json")
+
+
+def _prefill_once(eng: Engine, prompts, max_new: int, legacy: bool):
+    """Run exactly the prefill the timed generate path runs (the legacy
+    loop prefills unbucketed; the scan path pads to the bucket)."""
+    if legacy:
+        b, s = prompts["tokens"].shape
+        return eng._prefill(eng.params, batch=dict(prompts),
+                            max_seq=s + max_new)
+    return eng.run_prefill(dict(prompts), max_new)
+
+
+def _time_generate(eng: Engine, prompts, max_new: int, legacy: bool,
+                   repeats: int) -> dict:
+    """Prefill and end-to-end decode timings (post-warmup best of N)."""
+    b = prompts["tokens"].shape[0]
+    # warmup compiles both stages
+    eng.generate(dict(prompts), max_new=max_new, legacy_loop=legacy)
+
+    pre_ts, dec_ts = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        logits, cache, lengths = _prefill_once(eng, prompts, max_new, legacy)
+        jax.block_until_ready(logits)
+        pre_ts.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        toks = eng.generate(dict(prompts), max_new=max_new,
+                            legacy_loop=legacy)
+        dec_ts.append(time.perf_counter() - t0)
+        assert toks.shape == (b, max_new)
+
+    s = prompts["tokens"].shape[1]
+    pre, gen = min(pre_ts), min(dec_ts)
+    # generate() times prefill + decode; subtract the separately measured
+    # prefill so decode_tokens_per_s tracks the decode stage alone
+    dec = max(gen - pre, 1e-9)
+    return {
+        "loop": "legacy_per_token" if legacy else "jit_scan",
+        "prefill_s": pre,
+        "prefill_tokens_per_s": b * s / pre,
+        "generate_s": gen,
+        "decode_s": dec,
+        "decode_tokens_per_s": b * max_new / dec,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (fast compile)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.prompt, args.max_new, args.repeats = 2, 16, 16, 2
+
+    cfg = bench_config("llama")
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+    print(f"quantizing {cfg.name} (tile=128) ...")
+    q = quantize_params(params, None, HaloConfig(tile=128))
+
+    rng = np.random.default_rng(0)
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt))
+        .astype(np.int32))}
+
+    paths = {
+        "dense": (Engine(params, cfg), False),
+        "xla_dequant": (Engine(deploy.deploy_params(q), cfg), True),
+        "packed": (Engine(deploy.pack_params(q), cfg), False),
+    }
+    results = {}
+    for name, (eng, legacy) in paths.items():
+        print(f"[{name}] warm up + {args.repeats} timed runs ...")
+        results[name] = _time_generate(eng, prompts, args.max_new, legacy,
+                                       args.repeats)
+        print(f"  prefill {results[name]['prefill_tokens_per_s']:8.1f} tok/s"
+              f"  decode {results[name]['decode_tokens_per_s']:8.1f} tok/s")
+
+    speedup = (results["packed"]["decode_tokens_per_s"]
+               / results["xla_dequant"]["decode_tokens_per_s"])
+    report = {
+        "bench": "serving_latency",
+        "config": cfg.name,
+        "backend": jax.default_backend(),
+        "batch": args.batch,
+        "prompt_len": args.prompt,
+        "max_new": args.max_new,
+        "paths": results,
+        "packed_decode_speedup_vs_dequant": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"packed decode speedup vs XLA-dequant: {speedup:.2f}x "
+          f"-> {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

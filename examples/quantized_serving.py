@@ -1,6 +1,8 @@
 """End-to-end quantized serving: train a small LM, HALO-quantize, pack to
-the 4-bit deployment format, and serve batched requests through the engine
-with int8 KV caches -- the paper's deployment scenario in miniature.
+the 4-bit deployment format (core.deploy.pack_params) and serve batched
+requests through the engine's device-resident decode loop with int8 KV
+caches -- the paper's deployment scenario in miniature.  See
+docs/serving.md for the pack-at-load flow and the two serving paths.
 
   PYTHONPATH=src python examples/quantized_serving.py
 """
@@ -17,7 +19,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from benchmarks import common  # noqa: E402
-from repro.core.apply import dequantize_params, quantize_params  # noqa: E402
+from repro.core.apply import quantize_params  # noqa: E402
+from repro.core.deploy import pack_params  # noqa: E402
 from repro.core.quantize import HaloConfig  # noqa: E402
 from repro.serving.engine import Engine, SamplerConfig  # noqa: E402
 
@@ -26,9 +29,9 @@ def main():
     print("=== train + calibrate + quantize (bal) ===")
     cfg, params = common.train_reference("llama", steps=300)
     fisher, _ = common.collect_calibration(params, cfg, with_gram=False)
-    qparams = quantize_params(params, fisher, HaloConfig(tile=64),
+    qparams = quantize_params(params, fisher, HaloConfig(tile=128),
                               theta=0.95)
-    served = dequantize_params(qparams)
+    served = pack_params(qparams)     # 4-bit kernel-ready tree, pack once
 
     print("=== serve batched requests (greedy + int8 KV) ===")
     cfg_srv = dataclasses.replace(cfg, kv_cache_dtype="int8")

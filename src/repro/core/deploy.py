@@ -80,7 +80,11 @@ def deploy_spec_of(spec: ParamSpec) -> Any:
 
 
 def deploy_model_specs(specs: Any, should_quantize=None) -> Any:
-    """Replace quantizable matmul ParamSpecs with DeployQuantWeight specs."""
+    """Replace quantizable matmul ParamSpecs with DeployQuantWeight specs.
+
+    Selection shares ``default_should_quantize`` (path exclusions, dtype,
+    min matmul dims) -- the only deploy-specific extra is the kernel's
+    tile-size floor: both matmul dims must cover one 128x128 tile."""
     from .apply import _path_str, default_should_quantize
     sq = should_quantize or default_should_quantize
 
@@ -88,12 +92,9 @@ def deploy_model_specs(specs: Any, should_quantize=None) -> Any:
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     out = []
     for path, leaf in flat:
-        pstr = _path_str(path)
-        fake = jnp.zeros((2, 2), jnp.float32) if leaf.shape[-1:] else None
-        looks = (isinstance(leaf, ParamSpec) and len(leaf.shape) >= 2
-                 and leaf.shape[-1] >= TILE and leaf.shape[-2] >= TILE
-                 and leaf.dtype in (jnp.float32, jnp.bfloat16))
-        if looks and sq(pstr, jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)):
+        tiled = (isinstance(leaf, ParamSpec) and len(leaf.shape) >= 2
+                 and leaf.shape[-1] >= TILE and leaf.shape[-2] >= TILE)
+        if tiled and sq(_path_str(path), leaf.abstract()):
             out.append(deploy_spec_of(leaf))
         else:
             out.append(leaf)
@@ -109,3 +110,78 @@ def pack_from_quantized(hq: HaloQuantized) -> DeployQuantWeight:
     return DeployQuantWeight(idx_packed=packed.idx_packed,
                              scale=packed.scale.reshape(kt, nt, TILE),
                              shape=tuple(hq.shape))
+
+
+# ---------------------------------------------------------------------------
+# load-time pytree packing (the serving fast path)
+# ---------------------------------------------------------------------------
+
+def _is_quantized(x) -> bool:
+    from .apply import StackedHalo
+    return isinstance(x, (HaloQuantized, StackedHalo))
+
+
+def _packable(hq: HaloQuantized) -> bool:
+    return (hq.tile == TILE and hq.shape[0] >= TILE and hq.shape[1] >= TILE)
+
+
+def pack_params(qparams: Any, scheduled: bool = True) -> Any:
+    """HaloQuantized/StackedHalo leaves -> kernel-ready ``HaloPacked``.
+
+    Done ONCE at model load: packs 4-bit codebook indices, precomputes the
+    class-grouped tile schedule, and buckets the sparse outlier stream into
+    SpMV chunks.  Stacked (scan-over-layers / per-expert) weights become a
+    single stacked ``HaloPacked`` whose leaves carry the stack dims, so the
+    jitted decode scan slices them with zero per-token Python work.
+
+    Leaves quantized with a non-kernel tile (tile != 128) or smaller than
+    one tile fall back to dense bf16 -- they are the rare small matrices
+    where the 4-bit stream buys nothing.
+    """
+    from ..kernels.ops import pack_halo, stack_packed
+    from .apply import StackedHalo
+
+    def pack(leaf):
+        if isinstance(leaf, HaloQuantized):
+            if _packable(leaf):
+                return pack_halo(leaf, scheduled=scheduled)
+            return leaf.dequantize().astype(jnp.bfloat16)
+        if isinstance(leaf, StackedHalo):
+            if all(_packable(s) for s in leaf.slices):
+                return stack_packed([pack_halo(s, scheduled=scheduled)
+                                     for s in leaf.slices], leaf.lead_shape)
+            return leaf.dequantize().astype(jnp.bfloat16)
+        return leaf
+
+    return jax.tree.map(pack, qparams, is_leaf=_is_quantized)
+
+
+def deploy_params(qparams: Any) -> Any:
+    """HaloQuantized/StackedHalo leaves -> ``DeployQuantWeight``.
+
+    The XLA-dequant serving path: HBM holds 4-bit weights, every matmul
+    rematerializes bf16 via arithmetic decode.  Kept as the portability
+    fallback and as the benchmark baseline the packed kernel path is
+    measured against (benchmarks/serving_latency.py)."""
+    from .apply import StackedHalo
+
+    def pack(leaf):
+        if isinstance(leaf, HaloQuantized):
+            if _packable(leaf):
+                return pack_from_quantized(leaf)
+            return leaf.dequantize().astype(jnp.bfloat16)
+        if isinstance(leaf, StackedHalo):
+            if all(_packable(s) for s in leaf.slices):
+                slices = [pack_from_quantized(s) for s in leaf.slices]
+                lead = leaf.lead_shape
+                return DeployQuantWeight(
+                    idx_packed=jnp.stack(
+                        [s.idx_packed for s in slices]).reshape(
+                            lead + slices[0].idx_packed.shape),
+                    scale=jnp.stack([s.scale for s in slices]).reshape(
+                        lead + slices[0].scale.shape),
+                    shape=lead + tuple(slices[0].shape))
+            return leaf.dequantize().astype(jnp.bfloat16)
+        return leaf
+
+    return jax.tree.map(pack, qparams, is_leaf=_is_quantized)

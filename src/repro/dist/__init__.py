@@ -1,0 +1,3 @@
+"""Distribution utilities: logical-axis sharding rules and fault tolerance."""
+
+from . import fault, sharding  # noqa: F401

@@ -1,0 +1,79 @@
+"""Fault tolerance for the preemptible fleet: failure injection (tests),
+straggler detection, and elastic-rescale device-count enumeration."""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Iterable, List, Optional
+
+
+class FailureInjector:
+    """Deterministically raise at chosen steps -- once each.
+
+    The train loop's recovery contract is exercised by injecting a failure
+    the first time a target step runs; after restore the step re-executes
+    and must pass, so each target fires exactly once.
+    """
+
+    def __init__(self, steps: Iterable[int]):
+        self._pending = set(int(s) for s in steps)
+
+    def check(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class StragglerWatchdog:
+    """Flag steps whose wall time exceeds ``threshold`` x the typical step.
+
+    The baseline is the median of previously observed *healthy* step
+    durations (flagged stragglers are excluded so one slow host cannot
+    poison the baseline).  No flags are raised until ``warmup_steps``
+    healthy samples exist.
+    """
+
+    def __init__(self, threshold: float = 2.0, warmup_steps: int = 2,
+                 clock: Optional[Callable[[], float]] = None):
+        self.threshold = float(threshold)
+        self.warmup_steps = int(warmup_steps)
+        self._clock = clock if clock is not None else time.monotonic
+        self._durations: List[float] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self) -> None:
+        self._t0 = self._clock()
+
+    def step_end(self, step: int) -> bool:
+        if self._t0 is None:
+            return False
+        dur = self._clock() - self._t0
+        self._t0 = None
+        flagged = False
+        if len(self._durations) >= self.warmup_steps:
+            baseline = statistics.median(self._durations)
+            flagged = dur > self.threshold * baseline
+        if not flagged:
+            self._durations.append(dur)
+        return flagged
+
+
+def viable_device_counts(n_devices: int, model_parallel: int = 16
+                         ) -> List[int]:
+    """Descending power-of-two device counts usable after losing hosts.
+
+    A count is viable if it is a power of two <= ``n_devices`` and a
+    multiple of ``model_parallel`` (the TP degree the checkpointed weights
+    are laid out for).  Empty when fewer than ``model_parallel`` devices
+    survive -- the caller falls back to a trivial mesh.
+    """
+    out: List[int] = []
+    p = 1
+    while p * 2 <= n_devices:
+        p *= 2
+    while p >= max(model_parallel, 1):
+        if p % max(model_parallel, 1) == 0:
+            out.append(p)
+        p //= 2
+    return out

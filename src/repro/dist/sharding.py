@@ -1,0 +1,181 @@
+"""Logical-axis sharding: rules map logical names to mesh axes.
+
+Every ParamSpec / activation carries *logical* axis names ("embed", "mlp",
+"act_seq", ...); a rules dict maps each name to zero or more mesh axes.
+``logical_to_spec`` resolves a logical tuple into a PartitionSpec, enforcing
+the two GSPMD invariants that otherwise surface as cryptic lowering errors:
+
+  * a mesh axis is consumed at most once per spec (first logical axis wins),
+  * a dimension is only sharded if its size divides evenly; non-divisible
+    axes silently fall back to replication (small smoke models keep working
+    on production rule sets).
+
+``use_rules(mesh, rules)`` installs an ambient (mesh, rules) context so model
+code can call ``shard_activation(x, axes)`` unconditionally -- with no active
+mesh it is an exact no-op (returns ``x`` itself), which is what single-device
+tests rely on.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _is_spec(x) -> bool:
+    # duck-typed ParamSpec check: models.module imports this module (via
+    # models.transformer), so importing ParamSpec here would be circular
+    return hasattr(x, "logical_axes") and hasattr(x, "shape")
+
+
+def _tree_map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=_is_spec)
+
+# Default production rules (single-pod (data, model) mesh).  Weights keep a
+# Megatron-TP axis on "model" plus an FSDP-style "data" shard of the residual
+# dim; serving overrides "embed" -> None (weight-resident decode, see
+# launch/inputs.arch_rules).  Activations shard batch over "data" and the
+# per-layer wide dims over "model".
+DEFAULT_RULES: Dict[str, Any] = {
+    # --- weight axes ---
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    # --- activation axes ---
+    "batch": "data",
+    "act_seq": None,
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "act_vocab": "model",
+    "kv_seq": None,
+}
+
+
+def make_rules(**overrides) -> Dict[str, Any]:
+    """DEFAULT_RULES with per-call overrides (value: None | str | tuple)."""
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules
+
+
+def _as_tuple(v) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                    mesh: Mesh, rules: Optional[Dict[str, Any]] = None) -> P:
+    """Resolve logical axis names into a PartitionSpec for `mesh`.
+
+    Drops mesh axes that are absent from the mesh, already consumed by an
+    earlier dimension, or whose size does not divide the dimension.
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        want = _as_tuple(rules.get(name) if name is not None else None)
+        picked = []
+        span = 1
+        for ax in want:
+            if ax not in mesh.shape or ax in used:
+                continue
+            if dim % (span * mesh.shape[ax]) != 0:
+                continue
+            picked.append(ax)
+            span *= mesh.shape[ax]
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return P(*entries)
+
+
+def logical_to_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                        mesh: Mesh,
+                        rules: Optional[Dict[str, Any]] = None
+                        ) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# ambient (mesh, rules) context
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+
+
+_CTX = _Ctx()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Optional[Dict[str, Any]]:
+    return _CTX.rules
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None):
+    """Install (mesh, rules) as the ambient sharding context."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules if rules is not None else DEFAULT_RULES
+    try:
+        yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def shard_activation(x, axes: Sequence[Optional[str]]):
+    """Constrain an activation's sharding under the ambient context.
+
+    Exact no-op (returns ``x``) when no mesh is active, so single-device
+    tests and eager exploration never pay a transfer.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter trees
+# ---------------------------------------------------------------------------
+
+def params_shardings(specs, mesh: Mesh,
+                     rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding per ParamSpec leaf (structure-preserving)."""
+    return _tree_map_specs(
+        lambda s: logical_to_sharding(s.logical_axes, s.shape, mesh, rules),
+        specs)
+
+
+def abstract_with_sharding(specs, mesh: Mesh,
+                           rules: Optional[Dict[str, Any]] = None):
+    """ShapeDtypeStruct tree with shardings attached (dry-run stand-ins)."""
+    return _tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=logical_to_sharding(s.logical_axes, s.shape, mesh,
+                                         rules)),
+        specs)

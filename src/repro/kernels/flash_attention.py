@@ -45,10 +45,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -116,12 +116,12 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
     def body(i, carry):
         dk, dv = carry
-        q = pl.load(q_ref, (0, pl.dslice(i * bq, bq), slice(None))
-                    ).astype(jnp.float32)
-        do = pl.load(do_ref, (0, pl.dslice(i * bq, bq), slice(None))
-                     ).astype(jnp.float32)
-        lse = pl.load(lse_ref, (0, pl.dslice(i * bq, bq)))
-        delta = pl.load(delta_ref, (0, pl.dslice(i * bq, bq)))
+        q = pl.load(q_ref, (pl.dslice(0, 1), pl.dslice(i * bq, bq), slice(None))
+                    )[0].astype(jnp.float32)
+        do = pl.load(do_ref, (pl.dslice(0, 1), pl.dslice(i * bq, bq), slice(None))
+                     )[0].astype(jnp.float32)
+        lse = pl.load(lse_ref, (pl.dslice(0, 1), pl.dslice(i * bq, bq)))[0]
+        delta = pl.load(delta_ref, (pl.dslice(0, 1), pl.dslice(i * bq, bq)))[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pre = s
@@ -165,10 +165,10 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     delta = delta_ref[0]
 
     def body(j, dq):
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pre = s

@@ -33,10 +33,10 @@ def _decode_kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
 
     def body(j, carry):
         m, l, acc = carry
-        kq = pl.load(kq_ref, (0, pl.dslice(j * bs, bs), slice(None)))
-        ks = pl.load(ks_ref, (0, pl.dslice(j * bs, bs)))
-        vq = pl.load(vq_ref, (0, pl.dslice(j * bs, bs), slice(None)))
-        vs = pl.load(vs_ref, (0, pl.dslice(j * bs, bs)))
+        kq = pl.load(kq_ref, (pl.dslice(0, 1), pl.dslice(j * bs, bs), slice(None)))[0]
+        ks = pl.load(ks_ref, (pl.dslice(0, 1), pl.dslice(j * bs, bs)))[0]
+        vq = pl.load(vq_ref, (pl.dslice(0, 1), pl.dslice(j * bs, bs), slice(None)))[0]
+        vs = pl.load(vs_ref, (pl.dslice(0, 1), pl.dslice(j * bs, bs)))[0]
         k = kq.astype(jnp.float32) * ks[:, None]    # dequant in VMEM
         v = vq.astype(jnp.float32) * vs[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),

@@ -10,7 +10,7 @@ on TPU the same calls compile to Mosaic.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +31,15 @@ def default_interpret() -> bool:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class HaloPacked:
-    """Deployment layout of one quantized matrix."""
+    """Deployment layout of one quantized matrix (possibly layer-stacked).
 
-    idx_packed: jnp.ndarray          # (Kp, Np//2) uint8
-    scale: jnp.ndarray               # (kt*nt, TILE) f32 per-tile-column
+    Arrays may carry leading stack dims (layers, experts): ``lax.scan`` over
+    a stacked ``HaloPacked`` slices every array leaf per step, yielding the
+    per-layer 2-D layout the Pallas kernel consumes -- no per-slice Python
+    loop inside jit.  ``shape`` is always the per-slice (K, N)."""
+
+    idx_packed: jnp.ndarray          # (..., Kp, Np//2) uint8
+    scale: jnp.ndarray               # (..., kt*nt, TILE) f32 per-tile-column
     order_kt: jnp.ndarray            # schedule (class-grouped)
     order_nt: jnp.ndarray
     order_first: jnp.ndarray
@@ -45,8 +50,23 @@ class HaloPacked:
 
     @property
     def padded_shape(self) -> Tuple[int, int]:
-        kp = self.idx_packed.shape[0]
-        return kp, self.idx_packed.shape[1] * 2
+        kp = self.idx_packed.shape[-2]
+        return kp, self.idx_packed.shape[-1] * 2
+
+    @property
+    def is_stacked(self) -> bool:
+        return self.idx_packed.ndim > 2
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        """XLA fallback: materialize the dense weight (incl. outliers).
+
+        Serving never calls this on the hot path -- it exists for stacked
+        weights consumed outside a scan (MoE einsum) and for parity tests."""
+        w = _dense_decode(self.idx_packed, self.scale)
+        if self.chunks is not None:
+            w = w + sk.chunks_to_dense(self.chunks)
+        k, n = self.shape
+        return w[..., :k, :n].astype(dtype)
 
 
 def pack_halo(hq: HaloQuantized, scheduled: bool = True) -> HaloPacked:
@@ -88,20 +108,113 @@ def pack_halo(hq: HaloQuantized, scheduled: bool = True) -> HaloPacked:
                       chunks=chunks, shape=(k, n))
 
 
+def stack_packed(packs: Sequence[HaloPacked],
+                 lead_shape: Optional[Tuple[int, ...]] = None) -> HaloPacked:
+    """Stack per-slice HaloPacked layouts into one scan-ready leaf.
+
+    All slices must share (K, N).  Sparse chunk counts are made uniform by
+    padding with inert chunks (kernels add exact zeros for them), so every
+    array leaf gets a common leading stack shape and ``lax.scan`` can slice
+    the packed weight per layer without Python loops in the jitted path.
+    """
+    packs = list(packs)
+    shapes = {p.shape for p in packs}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack mixed shapes: {sorted(shapes)}")
+    lead = tuple(lead_shape) if lead_shape is not None else (len(packs),)
+    if int(np.prod(lead)) != len(packs):
+        raise ValueError(f"lead {lead} != {len(packs)} slices")
+    if any(p.chunks is not None for p in packs):
+        packs = [p if p.chunks is not None
+                 else dataclasses.replace(
+                     p, chunks=sk.empty_chunks(p.padded_shape))
+                 for p in packs]
+        width = max(int(p.chunks.rows.shape[0]) for p in packs)
+        packs = [dataclasses.replace(p, chunks=sk.pad_chunks(p.chunks, width))
+                 for p in packs]
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape), *packs)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _byte_pair_table() -> np.ndarray:
+    """(256, 2) f32 LUT: packed byte -> (value(lo nibble), value(hi nibble)).
+
+    Folds unpack + codebook decode into a single gather -- the cheap XLA
+    rendering of what the Pallas kernel does arithmetically in VMEM."""
+    from ..core import codebooks
+    t16 = np.asarray(codebooks.shared_table(), np.float32)
+    byte = np.arange(256, dtype=np.int32)
+    return np.stack([t16[byte & 0xF], t16[byte >> 4]], axis=-1)
+
+
+def _dense_decode(idx_packed: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Packed bytes (..., Kp, Np//2) + scales (..., kt*nt, TILE) -> padded
+    dense f32 (..., Kp, Np).  Shared by HaloPacked.dequantize and the XLA
+    matmul fallback so codebook/scale-layout changes live in one place."""
+    lut = jnp.asarray(_byte_pair_table())
+    val = lut[idx_packed.astype(jnp.int32)].reshape(
+        idx_packed.shape[:-1] + (idx_packed.shape[-1] * 2,))
+    kp, npk = val.shape[-2], val.shape[-1]
+    kt, nt = kp // TILE, npk // TILE
+    lead = val.shape[:-2]
+    sc = scale.reshape(lead + (kt, nt, TILE))
+    v = val.reshape(lead + (kt, TILE, nt, TILE)) * sc[..., :, None, :, :]
+    return v.reshape(lead + (kp, npk))
+
+
+def _halo_matmul_xla(x: jnp.ndarray, packed: HaloPacked,
+                     out_dtype) -> jnp.ndarray:
+    """CPU serving fallback: lower the packed layout through plain XLA.
+
+    Consumes the same operands as the Pallas kernel (4-bit stream, per-tile
+    scales, bucketed outlier chunks) without materializing a persistent
+    bf16 weight: one byte->value-pair gather decodes the stream, and the
+    outlier chunks contribute via a gather / scatter-add product over the
+    <0.5% entries (never densified).  Grid-step emulation via interpret
+    mode is ~100x slower on CPU and is reserved for kernel validation
+    (pass interpret=True explicitly)."""
+    k, n = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    with jax.named_scope("halo_packed_xla"):
+        w = _dense_decode(packed.idx_packed, packed.scale)[:k, :n]
+        out = jnp.matmul(x2, w)
+        ch = packed.chunks
+        if ch is not None:
+            rows_f = (ch.chunk_kt[:, None] * TILE + ch.rows).reshape(-1)
+            cols_f = (ch.chunk_nt[:, None] * TILE + ch.cols).reshape(-1)
+            contrib = x2[:, rows_f] * ch.vals.reshape(-1)[None, :]
+            out = out.at[:, cols_f].add(contrib)
+    return out.reshape(lead + (n,)).astype(out_dtype)
+
+
 def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
                 bm: int = 128, interpret: Optional[bool] = None,
                 out_dtype=None) -> jnp.ndarray:
-    """x (..., K) @ W_halo -> (..., N); dense codebook kernel + SpMV kernel."""
-    interpret = default_interpret() if interpret is None else interpret
+    """x (..., K) @ W_halo -> (..., N); dense codebook kernel + SpMV kernel.
+
+    interpret=None resolves per backend: Pallas/Mosaic on TPU, the XLA
+    lowering of the packed layout elsewhere.  interpret=True forces the
+    Pallas interpreter (validation oracle for the kernel itself)."""
     out_dtype = out_dtype or x.dtype
+    if interpret is None:
+        if default_interpret():
+            return _halo_matmul_xla(x, packed, out_dtype)
+        interpret = False
     k, n = packed.shape
     kp, np_ = packed.padded_shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k)
     if kp != k:
         x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
-    bm_eff = min(bm, max(8, 1 << (int(np.prod(lead)) - 1).bit_length())) \
-        if lead else bm
+    # block-M sized to the actual row count (decode is M=1..batch): next
+    # power of two of the rows, floored at the 8-sublane f32 tile, capped
+    # at the caller's bm.  M=1 decode -> bm_eff = 8, not a full 128 block.
+    bm_eff = min(bm, max(8, _next_pow2(x2.shape[0])))
     out = hk.halo_matmul_packed(
         x2, packed.idx_packed, packed.scale, packed.order_kt,
         packed.order_nt, packed.order_first, packed.order_last,

@@ -103,6 +103,66 @@ def bucket_sparse(row: np.ndarray, col: np.ndarray, val: np.ndarray,
                         last=jnp.asarray(last), shape=(kt * TILE, nt * TILE))
 
 
+def empty_chunks(shape: Tuple[int, int]) -> SparseChunks:
+    """Chunk set with zero entries (one zero chunk per n-tile)."""
+    return bucket_sparse(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                         np.zeros(0, np.float32), shape)
+
+
+def pad_chunks(chunks: SparseChunks, n_chunks: int) -> SparseChunks:
+    """Pad to `n_chunks` with inert chunks (val 0, first/last 0), making
+    chunk counts uniform across stacked layer slices for lax.scan.
+
+    Dummy chunks target the LAST n-tile: real chunks are n-tile-major, so
+    appending more visits to the final output block keeps the grid's
+    output-block sequence contiguous.  On real TPU, output windows are
+    flushed on block change -- revisiting an earlier block (e.g. tile 0)
+    without writing would flush a stale window over its correct result.
+    The dummies never reset (first=0) or write (last=0) the accumulator,
+    so they contribute exact zeros.
+    """
+    have = int(chunks.rows.shape[0])
+    if have > n_chunks:
+        raise ValueError(f"cannot shrink chunks {have} -> {n_chunks}")
+    if have == n_chunks:
+        return chunks
+    pad = n_chunks - have
+    last_nt = chunks.shape[1] // TILE - 1
+
+    def padded(x, fill=0):
+        shp = (pad,) + tuple(x.shape[1:])
+        return jnp.concatenate(
+            [x, jnp.full(shp, fill, x.dtype)], axis=0)
+
+    return dataclasses.replace(
+        chunks, rows=padded(chunks.rows), cols=padded(chunks.cols),
+        vals=padded(chunks.vals), chunk_kt=padded(chunks.chunk_kt),
+        chunk_nt=padded(chunks.chunk_nt, last_nt), first=padded(chunks.first),
+        last=padded(chunks.last))
+
+
+def chunks_to_dense(chunks: SparseChunks) -> jnp.ndarray:
+    """Scatter the chunked entries back to a dense (..., Kp, Np) f32 matrix
+    (XLA fallback / parity oracle; duplicate coordinates accumulate)."""
+    kpad, npad = chunks.shape
+
+    def one(rows, cols, vals, ckt, cnt):
+        k_idx = ckt[:, None] * TILE + rows
+        n_idx = cnt[:, None] * TILE + cols
+        return jnp.zeros((kpad, npad), jnp.float32).at[k_idx, n_idx].add(vals)
+
+    lead = chunks.rows.shape[:-2]
+    if not lead:
+        return one(chunks.rows, chunks.cols, chunks.vals,
+                   chunks.chunk_kt, chunks.chunk_nt)
+    nl = len(lead)
+    flat = [x.reshape((-1,) + x.shape[nl:])
+            for x in (chunks.rows, chunks.cols, chunks.vals,
+                      chunks.chunk_kt, chunks.chunk_nt)]
+    out = jax.vmap(one)(*flat)
+    return out.reshape(lead + (kpad, npad))
+
+
 def _spmv_kernel(kt_ref, nt_ref, first_ref, last_ref,
                  x_ref, rows_ref, cols_ref, vals_ref, o_ref, acc_ref):
     j = pl.program_id(1)

@@ -7,7 +7,18 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` only where it exists
+    (jax < 0.5 has neither AxisType nor the kwarg; Auto is the default
+    behavior there anyway)."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,8 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_elastic_mesh(n_devices: Optional[int] = None, model_parallel: int = 16):
@@ -28,9 +38,7 @@ def make_elastic_mesh(n_devices: Optional[int] = None, model_parallel: int = 16)
     usable = viable_device_counts(avail, model_parallel)
     if not usable:
         # tiny meshes (tests): fall back to (1, avail)
-        return jax.make_mesh((1, avail), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        return make_mesh_compat((1, avail), ("data", "model"))
     n = usable[0]
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((n // model_parallel, model_parallel),
+                            ("data", "model"))

@@ -29,7 +29,8 @@ def materialize(w: Any, dtype=None) -> jnp.ndarray:
         w = w.dequantize()
     else:
         from ..core.deploy import DeployQuantWeight
-        if isinstance(w, DeployQuantWeight):
+        from ..kernels.ops import HaloPacked
+        if isinstance(w, (DeployQuantWeight, HaloPacked)):
             w = w.dequantize(dtype or jnp.bfloat16)
     return w if dtype is None else w.astype(dtype)
 
@@ -47,9 +48,19 @@ def dense(x: jnp.ndarray, w: Any, compute_dtype=None) -> jnp.ndarray:
     from ..quant import common as qcommon
     from ..quant import calibrate as qcal
     from ..core.deploy import DeployQuantWeight
+    from ..kernels import ops as kops
     qcal.maybe_record(w, x)
     x = qcommon.maybe_quantize_activation(x)
     cd = compute_dtype or x.dtype
+    if isinstance(w, kops.HaloPacked):
+        if not w.is_stacked:
+            # the serving fast path: the matmul consumes the 4-bit stream +
+            # bucketed outliers directly (Pallas on TPU, interpret on CPU)
+            return kops.halo_matmul(x.astype(cd), w, out_dtype=cd)
+        # stacked leaf reached outside a scan (MoE expert einsum feeds):
+        # XLA fallback; scanned layers never hit this branch
+        wd = w.dequantize(cd)
+        return jnp.matmul(x.astype(cd), wd)
     if isinstance(w, DeployQuantWeight):
         with jax.named_scope("halo_vmem"):
             wd = w.dequantize(cd)
@@ -180,6 +191,11 @@ def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
 
 def unembed(x: jnp.ndarray, table_or_head: Any) -> jnp.ndarray:
     """(..., d) -> (..., vocab).  Accepts an (V, d) tied table or (d, V) head."""
+    from ..kernels import ops as kops
+    if isinstance(table_or_head, kops.HaloPacked) \
+            and not table_or_head.is_stacked \
+            and table_or_head.shape[0] == x.shape[-1]:
+        return kops.halo_matmul(x, table_or_head, out_dtype=x.dtype)
     w = materialize(table_or_head)
     if w.shape[0] == x.shape[-1]:
         return jnp.matmul(x, w.astype(x.dtype))

@@ -21,8 +21,23 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+try:                                      # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                       # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_unchecked(body, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions
+    (the kwarg was renamed check_rep -> check_vma)."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
 
 from ..configs.base import MoeConfig
 from .layers import activation
@@ -146,6 +161,6 @@ def moe_ffn_a2a(p, x: jnp.ndarray, cfg: MoeConfig, mesh,
             (contrib * w_of[:, None]).astype(xx.dtype))
         return out_flat.reshape(bl, sl, d), aux
 
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_vma=False)
+    fn = shard_map_unchecked(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
     return fn(p, x)

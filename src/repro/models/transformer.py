@@ -503,6 +503,13 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     """Process a full prompt, building the cache.  Returns
     (last-position logits (B, V), cache, lengths (B,)).
 
+    ``batch["prompt_lengths"]`` (optional, (B,) int32) marks the true
+    prompt length when the sequence axis is right-padded to a bucket (the
+    engine pads to bound recompiles): logits are gathered at the true last
+    position and the returned lengths are the true ones.  Padded positions
+    beyond the prompt leave junk KV entries; decode overwrites slot
+    ``lengths`` onward and attention masks by length, so they are inert.
+
     cfg.prefill_microbatch > 1 scans over batch slices so long-prompt
     activation transients scale with B/m while the returned cache is the
     full batch (microbatch caches are restitched along the batch axis)."""
@@ -559,8 +566,15 @@ def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
         x, _, ce = block_forward(rp, cfg, kind, x, positions,
                                  return_cache=True, max_seq=max_seq)
         rem_cache.append(ce)
-    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
-    lengths = jnp.full((b,), s, jnp.int32)
+    plen = batch.get("prompt_lengths")
+    if plen is None:
+        logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+        lengths = jnp.full((b,), s, jnp.int32)
+    else:
+        lengths = plen.astype(jnp.int32)
+        idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)      # (B, 1, d)
+        logits = _logits(params, cfg, x_last)[:, 0]
     cache = {"period": period_cache, "remainder": tuple(rem_cache)}
     return logits, cache, lengths
 

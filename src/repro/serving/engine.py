@@ -1,9 +1,20 @@
-"""Batched serving engine: prefill + decode loop over the unified model.
+"""Batched serving engine: bucketed prefill + device-resident decode loop.
 
-Greedy or temperature sampling; per-sequence lengths; works with dense,
-HALO-quantized, or baseline-quantized parameter trees (the model's `dense`
-dequantizes transparently).  `serve_step` is the jit target the dry-run
-lowers for decode shapes.
+The decode loop is a single jitted ``lax.scan`` over new tokens: sampling
+(greedy or temperature) runs on device with a scan-carried PRNG key, the KV
+cache is donated into the loop, and the only device->host transfer per
+``generate`` call is the final (B, max_new) token block.  Prompt lengths are
+right-padded to a bucket multiple so the number of prefill compilations is
+bounded by the bucket count, not by distinct prompt lengths.
+
+Weight formats are transparent: dense, HALO-quantized, ``DeployQuantWeight``
+(per-call XLA dequant), or ``HaloPacked`` (the pack-at-load Pallas kernel
+path -- see core.deploy.pack_params and docs/serving.md).  ``serve_step`` is
+the jit target the dry-run lowers for decode shapes.
+
+``generate(..., legacy_loop=True)`` keeps the original per-token Python loop
+(one host sync per token); it exists as the parity oracle and as the
+benchmark baseline for the scan path.
 """
 
 from __future__ import annotations
@@ -43,19 +54,157 @@ def serve_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
     return T.decode_step(params, cfg, inputs, cache, lengths)
 
 
+def _decode_inputs(tok: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    if cfg.embeds_input:
+        # stub frontends: feed the token back through a fixed
+        # pseudo-embedding (hash of the token id)
+        return {"embeds": _pseudo_embed(tok, cfg)}
+    return {"tokens": tok}
+
+
+def _predecode(params, cfg: ModelConfig):
+    """Backend-resolve packed weights at jit entry.
+
+    TPU: identity -- every matmul streams the 4-bit HaloPacked layout
+    through the Pallas kernel (weight HBM reads /4 vs bf16, per token).
+
+    CPU (no Mosaic): decode each packed stream ONCE per engine call,
+    before the token scan, so the per-token loop multiplies dense weights
+    instead of re-decoding 4-bit codes every token.  Weights at rest stay
+    4-bit; the dense copies are transients of the call.  Per-matmul decode
+    on CPU was measured ~3x slower per token than this hoist with zero
+    memory-traffic benefit (no VMEM to win back)."""
+    from ..kernels import ops as kops
+    if not kops.default_interpret():
+        return params
+
+    def dec(w):
+        if isinstance(w, kops.HaloPacked):
+            return w.dequantize(cfg.dtype)
+        return w
+
+    return jax.tree.map(dec, params,
+                        is_leaf=lambda x: isinstance(x, kops.HaloPacked))
+
+
+def _decode_loop(params, tok0: jnp.ndarray, cache, lengths: jnp.ndarray,
+                 key: jax.Array, max_new: int, *, cfg: ModelConfig,
+                 sampler: SamplerConfig) -> jnp.ndarray:
+    """(B,) first token + cache -> (B, max_new) tokens, all on device.
+
+    The per-step PRNG split mirrors the legacy Python loop exactly
+    (``key, k1 = split(key)`` then sample with k1), so temperature sampling
+    emits the same sequence either way."""
+
+    params = _predecode(params, cfg)
+
+    def body(carry, _):
+        tok, cache, lengths, key = carry
+        logits, cache, lengths = T.decode_step(
+            params, cfg, _decode_inputs(tok, cfg), cache, lengths)
+        key, k1 = jax.random.split(key)
+        tok = sample_logits(logits, cfg, sampler, k1)
+        return (tok, cache, lengths, key), tok
+
+    if max_new <= 1:
+        return tok0[:, None]
+    _, toks = jax.lax.scan(body, (tok0, cache, lengths, key), xs=None,
+                           length=max_new - 1)
+    return jnp.concatenate([tok0[:, None], toks.swapaxes(0, 1)], axis=1)
+
+
 class Engine:
     def __init__(self, params, cfg: ModelConfig,
-                 sampler: SamplerConfig = SamplerConfig()):
+                 sampler: SamplerConfig = SamplerConfig(),
+                 prefill_bucket: int = 64, decode_bucket: int = 16):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
+        self.prefill_bucket = max(int(prefill_bucket), 1)
+        self.decode_bucket = max(int(decode_bucket), 1)
         self._prefill = jax.jit(
-            functools.partial(T.prefill, cfg=cfg),
+            lambda params, batch, max_seq: T.prefill(
+                _predecode(params, cfg), cfg, batch, max_seq),
             static_argnames=("max_seq",))
         self._decode = jax.jit(functools.partial(T.decode_step, cfg=cfg))
+        # KV cache donated into the loop (in-place on TPU; CPU has no
+        # donation support and would warn on every call)
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._decode_loop = jax.jit(
+            functools.partial(_decode_loop, cfg=cfg, sampler=sampler),
+            static_argnames=("max_new",), donate_argnums=donate)
+        self._sample = jax.jit(
+            functools.partial(sample_logits, cfg=cfg, sampler=sampler))
+
+    # ------------------------------------------------------------------
+    # prefill (bucketed)
+    # ------------------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        return -(-n // b) * b
+
+    def _pad_prompts(self, prompts: Dict[str, jnp.ndarray], s: int,
+                     s_pad: int) -> Dict[str, jnp.ndarray]:
+        if s_pad == s:
+            return dict(prompts)
+        pad = s_pad - s
+        out = dict(prompts)
+        if "tokens" in out:
+            out["tokens"] = jnp.pad(out["tokens"], ((0, 0), (0, pad)))
+        if "embeds" in out:
+            out["embeds"] = jnp.pad(out["embeds"],
+                                    ((0, 0), (0, pad), (0, 0)))
+        if "positions" in out:
+            pos = out["positions"]
+            ext = pos[:, -1:] + jnp.arange(1, pad + 1, dtype=pos.dtype)
+            out["positions"] = jnp.concatenate([pos, ext], axis=1)
+        return out
+
+    def run_prefill(self, prompts: Dict[str, jnp.ndarray], max_new: int,
+                    max_seq: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+        """Bucket-padded prefill.  Returns (last logits, cache, lengths)."""
+        cfg = self.cfg
+        b, s = (prompts["embeds"].shape[:2] if cfg.embeds_input
+                else prompts["tokens"].shape)
+        s_pad = self._bucket(s)
+        want = max_seq or (s + max_new)
+        max_seq = max(self._bucket(want), s_pad)
+        batch = self._pad_prompts(prompts, s, s_pad)
+        batch["prompt_lengths"] = jnp.full((b,), s, jnp.int32)
+        return self._prefill(self.params, batch=batch, max_seq=max_seq)
+
+    # ------------------------------------------------------------------
+    # generate
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: Dict[str, jnp.ndarray], max_new: int,
-                 max_seq: Optional[int] = None) -> np.ndarray:
+                 max_seq: Optional[int] = None,
+                 legacy_loop: bool = False) -> np.ndarray:
+        if legacy_loop:
+            return self._generate_legacy(prompts, max_new, max_seq)
+        # scan length bucketed so distinct max_new values share a compiled
+        # loop (scan steps are sequential, so the first max_new tokens are
+        # identical regardless of trailing discarded steps); short requests
+        # use power-of-two buckets to cap discarded work at <2x.  The cache
+        # is sized for ALL n_steps writes so no KV slot ever clamps.
+        db = self.decode_bucket
+        if max_new >= db:
+            n_steps = -(-max_new // db) * db
+        else:
+            n_steps = 1 if max_new <= 1 else 1 << (max_new - 1).bit_length()
+        logits, cache, lengths = self.run_prefill(prompts, n_steps, max_seq)
+        key = jax.random.PRNGKey(self.sampler.seed)
+        key, k0 = jax.random.split(key)
+        tok0 = self._sample(logits, key=k0)
+        toks = self._decode_loop(self.params, tok0, cache, lengths, key,
+                                 max_new=n_steps)
+        return np.asarray(toks)[:, :max_new]   # the ONE host sync per call
+
+    def _generate_legacy(self, prompts: Dict[str, jnp.ndarray], max_new: int,
+                         max_seq: Optional[int] = None) -> np.ndarray:
+        """Original per-token loop: one device->host sync per token."""
         cfg = self.cfg
         b, s = (prompts["embeds"].shape[:2] if cfg.embeds_input
                 else prompts["tokens"].shape)
@@ -68,15 +217,9 @@ class Engine:
         tok = sample_logits(logits, cfg, self.sampler, k0)
         outs.append(np.asarray(tok))
         for _ in range(max_new - 1):
-            if cfg.embeds_input:
-                # stub frontends: feed the token back through a fixed
-                # pseudo-embedding (hash of the token id)
-                emb = _pseudo_embed(tok, cfg)
-                inputs = {"embeds": emb}
-            else:
-                inputs = {"tokens": tok}
             logits, cache, lengths = self._decode(
-                self.params, inputs=inputs, cache=cache, lengths=lengths)
+                self.params, inputs=_decode_inputs(tok, cfg), cache=cache,
+                lengths=lengths)
             key, k1 = jax.random.split(key)
             tok = sample_logits(logits, cfg, self.sampler, k1)
             outs.append(np.asarray(tok))

@@ -1,0 +1,104 @@
+"""Dependency-free stand-in for the `hypothesis` API surface these tests
+use (given / settings / strategies.{integers,floats,sampled_from}).
+
+The container has no hypothesis wheel and installs are disallowed, so when
+the real package is missing `conftest.py` registers this module under the
+``hypothesis`` name.  Semantics: ``@given`` expands into a deterministic
+seeded sweep of ``max_examples`` drawn inputs -- same spirit (randomized
+shape/dtype sweeps), fully reproducible, no shrinking.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(
+        lambda rnd: min_value + (max_value - min_value) * rnd.random())
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rnd: items[rnd.randrange(len(items))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rnd: value)
+
+
+def given(*strategies_args):
+    """Expand the test into a seeded loop over drawn examples.
+
+    The strategies bind to the *last* positional parameters of the test
+    function; remaining leading parameters (self, pytest fixtures) keep
+    flowing from pytest, which sees a trimmed ``__signature__``.
+    """
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n = len(strategies_args)
+        lead = params[:-n] if n else params
+
+        def wrapper(*args, **kwargs):
+            examples = getattr(wrapper, "_max_examples",
+                               DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(0x5EED)
+            for _ in range(examples):
+                drawn = [s.draw(rnd) for s in strategies_args]
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(parameters=lead)
+        # honor @settings applied below @given (it stamps the raw fn)
+        wrapper._max_examples = getattr(fn, "_max_examples",
+                                        DEFAULT_MAX_EXAMPLES)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (call only when missing)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -5,6 +5,13 @@ import sys
 # requested ONLY by repro.launch.dryrun (per the brief).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # offline container: register the deterministic stub
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 

@@ -76,11 +76,10 @@ class TestPowerSGD:
 
         def run(g, state):
             # axis over a singleton mesh ~ identity psum
-            import jax.experimental.shard_map  # noqa: F401
             from jax.sharding import Mesh
             import jax
             mesh = jax.make_mesh((1,), ("dp",))
-            from jax import shard_map
+            from repro.models.moe_shardmap import _shard_map as shard_map
             from jax.sharding import PartitionSpec as P
             f = shard_map(
                 lambda gg, ss: compressed_mean(gg, ss, "dp", cfg),
@@ -108,7 +107,7 @@ class TestPowerSGD:
         g = {"w": jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))}
         cfg = PowerSGDConfig(rank=2, min_size=16)
         state = init_state(g, cfg)
-        from jax import shard_map
+        from repro.models.moe_shardmap import _shard_map as shard_map
         from jax.sharding import PartitionSpec as P
         mesh = jax.make_mesh((1,), ("dp",))
         f = shard_map(lambda gg, ss: compressed_mean(gg, ss, "dp", cfg),

@@ -1,0 +1,141 @@
+"""Packed serving fast path: pack-at-load tree transform, kernel parity
+against the XLA dequant path, and scan-based generate vs the legacy loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.core import deploy
+from repro.core.apply import StackedHalo, dequantize_params, quantize_params
+from repro.core.quantize import HaloConfig, halo_quantize_tensor
+from repro.kernels import ops
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine, SamplerConfig
+
+
+def quantized(rng, k, n, with_fisher=True):
+    w = jnp.asarray(rng.normal(0, 0.05, (k, n)).astype(np.float32))
+    g2 = None
+    if with_fisher:
+        g2 = jnp.asarray((rng.normal(size=(k, n)) ** 2).astype(np.float32))
+    return w, halo_quantize_tensor(w, g2, HaloConfig(tile=128))
+
+
+class TestKernelVsDequant:
+    # interpret=True pins the Pallas kernel; interpret=None pins whatever
+    # the backend resolves to (the XLA fallback on this CPU container) --
+    # the branch production serving actually takes off-TPU
+    @pytest.mark.parametrize("interpret", [True, None])
+    @pytest.mark.parametrize("k,n,m", [
+        (300, 260, 4),      # non-multiple-of-128 K and N
+        (256, 140, 1),      # M=1 decode row
+        (130, 384, 16),
+    ])
+    def test_matmul_matches_dequant(self, rng, k, n, m, interpret):
+        """halo_matmul == DeployQuantWeight.dequantize + matmul + the
+        sparse outlier stream, to <= 1e-4."""
+        w, hq = quantized(rng, k, n)
+        packed = ops.pack_halo(hq)
+        dq = deploy.pack_from_quantized(hq)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        out = ops.halo_matmul(x, packed, interpret=interpret,
+                              out_dtype=jnp.float32)
+        # DeployQuantWeight carries only the dense 4-bit stream; the packed
+        # kernel path adds the bucketed outliers, so the oracle adds them too
+        expect = x @ dq.dequantize(jnp.float32) + x @ hq.sparse.to_dense()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_m1_decode_uses_small_block(self, rng):
+        """bm_eff heuristic: M=1 must not fall back to a full 128 block."""
+        w, hq = quantized(rng, 256, 256, with_fisher=False)
+        packed = ops.pack_halo(hq)
+        x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+        out = ops.halo_matmul(x[None, :], packed, interpret=True,
+                              out_dtype=jnp.float32)
+        expect = x[None, :] @ hq.dequantize()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+        assert ops._next_pow2(1) == 1
+        assert ops._next_pow2(8) == 8
+        assert ops._next_pow2(9) == 16
+        assert ops._next_pow2(128) == 128
+
+    def test_stacked_pack_params_matches_per_slice(self, rng):
+        tree = {"w": jnp.asarray(
+            rng.normal(0, 0.05, (3, 256, 260)).astype(np.float32))}
+        q = quantize_params(tree, None, HaloConfig(tile=128))
+        assert isinstance(q["w"], StackedHalo)
+        pk = deploy.pack_params(q)["w"]
+        assert isinstance(pk, ops.HaloPacked) and pk.is_stacked
+        x = jnp.asarray(rng.normal(size=(2, 256)).astype(np.float32))
+
+        def body(_, wslice):
+            return None, ops.halo_matmul(x, wslice, interpret=True,
+                                         out_dtype=jnp.float32)
+
+        _, outs = jax.lax.scan(body, None, pk)
+        for i, s in enumerate(q["w"].slices):
+            expect = x @ s.dequantize()
+            np.testing.assert_allclose(np.asarray(outs[i]),
+                                       np.asarray(expect),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_packed_dequantize_matches_quantized(self, rng):
+        w, hq = quantized(rng, 300, 140)
+        packed = ops.pack_halo(hq)
+        np.testing.assert_allclose(
+            np.asarray(packed.dequantize(jnp.float32)),
+            np.asarray(hq.dequantize()), rtol=1e-6, atol=1e-6)
+
+
+def small_model(arch="granite-8b", seed=0):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+class TestScanGenerate:
+    def test_scan_matches_legacy_loop_greedy(self):
+        """The jitted lax.scan decode emits exactly the legacy loop's
+        tokens under greedy sampling (incl. bucketed prefill padding)."""
+        cfg, params = small_model()
+        eng = Engine(params, cfg)
+        prompts = {"tokens": jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab, (2, 13)))}
+        fast = eng.generate(dict(prompts), max_new=6)
+        legacy = eng.generate(dict(prompts), max_new=6, legacy_loop=True)
+        np.testing.assert_array_equal(fast, legacy)
+
+    def test_scan_matches_legacy_loop_temperature(self):
+        cfg, params = small_model()
+        eng = Engine(params, cfg, SamplerConfig(temperature=0.7, seed=11))
+        prompts = {"tokens": jnp.asarray(
+            np.random.default_rng(1).integers(0, cfg.vocab, (2, 16)))}
+        fast = eng.generate(dict(prompts), max_new=5)
+        legacy = eng.generate(dict(prompts), max_new=5, legacy_loop=True)
+        np.testing.assert_array_equal(fast, legacy)
+
+    def test_packed_engine_matches_full_dequant(self):
+        """End-to-end: serving a pack_params tree through the kernel path
+        emits the same greedy tokens as serving the fully dequantized
+        weights (dense incl. outliers) through the dense path."""
+        import sys, os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        from benchmarks.common import bench_config
+        cfg = bench_config("llama")
+        params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+        q = quantize_params(params, None, HaloConfig(tile=128))
+        prompts = {"tokens": jnp.asarray(
+            np.random.default_rng(2).integers(0, cfg.vocab, (2, 12)))}
+        toks_packed = Engine(deploy.pack_params(q), cfg).generate(
+            dict(prompts), max_new=4)
+        toks_dense = Engine(dequantize_params(q), cfg).generate(
+            dict(prompts), max_new=4)
+        np.testing.assert_array_equal(toks_packed, toks_dense)

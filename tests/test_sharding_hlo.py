@@ -55,11 +55,11 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     sys.path.insert(0, {src!r})
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.analysis.hlo import analyze_hlo, collective_stats
+    from repro.launch.mesh import make_mesh_compat
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
 
     def f(ws, x):
         def step(x, w):
