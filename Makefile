@@ -1,10 +1,23 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-smoke bench-serving
+# serving tier: scheduler/engine/packed-path tests (CI runs these as their
+# own matrix entry with a 120s per-test ceiling)
+SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
+                 tests/test_serving_e2e.py
+
+.PHONY: test test-unit test-serving bench-smoke bench-serving
 
 test:            ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
+
+test-unit:       ## everything except the serving tier
+	$(PYTHON) -m pytest -x -q \
+	  $(foreach t,$(SERVING_TESTS),--ignore=$(t))
+
+test-serving:    ## serving tier: timings reported, >120s per test fails
+	$(PYTHON) -m pytest -q --durations=10 --max-test-seconds=120 \
+	  $(SERVING_TESTS)
 
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke

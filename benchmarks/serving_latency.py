@@ -1,7 +1,8 @@
-"""Serving latency: dense vs XLA-dequant vs packed-kernel fast path.
+"""Serving latency: dense vs XLA-dequant vs packed-kernel fast path, plus
+continuous batching vs the one-shot padded batch.
 
-Measures prefill and decode tokens/s on the bench-llama config for the
-three weight formats the engine serves:
+``--mode paths`` measures prefill and decode tokens/s on the bench-llama
+config for the three weight formats the engine serves:
 
   dense        fp32 weights, scan decode loop
   xla_dequant  DeployQuantWeight, legacy per-token loop with per-call XLA
@@ -10,10 +11,20 @@ three weight formats the engine serves:
                jitted lax.scan decode, halo_matmul/SpMV kernels (Pallas on
                TPU; interpret on this CPU container), single host sync
 
-Writes BENCH_serving.json at the repo root so the perf trajectory tracks
-the packed-path speedup (decode speedup_vs_dequant is the headline).
+``--mode continuous`` replays a Poisson-ish synthetic arrival trace of
+mixed-length requests through the continuous-batching scheduler
+(serving/scheduler.py) and through the one-shot padded-batch baseline
+(wait for the full batch, pad everything to the longest prompt and the
+largest max_new, run one generate).  Both walls start at the first
+arrival, so the continuous speedup reflects what the scheduler actually
+buys: prefill/decode overlapped with arrivals, and early-finishing slots
+recycled for queued requests instead of idling until the batch max.
 
-  PYTHONPATH=src python benchmarks/serving_latency.py [--smoke]
+Writes BENCH_serving.json at the repo root so the perf trajectory tracks
+both headlines (packed decode speedup_vs_dequant, continuous
+speedup_vs_oneshot).
+
+  PYTHONPATH=src python benchmarks/serving_latency.py [--smoke] [--mode M]
 """
 
 from __future__ import annotations
@@ -38,10 +49,15 @@ from repro.core.quantize import HaloConfig                    # noqa: E402
 from repro.models import module as M                          # noqa: E402
 from repro.models import transformer as T                     # noqa: E402
 from repro.serving.engine import Engine                       # noqa: E402
+from repro.serving.scheduler import Scheduler                 # noqa: E402
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serving.json")
 
+
+# ---------------------------------------------------------------------------
+# weight-format paths (one-shot loops)
+# ---------------------------------------------------------------------------
 
 def _prefill_once(eng: Engine, prompts, max_new: int, legacy: bool):
     """Run exactly the prefill the timed generate path runs (the legacy
@@ -57,8 +73,9 @@ def _time_generate(eng: Engine, prompts, max_new: int, legacy: bool,
                    repeats: int) -> dict:
     """Prefill and end-to-end decode timings (post-warmup best of N)."""
     b = prompts["tokens"].shape[0]
+    mode = "legacy" if legacy else "batch"
     # warmup compiles both stages
-    eng.generate(dict(prompts), max_new=max_new, legacy_loop=legacy)
+    eng.generate(dict(prompts), max_new=max_new, mode=mode)
 
     pre_ts, dec_ts = [], []
     for _ in range(repeats):
@@ -68,8 +85,7 @@ def _time_generate(eng: Engine, prompts, max_new: int, legacy: bool,
         pre_ts.append(time.perf_counter() - t0)
 
         t0 = time.perf_counter()
-        toks = eng.generate(dict(prompts), max_new=max_new,
-                            legacy_loop=legacy)
+        toks = eng.generate(dict(prompts), max_new=max_new, mode=mode)
         dec_ts.append(time.perf_counter() - t0)
         assert toks.shape == (b, max_new)
 
@@ -88,29 +104,11 @@ def _time_generate(eng: Engine, prompts, max_new: int, legacy: bool,
     }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=64)
-    ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes for CI (fast compile)")
-    ap.add_argument("--out", default=OUT_PATH)
-    args = ap.parse_args()
-    if args.smoke:
-        args.batch, args.prompt, args.max_new, args.repeats = 2, 16, 16, 2
-
-    cfg = bench_config("llama")
-    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
-    print(f"quantizing {cfg.name} (tile=128) ...")
-    q = quantize_params(params, None, HaloConfig(tile=128))
-
+def run_paths(cfg, params, q, args) -> dict:
     rng = np.random.default_rng(0)
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt))
         .astype(np.int32))}
-
     paths = {
         "dense": (Engine(params, cfg), False),
         "xla_dequant": (Engine(deploy.deploy_params(q), cfg), True),
@@ -123,23 +121,186 @@ def main() -> None:
                                        args.repeats)
         print(f"  prefill {results[name]['prefill_tokens_per_s']:8.1f} tok/s"
               f"  decode {results[name]['decode_tokens_per_s']:8.1f} tok/s")
+    return results
 
-    speedup = (results["packed"]["decode_tokens_per_s"]
-               / results["xla_dequant"]["decode_tokens_per_s"])
-    report = {
+
+# ---------------------------------------------------------------------------
+# continuous batching vs one-shot padded batch
+# ---------------------------------------------------------------------------
+
+def _make_trace(rng, cfg, n: int, prompt_lens, max_new_range,
+                mean_gap_s: float) -> list:
+    """Poisson-ish synthetic arrivals: exponential gaps, mixed prompt
+    lengths (two buckets) and mixed max_new."""
+    gaps = rng.exponential(mean_gap_s, n)
+    arrivals = np.cumsum(gaps) - gaps[0]        # first request at t=0
+    lo, hi = max_new_range
+    return [{
+        "arrival": float(arrivals[i]),
+        "prompt": rng.integers(
+            0, cfg.vocab, (1, int(prompt_lens[i % len(prompt_lens)])),
+            dtype=np.int64).astype(np.int32),
+        "max_new": int(rng.integers(lo, hi + 1)),
+    } for i in range(n)]
+
+
+def _submit_trace(sched: Scheduler, trace, with_arrivals: bool) -> None:
+    for r in trace:
+        sched.submit({"tokens": jnp.asarray(r["prompt"])},
+                     prompt_len=r["prompt"].shape[1],
+                     max_new=r["max_new"],
+                     arrival=r["arrival"] if with_arrivals else 0.0)
+
+
+def _continuous_once(ex, trace, realtime: bool) -> tuple:
+    """Replay the trace through a fresh scheduler over a warm executor.
+    ``realtime=False`` ignores arrival times (used for the compile
+    warmup); otherwise requests become admissible as the wall clock
+    passes their arrival stamps."""
+    sched = Scheduler(ex)
+    _submit_trace(sched, trace, with_arrivals=realtime)
+    t0 = time.perf_counter()
+    while sched.pending:
+        now = time.perf_counter() - t0
+        if sched.n_active == 0:
+            nxt = sched.next_arrival()
+            if nxt is not None and nxt > now:
+                time.sleep(nxt - now)
+                now = nxt
+        sched.tick(now)
+    wall = time.perf_counter() - t0
+    n_toks = sum(len(r.tokens) for r in sched.requests.values())
+    return wall, n_toks, sched.occupancy()
+
+
+def _oneshot_once(eng: Engine, trace) -> tuple:
+    """The padded-batch baseline: wait for every request to arrive, pad
+    all prompts to the longest and decode everyone to the largest
+    max_new.  Only the tokens requests actually asked for count."""
+    s_max = max(r["prompt"].shape[1] for r in trace)
+    batch = np.zeros((len(trace), s_max), np.int32)
+    for i, r in enumerate(trace):
+        batch[i, :r["prompt"].shape[1]] = r["prompt"][0]
+    max_new = max(r["max_new"] for r in trace)
+    last_arrival = max(r["arrival"] for r in trace)
+    t0 = time.perf_counter()
+    toks = eng.generate({"tokens": jnp.asarray(batch)}, max_new=max_new,
+                        mode="batch")
+    gen = time.perf_counter() - t0
+    assert toks.shape == (len(trace), max_new)
+    useful = sum(r["max_new"] for r in trace)
+    return last_arrival + gen, useful
+
+
+def run_continuous(cfg, q, args) -> dict:
+    rng = np.random.default_rng(7)
+    if args.smoke:
+        n, capacity, chunk = 6, 3, 4
+        prompt_lens, max_new_range, mean_gap = (8, 20), (4, 12), 0.02
+        prefill_bucket = 16
+    else:
+        n, capacity, chunk = 16, 8, 8
+        prompt_lens, max_new_range, mean_gap = (12, 40), (8, 64), 0.07
+        prefill_bucket = 32
+    trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
+    total_requested = sum(r["max_new"] for r in trace)
+    s_cap = max(prompt_lens) + max_new_range[1]
+
+    packed = deploy.pack_params(q)
+    eng = Engine(packed, cfg, prefill_bucket=prefill_bucket,
+                 decode_bucket=16, capacity=capacity, chunk=chunk)
+    ex = eng._executor(capacity=capacity, max_seq=s_cap)
+
+    print(f"[continuous] {n} requests, capacity {capacity}, chunk {chunk}, "
+          f"prompts {prompt_lens}, max_new {max_new_range}, "
+          f"mean gap {mean_gap * 1e3:.0f}ms")
+    # warmup: compile both prompt buckets, the chunk scan, insert/evict,
+    # and the baseline's padded batch shapes
+    _continuous_once(ex, trace, realtime=False)
+    _oneshot_once(eng, trace)
+
+    one_wall, one_tokens = min(
+        (_oneshot_once(eng, trace) for _ in range(args.repeats)),
+        key=lambda t: t[0])
+    cont = [_continuous_once(ex, trace, realtime=True)
+            for _ in range(args.repeats)]
+    cont_wall, cont_tokens, occupancy = min(cont, key=lambda t: t[0])
+    assert cont_tokens == total_requested, \
+        f"continuous emitted {cont_tokens}, requested {total_requested}"
+
+    one_tps = one_tokens / one_wall
+    cont_tps = cont_tokens / cont_wall
+    speedup = cont_tps / one_tps
+    print(f"  one-shot   {one_wall:6.3f}s  {one_tps:8.1f} tok/s")
+    print(f"  continuous {cont_wall:6.3f}s  {cont_tps:8.1f} tok/s  "
+          f"(occupancy {occupancy:.2f})  -> {speedup:.2f}x")
+    return {
+        "n_requests": n,
+        "capacity": capacity,
+        "chunk": chunk,
+        "prompt_lens": list(prompt_lens),
+        "max_new_range": list(max_new_range),
+        "arrival_mean_gap_s": mean_gap,
+        "total_new_tokens": total_requested,
+        "oneshot": {"wall_s": one_wall, "decode_tokens_per_s": one_tps},
+        "continuous": {"wall_s": cont_wall, "decode_tokens_per_s": cont_tps,
+                       "slot_occupancy": occupancy},
+        "continuous_speedup_vs_oneshot": speedup,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--mode", choices=("all", "paths", "continuous"),
+                    default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (fast compile)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.prompt, args.max_new, args.repeats = 2, 16, 16, 2
+
+    cfg = bench_config("llama")
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+    print(f"quantizing {cfg.name} (tile=128) ...")
+    q = quantize_params(params, None, HaloConfig(tile=128))
+
+    # start from the previous report so one --mode run doesn't drop the
+    # other section's numbers
+    report = {}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                report = json.load(f)
+        except (OSError, ValueError):
+            report = {}
+    report.update({
         "bench": "serving_latency",
         "config": cfg.name,
         "backend": jax.default_backend(),
         "batch": args.batch,
         "prompt_len": args.prompt,
         "max_new": args.max_new,
-        "paths": results,
-        "packed_decode_speedup_vs_dequant": speedup,
-    }
+    })
+
+    if args.mode in ("all", "paths"):
+        results = run_paths(cfg, params, q, args)
+        speedup = (results["packed"]["decode_tokens_per_s"]
+                   / results["xla_dequant"]["decode_tokens_per_s"])
+        report["paths"] = results
+        report["packed_decode_speedup_vs_dequant"] = speedup
+        print(f"packed decode speedup vs XLA-dequant: {speedup:.2f}x")
+
+    if args.mode in ("all", "continuous"):
+        report["continuous"] = run_continuous(cfg, q, args)
+
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"packed decode speedup vs XLA-dequant: {speedup:.2f}x "
-          f"-> {os.path.abspath(args.out)}")
+    print(f"-> {os.path.abspath(args.out)}")
 
 
 if __name__ == "__main__":

@@ -156,6 +156,65 @@ def pack_params(qparams: Any, scheduled: bool = True) -> Any:
     return jax.tree.map(pack, qparams, is_leaf=_is_quantized)
 
 
+# ---------------------------------------------------------------------------
+# slot-sliceable cache helpers (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# The continuous scheduler (serving/scheduler.py + serving/batch.py) keeps
+# one capacity-sized cache resident on device and admits/evicts requests by
+# batch row.  Cache pytrees mix layouts (layer-stacked KV, SSM/RG-LRU
+# states), so the row ops key off ``cache_logical_axes`` to find each
+# leaf's batch axis.  All three are jit-safe with a traced ``slot``: one
+# compilation serves every slot.
+
+def _cache_axes(cfg):
+    from ..models.transformer import cache_logical_axes
+    return cache_logical_axes(cfg)
+
+
+def cache_slot_insert(cfg, cache: Any, sub: Any, slot) -> Any:
+    """Write a batch-1 sub-cache (same max_seq) into batch row ``slot``."""
+
+    def ins(big, small, axes):
+        bpos = axes.index("batch")
+        start = [0] * big.ndim
+        start[bpos] = slot
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            start)
+
+    return jax.tree.map(ins, cache, sub, _cache_axes(cfg))
+
+
+def cache_slot_evict(cfg, cache: Any, slot) -> Any:
+    """Zero batch row ``slot`` (hygiene on request completion: a recycled
+    slot never observes the previous tenant's state even if an admission
+    bug skipped the insert)."""
+
+    def clr(big, axes):
+        bpos = axes.index("batch")
+        row = big.shape[:bpos] + (1,) + big.shape[bpos + 1:]
+        start = [0] * big.ndim
+        start[bpos] = slot
+        return jax.lax.dynamic_update_slice(big, jnp.zeros(row, big.dtype),
+                                            start)
+
+    return jax.tree.map(clr, cache, _cache_axes(cfg))
+
+
+def cache_slot_slice(cfg, cache: Any, slot) -> Any:
+    """Read batch row ``slot`` back as a batch-1 sub-cache."""
+
+    def rd(big, axes):
+        bpos = axes.index("batch")
+        start = [0] * big.ndim
+        start[bpos] = slot
+        sizes = list(big.shape)
+        sizes[bpos] = 1
+        return jax.lax.dynamic_slice(big, start, sizes)
+
+    return jax.tree.map(rd, cache, _cache_axes(cfg))
+
+
 def deploy_params(qparams: Any) -> Any:
     """HaloQuantized/StackedHalo leaves -> ``DeployQuantWeight``.
 

@@ -348,16 +348,40 @@ def block_forward(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
 # block decode (single token)
 # ---------------------------------------------------------------------------
 
+def _mask_rows(active: Optional[jnp.ndarray], new: jnp.ndarray,
+               old: jnp.ndarray) -> jnp.ndarray:
+    """Row-gated state update: keep ``old`` rows where ``active`` is False.
+
+    ``active`` is the continuous-batching slot-liveness mask (serving/batch);
+    None (the single-request / one-shot paths) means every row advances."""
+    if active is None:
+        return new
+    m = active.reshape(active.shape + (1,) * (new.ndim - active.ndim))
+    return jnp.where(m, new, old)
+
+
 def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
-                 cache, lengths: jnp.ndarray):
-    """One block, one token.  x: (B, d).  Returns (x, new_cache)."""
+                 cache, lengths: jnp.ndarray,
+                 active: Optional[jnp.ndarray] = None):
+    """One block, one token.  x: (B, d).  Returns (x, new_cache).
+
+    ``active`` (optional (B,) bool) freezes the cache rows of dead slots:
+    a padded continuous-batching step still computes every row (static
+    shapes), but an inactive row's KV/conv/SSM state must not drift while
+    the slot waits to be recycled."""
     if kind == "mamba":
         dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
                             cfg.conv_k)
         x, new_state = ssm.mamba_decode_step(p["mamba"], x, cache, dims)
+        if active is not None:
+            new_state = jax.tree.map(
+                lambda n, o: _mask_rows(active, n, o), new_state, cache)
         return x, new_state
     if kind == "rec":
         x, new_state = rglru.rglru_decode_step(p["rec"], x, cache)
+        if active is not None:
+            new_state = jax.tree.map(
+                lambda n, o: _mask_rows(active, n, o), new_state, cache)
         x, _ = _mlp_forward(p["mlp"], cfg, x[:, None, :])
         return x[:, 0], new_state
 
@@ -384,13 +408,22 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         slot = lengths % s_max                       # ring buffer
     else:
         slot = jnp.minimum(lengths, s_max - 1)
+    row = jnp.arange(b)
+
+    def write(buf, new):
+        """Write ``new`` at (row, slot), frozen for inactive rows.
+
+        The gate gathers the old entry instead of where-ing the whole
+        buffer, so the masked write touches one position per row."""
+        return buf.at[row, slot].set(_mask_rows(active, new, buf[row, slot]))
+
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        kc = cache.k.at[jnp.arange(b), slot].set(kq)
-        vc = cache.v.at[jnp.arange(b), slot].set(vq)
-        ksc = cache.k_scale.at[jnp.arange(b), slot].set(ks)
-        vsc = cache.v_scale.at[jnp.arange(b), slot].set(vs)
+        kc = write(cache.k, kq)
+        vc = write(cache.v, vq)
+        ksc = write(cache.k_scale, ks)
+        vsc = write(cache.v_scale, vs)
         new_cache = AttnCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
         # kvdec_vmem: on TPU the fused int8-KV flash-decode kernel
         # (kernels/flash_decode.py) streams the int8 cache and dequantizes
@@ -400,8 +433,8 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
             kd = _dequantize_kv(kc, ksc, cfg.dtype)   # per-layer transient
             vd = _dequantize_kv(vc, vsc, cfg.dtype)
     else:
-        kc = cache.k.at[jnp.arange(b), slot].set(k.astype(cache.k.dtype))
-        vc = cache.v.at[jnp.arange(b), slot].set(v.astype(cache.v.dtype))
+        kc = write(cache.k, k.astype(cache.k.dtype))
+        vc = write(cache.v, v.astype(cache.v.dtype))
         new_cache = AttnCache(k=kc, v=vc)
         kd, vd = kc, vc
     new_len = lengths + 1
@@ -580,9 +613,16 @@ def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 
 def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
-                cache, lengths: jnp.ndarray):
+                cache, lengths: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None):
     """One decode step.  inputs: token (B,) or embeds (B, d).
-    Returns (logits (B, V), new_cache, new_lengths)."""
+    Returns (logits (B, V), new_cache, new_lengths).
+
+    ``active`` (optional (B,) bool) is the continuous-batching liveness
+    mask: inactive rows still compute (shapes are static) but their cache
+    rows and lengths are frozen, so a parked slot can be recycled later
+    with no state drift.  ``active=None`` (default) advances every row --
+    the one-shot/batch paths are unchanged."""
     if cfg.embeds_input:
         x = inputs["embeds"].astype(cfg.dtype)
     else:
@@ -599,7 +639,7 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
         new_entries = []
         for pos_i, kind in enumerate(cfg.block_pattern):
             x, nc = block_decode(period_params[pos_i], cfg, kind, x,
-                                 cache_slice[pos_i], lengths)
+                                 cache_slice[pos_i], lengths, active=active)
             new_entries.append(nc)
         return x, tuple(new_entries)
 
@@ -608,8 +648,12 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
     new_rem = []
     for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
                             cache["remainder"]):
-        x, nc = block_decode(rp, cfg, kind, x, ce, lengths)
+        x, nc = block_decode(rp, cfg, kind, x, ce, lengths, active=active)
         new_rem.append(nc)
     logits = _logits(params, cfg, x)
     new_cache = {"period": new_period, "remainder": tuple(new_rem)}
-    return logits, new_cache, lengths + 1
+    if active is None:
+        new_lengths = lengths + 1
+    else:
+        new_lengths = lengths + active.astype(lengths.dtype)
+    return logits, new_cache, new_lengths

@@ -1,0 +1,7 @@
+"""Serving: bucketed-prefill engine, packed HALO fast path, and the
+continuous-batching scheduler (see docs/serving.md)."""
+
+from .engine import Engine, SamplerConfig, serve_step
+from .scheduler import Request, Scheduler
+
+__all__ = ["Engine", "SamplerConfig", "serve_step", "Request", "Scheduler"]

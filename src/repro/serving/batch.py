@@ -1,0 +1,211 @@
+"""Device-side slot state for continuous-batching serving.
+
+The scheduler (serving/scheduler.py) owns request bookkeeping on the host;
+this module owns everything that lives on device: the slot-major decode
+state (last token, per-slot length, per-slot PRNG stream, the KV/SSM/conv
+caches batched over slots) and the jitted updates the scheduler drives it
+with --
+
+  ``admit_slot``    insert a freshly prefilled request into a row and
+                    sample its first token
+  ``evict_slot``    zero a finished row so recycling never sees stale state
+  ``decode_chunk``  a ``lax.scan`` of ``n_steps`` decode steps with
+                    per-slot liveness gating (remaining-token budget and
+                    EOS stop evaluated on device, mid-chunk)
+
+All shapes are fixed by (capacity, max_seq, chunk): requests coming and
+going never trigger a recompile.  Inactive rows still compute each step
+(static shapes) but their cache rows, lengths, keys and last token are
+frozen by the ``active`` gate threaded through ``T.decode_step``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import deploy
+from ..models import transformer as T
+
+
+class SlotState(NamedTuple):
+    """Everything the decode loop carries, batched over capacity slots."""
+
+    tok: jnp.ndarray       # (B,) int32  last emitted token per slot
+    lengths: jnp.ndarray   # (B,) int32  tokens currently in the cache
+    keys: jnp.ndarray      # (B, 2) uint32  per-slot PRNG streams
+    cache: Any             # model cache pytree, batch axis = capacity
+
+
+def init_slots(cfg: ModelConfig, capacity: int, max_seq: int) -> SlotState:
+    return SlotState(
+        tok=jnp.zeros((capacity,), jnp.int32),
+        lengths=jnp.zeros((capacity,), jnp.int32),
+        keys=jnp.zeros((capacity, 2), jnp.uint32),
+        cache=T.init_cache(cfg, capacity, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# weight resolution + decode inputs (shared with the one-shot engine loop)
+# ---------------------------------------------------------------------------
+
+def predecode(params, cfg: ModelConfig):
+    """Backend-resolve packed weights at jit entry.
+
+    TPU: identity -- every matmul streams the 4-bit HaloPacked layout
+    through the Pallas kernel (weight HBM reads /4 vs bf16, per token).
+
+    CPU (no Mosaic): decode each packed stream ONCE, so the token loop
+    multiplies dense weights instead of re-decoding 4-bit codes every
+    token.  Weights at rest stay 4-bit; the dense copies are transients of
+    the call (the continuous executor resolves once per engine and keeps
+    the result resident for the scheduler's lifetime -- see
+    docs/serving.md)."""
+    from ..kernels import ops as kops
+    if not kops.default_interpret():
+        return params
+
+    def dec(w):
+        if isinstance(w, kops.HaloPacked):
+            return w.dequantize(cfg.dtype)
+        return w
+
+    return jax.tree.map(dec, params,
+                        is_leaf=lambda x: isinstance(x, kops.HaloPacked))
+
+
+def decode_inputs(tok: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    if cfg.embeds_input:
+        # stub frontends: feed the token back through a fixed
+        # pseudo-embedding (hash of the token id)
+        return {"embeds": pseudo_embed(tok, cfg)}
+    return {"tokens": tok}
+
+
+def pseudo_embed(tok: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Deterministic stand-in embedding for stub-frontend decode loops."""
+    d = cfg.d_model
+    phase = (tok[:, None].astype(jnp.float32) + 1.0) \
+        * jnp.arange(1, d + 1, dtype=jnp.float32)[None, :]
+    return jnp.sin(phase * 0.01).astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sampling (per-slot PRNG streams)
+# ---------------------------------------------------------------------------
+
+def mask_vocab(logits: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """fp32 logits with padded vocab columns masked out (shared by every
+    sampling path -- one-shot batch, legacy, and per-slot streams)."""
+    lf = logits.astype(jnp.float32)
+    col = jnp.arange(lf.shape[-1])
+    return jnp.where(col >= cfg.vocab, -1e30, lf)
+
+
+def sample_rows(logits: jnp.ndarray, cfg: ModelConfig, sampler,
+                keys: jnp.ndarray) -> jnp.ndarray:
+    """(B, V) logits + (B, 2) per-row keys -> (B,) token ids.
+
+    Unlike the one-shot batch loop (one key per step shared by the whole
+    batch), every slot samples from its own stream, keyed by request id at
+    admission -- a request's temperature sequence is reproducible no
+    matter which slot it lands in or what its neighbors do."""
+    lf = mask_vocab(logits, cfg)
+    if sampler.temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    draw = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / sampler.temperature))
+    return draw(keys, lf).astype(jnp.int32)
+
+
+def request_key(seed: int, rid: int) -> jax.Array:
+    """Per-request PRNG stream root (slot-placement independent)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+
+
+# ---------------------------------------------------------------------------
+# jitted slot updates
+# ---------------------------------------------------------------------------
+
+def admit_slot(state: SlotState, slot, logits, sub_cache, length, key, *,
+               cfg: ModelConfig, sampler) -> Tuple[SlotState, jnp.ndarray]:
+    """Insert a prefilled request into row ``slot``.
+
+    ``logits``: (1, V) last-position prefill logits; ``sub_cache``: the
+    batch-1 prefill cache (same max_seq as the slot cache); ``length``:
+    scalar true prompt length; ``key``: the request's PRNG stream root.
+    Samples and returns the first token (it counts as the request's first
+    emission, exactly like the one-shot paths)."""
+    key, k0 = jax.random.split(key)
+    tok0 = sample_rows(logits, cfg, sampler, k0[None])[0]
+    new = SlotState(
+        tok=state.tok.at[slot].set(tok0),
+        lengths=state.lengths.at[slot].set(
+            jnp.asarray(length, jnp.int32)),
+        keys=state.keys.at[slot].set(key),
+        cache=deploy.cache_slot_insert(cfg, state.cache, sub_cache, slot))
+    return new, tok0
+
+
+def prefill_admit(params, state: SlotState, slot, batch, key, *,
+                  cfg: ModelConfig, sampler, max_seq: int
+                  ) -> Tuple[SlotState, jnp.ndarray]:
+    """Fused batch-1 prefill + admission: one jit call per admission
+    instead of two (the prefill cache stays a jit-internal transient
+    rather than a materialized pytree handed between dispatches)."""
+    logits, cache, lengths = T.prefill(params, cfg, batch, max_seq)
+    return admit_slot(state, slot, logits, cache, lengths[0], key,
+                      cfg=cfg, sampler=sampler)
+
+
+def evict_slot(state: SlotState, slot, *, cfg: ModelConfig) -> SlotState:
+    return SlotState(
+        tok=state.tok.at[slot].set(0),
+        lengths=state.lengths.at[slot].set(0),
+        keys=state.keys.at[slot].set(jnp.zeros((2,), jnp.uint32)),
+        cache=deploy.cache_slot_evict(cfg, state.cache, slot))
+
+
+# ---------------------------------------------------------------------------
+# chunked decode
+# ---------------------------------------------------------------------------
+
+def decode_chunk(params, state: SlotState, active: jnp.ndarray,
+                 remaining: jnp.ndarray, eos_ids: jnp.ndarray, *,
+                 cfg: ModelConfig, sampler, n_steps: int
+                 ) -> Tuple[SlotState, jnp.ndarray, jnp.ndarray]:
+    """Run ``n_steps`` decode steps over all slots.
+
+    ``active``: (B,) bool rows holding a live request at chunk entry;
+    ``remaining``: (B,) int32 tokens each row may still emit;
+    ``eos_ids``: (B,) int32 per-slot stop token (-1: never stops).
+
+    Returns (new_state, toks (n_steps, B) int32, emitted (n_steps, B)
+    bool).  A row alive at the start of a step emits exactly one token
+    that step; it dies after emitting its last budgeted token or an EOS
+    match (the EOS itself is emitted).  Dead rows keep computing junk the
+    scheduler discards -- their state is frozen by the ``active`` gate, so
+    chunk size only trades host syncs against bounded idle slot-steps.
+    ``params`` must already be backend-resolved (see ``predecode``)."""
+
+    def body(carry, _):
+        st, alive, rem = carry
+        logits, cache, lengths = T.decode_step(
+            params, cfg, decode_inputs(st.tok, cfg), st.cache, st.lengths,
+            active=alive)
+        split = jax.vmap(jax.random.split)(st.keys)          # (B, 2, 2)
+        keys = jnp.where(alive[:, None], split[:, 0], st.keys)
+        new_tok = sample_rows(logits, cfg, sampler, split[:, 1])
+        tok = jnp.where(alive, new_tok, st.tok)
+        rem = rem - alive.astype(jnp.int32)
+        hit_eos = alive & (eos_ids >= 0) & (new_tok == eos_ids)
+        next_alive = alive & (rem > 0) & ~hit_eos
+        nxt = SlotState(tok=tok, lengths=lengths, keys=keys, cache=cache)
+        return (nxt, next_alive, rem), (tok, alive)
+
+    (st, _, _), (toks, emitted) = jax.lax.scan(
+        body, (state, active, remaining), xs=None, length=n_steps)
+    return st, toks, emitted

@@ -1,27 +1,39 @@
-"""Batched serving engine: bucketed prefill + device-resident decode loop.
+"""Serving engine: bucketed prefill, scan decode, continuous batching.
 
-The decode loop is a single jitted ``lax.scan`` over new tokens: sampling
-(greedy or temperature) runs on device with a scan-carried PRNG key, the KV
-cache is donated into the loop, and the only device->host transfer per
-``generate`` call is the final (B, max_new) token block.  Prompt lengths are
-right-padded to a bucket multiple so the number of prefill compilations is
-bounded by the bucket count, not by distinct prompt lengths.
+Three serving modes share one weight/kernel stack (dense, HALO-quantized,
+``DeployQuantWeight`` per-call XLA dequant, or ``HaloPacked`` -- the
+pack-at-load Pallas kernel path, see core.deploy.pack_params and
+docs/serving.md):
 
-Weight formats are transparent: dense, HALO-quantized, ``DeployQuantWeight``
-(per-call XLA dequant), or ``HaloPacked`` (the pack-at-load Pallas kernel
-path -- see core.deploy.pack_params and docs/serving.md).  ``serve_step`` is
-the jit target the dry-run lowers for decode shapes.
+``generate(..., mode="continuous")`` (default) routes through the
+continuous-batching scheduler (serving/scheduler.py + serving/batch.py):
+each row becomes a request, admitted into a fixed-capacity slot batch by
+bucketed prompt length, decoded in jitted chunks with per-slot stop/EOS
+state, slots recycled mid-decode.  ``Engine.submit`` / ``Engine.step`` /
+``Engine.drain`` expose the same machinery for streaming multi-request
+serving (arrival times, per-request ``max_new``/EOS).
 
-``generate(..., legacy_loop=True)`` keeps the original per-token Python loop
-(one host sync per token); it exists as the parity oracle and as the
-benchmark baseline for the scan path.
+``generate(..., mode="batch")`` is the one-shot padded-batch loop: a
+single jitted ``lax.scan`` over new tokens, on-device sampling with a
+scan-carried PRNG key, donated KV cache, one device->host transfer per
+call.  It is the continuous scheduler's throughput baseline
+(benchmarks/serving_latency.py) and its greedy parity oracle.
+
+``generate(..., legacy_loop=True)`` keeps the original per-token Python
+loop (one host sync per token) as the ground-truth oracle.
+
+Prompt lengths are right-padded to ``prefill_bucket`` multiples so prefill
+compilations are bounded by the bucket count; prompts longer than the
+largest bucket (``max_prompt_len``, when set) are rejected, never
+truncated.  ``serve_step`` is the jit target the dry-run lowers for
+decode shapes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import transformer as T
+from . import batch as B
+from .scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +53,8 @@ class SamplerConfig:
 
 def sample_logits(logits: jnp.ndarray, cfg: ModelConfig,
                   sampler: SamplerConfig, key: jax.Array) -> jnp.ndarray:
-    lf = logits.astype(jnp.float32)
-    col = jnp.arange(lf.shape[-1])
-    lf = jnp.where(col >= cfg.vocab, -1e30, lf)     # mask padded vocab
+    """Batch-shared-key sampling (the one-shot loops' semantics)."""
+    lf = B.mask_vocab(logits, cfg)
     if sampler.temperature <= 0.0:
         return jnp.argmax(lf, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, lf / sampler.temperature,
@@ -49,42 +62,10 @@ def sample_logits(logits: jnp.ndarray, cfg: ModelConfig,
 
 
 def serve_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
-               cache, lengths: jnp.ndarray):
+               cache, lengths: jnp.ndarray,
+               active: Optional[jnp.ndarray] = None):
     """One decode step (the dry-run target for decode_*/long_* shapes)."""
-    return T.decode_step(params, cfg, inputs, cache, lengths)
-
-
-def _decode_inputs(tok: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
-    if cfg.embeds_input:
-        # stub frontends: feed the token back through a fixed
-        # pseudo-embedding (hash of the token id)
-        return {"embeds": _pseudo_embed(tok, cfg)}
-    return {"tokens": tok}
-
-
-def _predecode(params, cfg: ModelConfig):
-    """Backend-resolve packed weights at jit entry.
-
-    TPU: identity -- every matmul streams the 4-bit HaloPacked layout
-    through the Pallas kernel (weight HBM reads /4 vs bf16, per token).
-
-    CPU (no Mosaic): decode each packed stream ONCE per engine call,
-    before the token scan, so the per-token loop multiplies dense weights
-    instead of re-decoding 4-bit codes every token.  Weights at rest stay
-    4-bit; the dense copies are transients of the call.  Per-matmul decode
-    on CPU was measured ~3x slower per token than this hoist with zero
-    memory-traffic benefit (no VMEM to win back)."""
-    from ..kernels import ops as kops
-    if not kops.default_interpret():
-        return params
-
-    def dec(w):
-        if isinstance(w, kops.HaloPacked):
-            return w.dequantize(cfg.dtype)
-        return w
-
-    return jax.tree.map(dec, params,
-                        is_leaf=lambda x: isinstance(x, kops.HaloPacked))
+    return T.decode_step(params, cfg, inputs, cache, lengths, active=active)
 
 
 def _decode_loop(params, tok0: jnp.ndarray, cache, lengths: jnp.ndarray,
@@ -96,12 +77,12 @@ def _decode_loop(params, tok0: jnp.ndarray, cache, lengths: jnp.ndarray,
     (``key, k1 = split(key)`` then sample with k1), so temperature sampling
     emits the same sequence either way."""
 
-    params = _predecode(params, cfg)
+    params = B.predecode(params, cfg)
 
     def body(carry, _):
         tok, cache, lengths, key = carry
         logits, cache, lengths = T.decode_step(
-            params, cfg, _decode_inputs(tok, cfg), cache, lengths)
+            params, cfg, B.decode_inputs(tok, cfg), cache, lengths)
         key, k1 = jax.random.split(key)
         tok = sample_logits(logits, cfg, sampler, k1)
         return (tok, cache, lengths, key), tok
@@ -113,18 +94,86 @@ def _decode_loop(params, tok0: jnp.ndarray, cache, lengths: jnp.ndarray,
     return jnp.concatenate([tok0[:, None], toks.swapaxes(0, 1)], axis=1)
 
 
+class _DeviceExecutor:
+    """Engine-backed scheduler executor (the device half of the contract
+    in serving/scheduler.py).
+
+    Owns the slot-batched decode state for one (capacity, max_seq) cache
+    and the four jitted entry points: bucketed batch-1 prefill, admission
+    (sample tok0 + slot insert), the chunked decode scan, and eviction.
+    Weights are resolved once via ``Engine.serve_params`` -- on CPU the
+    4-bit streams decode to dense copies held for the executor's lifetime
+    instead of once per token/call; on TPU the packed layout streams
+    through the Pallas kernels untouched."""
+
+    def __init__(self, eng: "Engine", capacity: int, max_seq: int,
+                 chunk: int):
+        cfg = eng.cfg
+        self.eng = eng
+        self.capacity = int(capacity)
+        self.chunk = max(int(chunk), 1)
+        self.max_seq = eng._round_bucket(int(max_seq))
+        self.params = eng.serve_params()
+        self.state = B.init_slots(cfg, self.capacity, self.max_seq)
+        self._prefill_admit = jax.jit(
+            functools.partial(B.prefill_admit, cfg=cfg, sampler=eng.sampler),
+            static_argnames=("max_seq",))
+        self._evict = jax.jit(functools.partial(B.evict_slot, cfg=cfg))
+        # slot state donated into the chunk (in-place on TPU; CPU has no
+        # donation support and would warn on every call)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._chunk = jax.jit(
+            functools.partial(B.decode_chunk, cfg=cfg, sampler=eng.sampler,
+                              n_steps=self.chunk),
+            donate_argnums=donate)
+
+    def prefill(self, slot: int, req: Request) -> int:
+        eng = self.eng
+        s = req.prompt_len
+        s_pad = eng._bucket(s)
+        padded = eng._pad_prompts(dict(req.prompt), s, s_pad)
+        padded["prompt_lengths"] = jnp.full((1,), s, jnp.int32)
+        key = B.request_key(eng.sampler.seed, req.rid)
+        self.state, tok0 = self._prefill_admit(
+            self.params, self.state, np.int32(slot), batch=padded, key=key,
+            max_seq=self.max_seq)
+        return int(tok0)
+
+    def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
+                  eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        self.state, toks, emitted = self._chunk(
+            self.params, self.state, jnp.asarray(active),
+            jnp.asarray(remaining, dtype=jnp.int32),
+            jnp.asarray(eos_ids, dtype=jnp.int32))
+        # the one host sync per chunk
+        return np.asarray(toks), np.asarray(emitted)
+
+    def release(self, slot: int) -> None:
+        self.state = self._evict(self.state, np.int32(slot))
+
+
 class Engine:
     def __init__(self, params, cfg: ModelConfig,
                  sampler: SamplerConfig = SamplerConfig(),
-                 prefill_bucket: int = 64, decode_bucket: int = 16):
+                 prefill_bucket: int = 64, decode_bucket: int = 16,
+                 capacity: int = 8, chunk: int = 8,
+                 max_seq: Optional[int] = None,
+                 max_prompt_len: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
         self.prefill_bucket = max(int(prefill_bucket), 1)
         self.decode_bucket = max(int(decode_bucket), 1)
+        # continuous-batching knobs: slot count, decode steps per host
+        # sync, slot cache length (None: sized from the first submit),
+        # largest admissible prompt (None: unbounded)
+        self.capacity = max(int(capacity), 1)
+        self.chunk = max(int(chunk), 1)
+        self.max_seq = max_seq
+        self.max_prompt_len = max_prompt_len
         self._prefill = jax.jit(
             lambda params, batch, max_seq: T.prefill(
-                _predecode(params, cfg), cfg, batch, max_seq),
+                B.predecode(params, cfg), cfg, batch, max_seq),
             static_argnames=("max_seq",))
         self._decode = jax.jit(functools.partial(T.decode_step, cfg=cfg))
         # KV cache donated into the loop (in-place on TPU; CPU has no
@@ -135,17 +184,34 @@ class Engine:
             static_argnames=("max_new",), donate_argnums=donate)
         self._sample = jax.jit(
             functools.partial(sample_logits, cfg=cfg, sampler=sampler))
+        self._resolved_params = None
+        self._sched: Optional[Scheduler] = None
+        self._executors: Dict[Tuple[int, int], _DeviceExecutor] = {}
 
     # ------------------------------------------------------------------
     # prefill (bucketed)
     # ------------------------------------------------------------------
 
-    def _bucket(self, n: int) -> int:
+    def _round_bucket(self, n: int) -> int:
         b = self.prefill_bucket
-        return -(-n // b) * b
+        return max(-(-n // b) * b, b)
+
+    def _bucket(self, n: int) -> int:
+        """Prompt-length bucket: rounded up to the bucket multiple, capped
+        at the largest bucket when ``max_prompt_len`` is set (the fixed
+        set of shapes a bucketed server actually compiles)."""
+        padded = self._round_bucket(n)
+        if self.max_prompt_len is not None:
+            padded = min(padded, self._round_bucket(self.max_prompt_len))
+        return padded
 
     def _pad_prompts(self, prompts: Dict[str, jnp.ndarray], s: int,
                      s_pad: int) -> Dict[str, jnp.ndarray]:
+        if s > s_pad:
+            raise ValueError(
+                f"prompt length {s} exceeds the largest prefill bucket "
+                f"({s_pad}); refusing to silently truncate -- raise "
+                f"max_prompt_len or shorten the prompt")
         if s_pad == s:
             return dict(prompts)
         pad = s_pad - s
@@ -170,30 +236,197 @@ class Engine:
                 else prompts["tokens"].shape)
         s_pad = self._bucket(s)
         want = max_seq or (s + max_new)
-        max_seq = max(self._bucket(want), s_pad)
+        max_seq = max(self._round_bucket(want), s_pad)
         batch = self._pad_prompts(prompts, s, s_pad)
         batch["prompt_lengths"] = jnp.full((b,), s, jnp.int32)
         return self._prefill(self.params, batch=batch, max_seq=max_seq)
 
     # ------------------------------------------------------------------
+    # continuous batching: submit / step / drain
+    # ------------------------------------------------------------------
+
+    def serve_params(self):
+        """Backend-resolved weights for the continuous executors, computed
+        once per engine.  CPU: each packed 4-bit stream is decoded to a
+        dense copy held for the engine's lifetime (re-decoding per chunk
+        buys nothing without VMEM to win back).  TPU / already-dense
+        trees: the weights pass through untouched."""
+        if self._resolved_params is None:
+            from ..kernels import ops as kops
+            is_packed = lambda x: isinstance(x, kops.HaloPacked)  # noqa: E731
+            has_packed = any(
+                is_packed(l)
+                for l in jax.tree.leaves(self.params, is_leaf=is_packed))
+            if has_packed and kops.default_interpret():
+                self._resolved_params = jax.jit(functools.partial(
+                    B.predecode, cfg=self.cfg))(self.params)
+            else:
+                self._resolved_params = self.params
+        return self._resolved_params
+
+    # each cached executor holds a full capacity x max_seq slot cache on
+    # device; keep only the most recent few (capped LRU) so generate()
+    # calls with heterogeneous shapes can't accumulate caches until OOM
+    _MAX_EXECUTORS = 4
+
+    def _executor(self, capacity: int, max_seq: int) -> _DeviceExecutor:
+        key = (int(capacity), self._round_bucket(int(max_seq)))
+        ex = self._executors.pop(key, None)
+        if ex is None:
+            ex = _DeviceExecutor(self, key[0], key[1], self.chunk)
+        self._executors[key] = ex          # re-insert = mark most recent
+        while len(self._executors) > self._MAX_EXECUTORS:
+            self._executors.pop(next(iter(self._executors)))
+        return ex
+
+    def _normalize_request(self, prompts) -> Tuple[Dict[str, jnp.ndarray],
+                                                   int]:
+        """-> (dict with leading batch dim 1, true prompt length)."""
+        out = {k: jnp.asarray(v) for k, v in dict(prompts).items()}
+        lead = "embeds" if self.cfg.embeds_input else "tokens"
+        want_ndim = 3 if lead == "embeds" else 2
+        if out[lead].ndim == want_ndim - 1:
+            out[lead] = out[lead][None]
+        if "positions" in out and out["positions"].ndim == 1:
+            out["positions"] = out["positions"][None]
+        if out[lead].shape[0] != 1:
+            raise ValueError(
+                f"submit takes one request at a time; got batch "
+                f"{out[lead].shape[0]} (call submit per row, or use "
+                f"generate for a fixed batch)")
+        return out, int(out[lead].shape[1])
+
+    def submit(self, prompts, max_new: int, eos_id: Optional[int] = None,
+               arrival: float = 0.0) -> int:
+        """Enqueue one request; returns its request id.
+
+        ``prompts``: {"tokens": (s,) or (1, s)} (or "embeds"/"positions"
+        rows).  The request is admitted by the scheduler when a slot frees
+        up and ``arrival`` has passed (as judged by the ``now`` handed to
+        ``step``/``drain``)."""
+        req, s = self._normalize_request(prompts)
+        if self._bucket(s) < s:
+            # reject at submit rather than at admission, where the padded
+            # shape check (_pad_prompts) would raise mid-drain
+            raise ValueError(
+                f"prompt length {s} exceeds the largest prefill bucket "
+                f"({self._bucket(s)}); refusing to silently truncate")
+        sched = self._scheduler(prompt_len=s, max_new=max_new)
+        ms = sched.ex.max_seq
+        if s + max_new > ms:
+            raise ValueError(
+                f"prompt_len {s} + max_new {max_new} exceeds the slot "
+                f"cache length {ms}; construct the Engine with max_seq>="
+                f"{s + max_new}")
+        return sched.submit(req, s, max_new, eos_id=eos_id,
+                            arrival=arrival)
+
+    def _scheduler(self, prompt_len: int = 0, max_new: int = 0) -> Scheduler:
+        if self._sched is None:
+            ms = self.max_seq or (prompt_len + max_new)
+            ex = _DeviceExecutor(self, self.capacity, ms, self.chunk)
+            self._sched = Scheduler(ex)
+        return self._sched
+
+    def step(self, now: float = float("inf")) -> List[int]:
+        """One scheduler tick: admit due requests into free slots, run one
+        decode chunk over active slots.  Returns rids finished this tick."""
+        if self._sched is None:
+            return []
+        return self._sched.tick(now)
+
+    def drain(self, now: float = float("inf")) -> Dict[int, np.ndarray]:
+        """Run the scheduler until every admissible request completes;
+        returns {rid: (n_tokens,) int32} for all finished requests."""
+        if self._sched is None:
+            return {}
+        self._sched.drain(now)
+        return self._sched.results()
+
+    def result(self, rid: int) -> Optional[np.ndarray]:
+        if self._sched is None or rid not in self._sched.requests:
+            return None
+        req = self._sched.requests[rid]
+        return np.asarray(req.tokens, np.int32) if req.done else None
+
+    def pop_finished(self) -> Dict[int, np.ndarray]:
+        """Collect finished requests AND drop their bookkeeping -- what a
+        long-running submit/step server should call each cycle so host
+        memory tracks in-flight work, not everything ever served."""
+        if self._sched is None:
+            return {}
+        return self._sched.pop_finished()
+
+    # ------------------------------------------------------------------
     # generate
     # ------------------------------------------------------------------
 
-    def generate(self, prompts: Dict[str, jnp.ndarray], max_new: int,
-                 max_seq: Optional[int] = None,
-                 legacy_loop: bool = False) -> np.ndarray:
-        if legacy_loop:
-            return self._generate_legacy(prompts, max_new, max_seq)
+    def _decode_steps(self, max_new: int) -> int:
         # scan length bucketed so distinct max_new values share a compiled
         # loop (scan steps are sequential, so the first max_new tokens are
         # identical regardless of trailing discarded steps); short requests
-        # use power-of-two buckets to cap discarded work at <2x.  The cache
-        # is sized for ALL n_steps writes so no KV slot ever clamps.
+        # use power-of-two buckets to cap discarded work at <2x.
         db = self.decode_bucket
         if max_new >= db:
-            n_steps = -(-max_new // db) * db
-        else:
-            n_steps = 1 if max_new <= 1 else 1 << (max_new - 1).bit_length()
+            return -(-max_new // db) * db
+        return 1 if max_new <= 1 else 1 << (max_new - 1).bit_length()
+
+    def generate(self, prompts: Dict[str, jnp.ndarray], max_new: int,
+                 max_seq: Optional[int] = None,
+                 legacy_loop: bool = False,
+                 mode: str = "continuous") -> np.ndarray:
+        """(B, max_new) tokens.  ``mode``: "continuous" (scheduler path,
+        default), "batch" (one-shot padded scan loop), "legacy" (per-token
+        Python loop).  ``legacy_loop=True`` is the historical alias for
+        mode="legacy".
+
+        Greedy output is identical across all three modes.  For a fixed
+        batch where minimum host syncs matter more than slot recycling,
+        prefer mode="batch" (one batched prefill, one sync per call);
+        the continuous path prefills per row and syncs per chunk.  Under
+        temperature>0 the continuous path samples per-slot PRNG streams,
+        not the batch-shared stream (see docs/serving.md)."""
+        if legacy_loop:
+            mode = "legacy"
+        if mode == "legacy":
+            return self._generate_legacy(prompts, max_new, max_seq)
+        if mode == "batch":
+            return self._generate_batch(prompts, max_new, max_seq)
+        if mode != "continuous":
+            raise ValueError(f"unknown generate mode: {mode!r}")
+        return self._generate_continuous(prompts, max_new, max_seq)
+
+    def _generate_continuous(self, prompts: Dict[str, jnp.ndarray],
+                             max_new: int,
+                             max_seq: Optional[int] = None) -> np.ndarray:
+        """Compatibility wrapper: each row becomes a scheduler request
+        (capacity = batch, so admission is immediate); greedy output is
+        token-for-token identical to mode="batch"."""
+        cfg = self.cfg
+        prompts = dict(prompts)
+        b, s = (prompts["embeds"].shape[:2] if cfg.embeds_input
+                else prompts["tokens"].shape)
+        # mirror the batch path's cache sizing exactly (decode-bucketed
+        # steps) so both modes compile and mask identical shapes
+        n_steps = self._decode_steps(max_new)
+        want = max_seq or (s + n_steps)
+        ms = max(self._round_bucket(want), self._bucket(s))
+        ex = self._executor(capacity=b, max_seq=ms)
+        sched = Scheduler(ex)
+        rids = []
+        for i in range(b):
+            row = {k: v[i:i + 1] for k, v in prompts.items()}
+            rids.append(sched.submit(row, s, max_new))
+        sched.drain()
+        res = sched.results()
+        return np.stack([res[r][:max_new] for r in rids], axis=0)
+
+    def _generate_batch(self, prompts: Dict[str, jnp.ndarray], max_new: int,
+                        max_seq: Optional[int] = None) -> np.ndarray:
+        """One-shot padded batch: bucketed prefill + a single jitted scan
+        decode with one host sync per call."""
+        n_steps = self._decode_steps(max_new)
+        # the cache is sized for ALL n_steps writes so no KV slot clamps
         logits, cache, lengths = self.run_prefill(prompts, n_steps, max_seq)
         key = jax.random.PRNGKey(self.sampler.seed)
         key, k0 = jax.random.split(key)
@@ -218,17 +451,9 @@ class Engine:
         outs.append(np.asarray(tok))
         for _ in range(max_new - 1):
             logits, cache, lengths = self._decode(
-                self.params, inputs=_decode_inputs(tok, cfg), cache=cache,
+                self.params, inputs=B.decode_inputs(tok, cfg), cache=cache,
                 lengths=lengths)
             key, k1 = jax.random.split(key)
             tok = sample_logits(logits, cfg, self.sampler, k1)
             outs.append(np.asarray(tok))
         return np.stack(outs, axis=1)     # (B, max_new)
-
-
-def _pseudo_embed(tok: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
-    """Deterministic stand-in embedding for stub-frontend decode loops."""
-    d = cfg.d_model
-    phase = (tok[:, None].astype(jnp.float32) + 1.0) \
-        * jnp.arange(1, d + 1, dtype=jnp.float32)[None, :]
-    return jnp.sin(phase * 0.01).astype(cfg.dtype)

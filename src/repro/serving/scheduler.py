@@ -1,0 +1,228 @@
+"""Continuous-batching request scheduler (host side).
+
+Request lifecycle::
+
+    submit -> queue (FIFO) -> admission (free slot + arrival due; prompt
+    padded to its length bucket) -> interleaved chunked decode -> done ->
+    slot recycled for the next queued request, mid-decode
+
+The scheduler is deliberately model-free: it drives an ``Executor`` --
+either the engine-backed device executor (serving.engine) or a scripted
+fake (tests/test_scheduler.py) -- through three operations::
+
+    prefill(slot, request)                 -> first emitted token
+    run_chunk(active, remaining, eos_ids)  -> (tokens, emitted) [steps x B]
+    release(slot)                          -> evict a finished row
+
+This keeps the invariant surface (no dropped / duplicated / reordered
+tokens, occupancy <= capacity, FIFO admission, every slot freed at drain)
+property-testable without JAX in the loop.
+
+Token accounting matches the one-shot engine paths exactly: the first
+token of a request is sampled from its prefill logits (it counts toward
+``max_new``), the remaining ``max_new - 1`` come from decode steps, and an
+EOS match (``eos_id >= 0``) stops the request *after* emitting the EOS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+QUEUED, RUNNING, DONE = "queued", "running", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Any                # dict of per-request arrays, leading dim 1
+    prompt_len: int
+    max_new: int
+    eos_id: int = -1           # -1: never stops on a token
+    arrival: float = 0.0
+    status: str = QUEUED
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.status == DONE
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+    def _should_finish(self) -> bool:
+        if len(self.tokens) >= self.max_new:
+            return True
+        return (self.eos_id >= 0 and bool(self.tokens)
+                and self.tokens[-1] == self.eos_id)
+
+
+class Executor(Protocol):
+    """Device-facing half of the scheduler (see module docstring)."""
+
+    capacity: int
+    chunk: int
+
+    def prefill(self, slot: int, req: Request) -> int: ...
+
+    def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
+                  eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]: ...
+
+    def release(self, slot: int) -> None: ...
+
+
+class Scheduler:
+    def __init__(self, executor: Executor):
+        self.ex = executor
+        self.queue: deque[int] = deque()          # rids, FIFO
+        self.requests: Dict[int, Request] = {}
+        self.slots: List[Optional[int]] = [None] * executor.capacity
+        self._ids = itertools.count()
+        # active-slot count per decode step, for occupancy reporting
+        # (bounded so a long-running server doesn't grow host memory
+        # per decode step)
+        self.occupancy_trace: deque[int] = deque(maxlen=65536)
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: Any, prompt_len: int, max_new: int,
+               eos_id: Optional[int] = None, arrival: float = 0.0) -> int:
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        rid = next(self._ids)
+        self.requests[rid] = Request(
+            rid=rid, prompt=prompt, prompt_len=int(prompt_len),
+            max_new=int(max_new),
+            eos_id=-1 if eos_id is None else int(eos_id),
+            arrival=float(arrival))
+        self.queue.append(rid)
+        return rid
+
+    # ------------------------------------------------------------------
+    # progress
+    # ------------------------------------------------------------------
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def next_arrival(self) -> Optional[float]:
+        return (self.requests[self.queue[0]].arrival if self.queue
+                else None)
+
+    def tick(self, now: float = float("inf")) -> List[int]:
+        """One scheduler step: admit due requests into free slots, then run
+        one decode chunk over the active slots.  Returns rids finished this
+        tick.  Slots freed by the chunk are refilled on the *next* tick
+        (mid-decode recycling)."""
+        finished: List[int] = []
+        self._admit(now, finished)
+        if self.n_active:
+            self._decode_chunk(finished)
+        return finished
+
+    def drain(self, now: float = float("inf")) -> List[int]:
+        """Tick until nothing is queued or running (admitting every
+        request with arrival <= ``now``; default: everything)."""
+        finished: List[int] = []
+        while self.pending:
+            if not self.n_active:
+                nxt = self.next_arrival()
+                if nxt is not None and nxt > now:
+                    break                      # future arrivals only
+            finished.extend(self.tick(now))
+        return finished
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _finish(self, req: Request, finished: List[int]) -> None:
+        req.status = DONE
+        req.prompt = None      # the prompt arrays are dead weight now
+        if req.slot is not None:
+            self.ex.release(req.slot)
+            self.slots[req.slot] = None
+            req.slot = None
+        finished.append(req.rid)
+
+    def _admit(self, now: float, finished: List[int]) -> None:
+        """FIFO, head-of-line admission: a request is admitted only when it
+        has arrived AND a slot is free; later arrivals never jump the
+        queue, so per-request token order and cross-request admission
+        order are both preserved."""
+        while self.queue:
+            req = self.requests[self.queue[0]]
+            if req.arrival > now:
+                break
+            slot = next((i for i, r in enumerate(self.slots) if r is None),
+                        None)
+            if slot is None:
+                break
+            self.queue.popleft()
+            req.slot, req.status = slot, RUNNING
+            self.slots[slot] = req.rid
+            tok0 = self.ex.prefill(slot, req)
+            req.tokens.append(int(tok0))
+            if req._should_finish():           # max_new == 1 or instant EOS
+                self._finish(req, finished)
+
+    def _decode_chunk(self, finished: List[int]) -> None:
+        cap = self.ex.capacity
+        active = np.zeros((cap,), bool)
+        remaining = np.zeros((cap,), np.int32)
+        eos_ids = np.full((cap,), -1, np.int32)
+        for s, rid in enumerate(self.slots):
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            active[s] = True
+            remaining[s] = req.remaining
+            eos_ids[s] = req.eos_id
+        toks, emitted = self.ex.run_chunk(active, remaining, eos_ids)
+        self.occupancy_trace.extend(int(n) for n in emitted.sum(axis=1))
+        for t in range(toks.shape[0]):
+            for s in np.nonzero(emitted[t])[0]:
+                rid = self.slots[s]
+                if rid is None:
+                    raise RuntimeError(
+                        f"executor emitted a token for empty slot {int(s)}")
+                self.requests[rid].tokens.append(int(toks[t, s]))
+        for rid in list(self.slots):
+            if rid is not None and self.requests[rid]._should_finish():
+                self._finish(self.requests[rid], finished)
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        if not self.occupancy_trace:
+            return 0.0
+        return float(np.mean(self.occupancy_trace)) / self.ex.capacity
+
+    def results(self) -> Dict[int, np.ndarray]:
+        return {rid: np.asarray(r.tokens, np.int32)
+                for rid, r in self.requests.items() if r.done}
+
+    def pop_finished(self) -> Dict[int, np.ndarray]:
+        """``results()`` that also forgets the finished requests -- the
+        bookkeeping a long-running submit/step server should use so host
+        memory tracks in-flight work, not total work ever served."""
+        out = self.results()
+        for rid in out:
+            del self.requests[rid]
+        return out

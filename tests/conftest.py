@@ -19,3 +19,44 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# --max-test-seconds: fail the session if any single test runs too long
+# (CI runs the serving tier with --max-test-seconds=120 -- see ci.yml)
+# ---------------------------------------------------------------------------
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--max-test-seconds", type=float, default=None,
+        help="fail the session if any test's call phase exceeds this "
+             "many seconds (tests still run to completion)")
+
+
+class _DurationGate:
+    def __init__(self, limit):
+        self.limit = limit
+        self.over = []
+
+    def pytest_runtest_logreport(self, report):
+        if report.when == "call" and report.duration > self.limit:
+            self.over.append((report.nodeid, report.duration))
+
+    def pytest_terminal_summary(self, terminalreporter):
+        if self.over:
+            terminalreporter.section("duration gate")
+            for nodeid, dur in self.over:
+                terminalreporter.write_line(
+                    f"FAILED duration gate ({dur:.1f}s > "
+                    f"{self.limit:.0f}s): {nodeid}")
+
+    def pytest_sessionfinish(self, session, exitstatus):
+        if self.over and session.exitstatus == 0:
+            session.exitstatus = 1
+
+
+def pytest_configure(config):
+    limit = config.getoption("--max-test-seconds")
+    if limit:
+        config.pluginmanager.register(_DurationGate(limit),
+                                      "duration-gate")

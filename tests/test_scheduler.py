@@ -1,0 +1,294 @@
+"""Continuous-batching scheduler: property-based invariants (scripted
+executor, no JAX in the loop), golden parity against the one-shot paths,
+and KV-cache slot-recycling correctness on the real engine.
+
+The property sweep uses the `hypothesis` API (the deterministic
+`_hypothesis_stub` sweep when the real package is absent): random
+arrival/length/EOS traces must never drop, duplicate, or reorder a
+request's tokens, and slot occupancy never exceeds capacity.
+"""
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs as configs
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine, SamplerConfig
+from repro.serving.scheduler import Scheduler
+
+EOS = 7777
+
+
+def stream(rid, n):
+    """Scripted token stream for request rid (unique, order-revealing)."""
+    return [rid * 10_000 + i for i in range(n)]
+
+
+class ScriptedExecutor:
+    """Fake device executor honoring the scheduler's contract: a slot
+    emits one scripted token per step while alive; it dies after its
+    remaining budget or an EOS match (EOS emitted).  Tracks occupancy so
+    tests can assert capacity is never exceeded."""
+
+    def __init__(self, capacity, chunk, streams):
+        self.capacity, self.chunk = capacity, chunk
+        self.streams = streams                  # rid -> list of tokens
+        self.slots = [None] * capacity          # [rid, cursor] or None
+        self.prefill_order = []
+        self.max_occupied = 0
+
+    def _note_occupancy(self):
+        n = sum(s is not None for s in self.slots)
+        self.max_occupied = max(self.max_occupied, n)
+
+    def prefill(self, slot, req):
+        assert self.slots[slot] is None, "admission into an occupied slot"
+        self.slots[slot] = [req.rid, 1]
+        self.prefill_order.append(req.rid)
+        self._note_occupancy()
+        return self.streams[req.rid][0]
+
+    def run_chunk(self, active, remaining, eos_ids):
+        toks = np.zeros((self.chunk, self.capacity), np.int32)
+        emitted = np.zeros((self.chunk, self.capacity), bool)
+        alive, rem = active.copy(), remaining.copy()
+        for t in range(self.chunk):
+            for s in range(self.capacity):
+                if not alive[s]:
+                    continue
+                rid, cur = self.slots[s]
+                tok = self.streams[rid][cur]
+                self.slots[s][1] += 1
+                toks[t, s], emitted[t, s] = tok, True
+                rem[s] -= 1
+                if rem[s] <= 0 or (eos_ids[s] >= 0 and tok == eos_ids[s]):
+                    alive[s] = False
+        return toks, emitted
+
+    def release(self, slot):
+        assert self.slots[slot] is not None, "double release"
+        self.slots[slot] = None
+
+
+def expected_tokens(toks, max_new, eos_id):
+    """Reference semantics: emit until max_new or through the first EOS."""
+    out = []
+    for tok in toks[:max_new]:
+        out.append(tok)
+        if eos_id is not None and tok == eos_id:
+            break
+    return out
+
+
+class TestSchedulerInvariants:
+    @given(st.integers(1, 4), st.integers(1, 12), st.integers(1, 5),
+           st.integers(0, 10 ** 6))
+    @settings(max_examples=20, deadline=None)
+    def test_random_traces(self, capacity, n_requests, chunk, seed):
+        """Random arrival/length/EOS traces: every request completes with
+        exactly its scripted prefix -- nothing dropped, duplicated, or
+        reordered -- and occupancy never exceeds capacity."""
+        rnd = random.Random(seed)
+        streams, plans = {}, []
+        for rid in range(n_requests):
+            max_new = rnd.randint(1, 7)
+            toks = stream(rid, max_new)
+            eos_at = rnd.randrange(max_new) if rnd.random() < 0.4 else None
+            if eos_at is not None:
+                toks[eos_at] = EOS
+            streams[rid] = toks
+            plans.append((max_new, eos_at))
+        ex = ScriptedExecutor(capacity, chunk, streams)
+        sched = Scheduler(ex)
+        arrivals = sorted(rnd.uniform(0, 3) for _ in range(n_requests))
+        for rid, (max_new, _) in enumerate(plans):
+            got = sched.submit({"tokens": None}, prompt_len=4,
+                               max_new=max_new, eos_id=EOS,
+                               arrival=arrivals[rid])
+            assert got == rid
+        finished = sched.drain()
+
+        assert sorted(finished) == list(range(n_requests))
+        assert not sched.pending
+        assert all(s is None for s in sched.slots), "slot leaked at drain"
+        assert ex.max_occupied <= capacity
+        assert all(n <= capacity for n in sched.occupancy_trace)
+        # FIFO admission: prefills happen in submit order, never reordered
+        assert ex.prefill_order == sorted(ex.prefill_order)
+        for rid, (max_new, _) in enumerate(plans):
+            want = expected_tokens(streams[rid], max_new, EOS)
+            assert sched.requests[rid].tokens == want, \
+                f"request {rid}: got {sched.requests[rid].tokens}, " \
+                f"want {want}"
+
+    @given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 10 ** 6))
+    @settings(max_examples=10, deadline=None)
+    def test_arrival_gating(self, capacity, chunk, seed):
+        """A request is never admitted before its arrival time, even with
+        free slots; ticking with an advancing clock admits in order."""
+        rnd = random.Random(seed)
+        n = 6
+        streams = {rid: stream(rid, 3) for rid in range(n)}
+        ex = ScriptedExecutor(capacity, chunk, streams)
+        sched = Scheduler(ex)
+        arrivals = sorted(round(rnd.uniform(0, 5), 3) for _ in range(n))
+        for rid in range(n):
+            sched.submit(None, prompt_len=1, max_new=3,
+                         arrival=arrivals[rid])
+        now = 0.0
+        while sched.pending:
+            sched.tick(now)
+            admitted = set(ex.prefill_order)
+            for rid in admitted:
+                assert arrivals[rid] <= now
+            now += 0.5
+        assert len(ex.prefill_order) == n
+
+    def test_mid_decode_recycling(self):
+        """A slot freed mid-trace is recycled while other slots keep
+        decoding; the newcomer's stream is untouched by the tenant swap."""
+        streams = {0: stream(0, 2), 1: stream(1, 8), 2: stream(2, 4)}
+        ex = ScriptedExecutor(capacity=2, chunk=3, streams=streams)
+        sched = Scheduler(ex)
+        for rid, max_new in ((0, 2), (1, 8), (2, 4)):
+            sched.submit(None, prompt_len=1, max_new=max_new)
+        sched.drain()
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
+        assert sched.requests[2].tokens == streams[2]
+        # request 2 was admitted only after request 0's slot freed
+        assert ex.prefill_order == [0, 1, 2]
+        assert ex.max_occupied == 2
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: golden parity + recycling on the real model
+# ---------------------------------------------------------------------------
+
+def small_model(arch="granite-8b", seed=0):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def granite():
+    return small_model()
+
+
+class TestGoldenParity:
+    @pytest.mark.parametrize("prompt_len", [5, 13])
+    def test_continuous_matches_batch_and_legacy(self, granite, prompt_len):
+        """Engine.generate via the continuous scheduler is token-for-token
+        identical to the one-shot padded batch loop AND the per-token
+        legacy loop, greedy, fixed seed, across two length buckets
+        (prefill_bucket=8: lens 5 and 13 pad to 8 and 16)."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8)
+        prompts = {"tokens": jnp.asarray(
+            np.random.default_rng(prompt_len).integers(
+                0, cfg.vocab, (2, prompt_len)))}
+        cont = eng.generate(dict(prompts), max_new=6)
+        bat = eng.generate(dict(prompts), max_new=6, mode="batch")
+        leg = eng.generate(dict(prompts), max_new=6, legacy_loop=True)
+        np.testing.assert_array_equal(cont, bat)
+        np.testing.assert_array_equal(bat, leg)
+
+    def test_mixed_buckets_one_scheduler_run(self, granite):
+        """Requests from different length buckets interleaved in ONE
+        scheduler run each match their own fresh one-shot runs."""
+        cfg, params = granite
+        rng = np.random.default_rng(3)
+        p_short = rng.integers(0, cfg.vocab, (1, 5))
+        p_long = rng.integers(0, cfg.vocab, (1, 13))
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=2,
+                     max_seq=32, chunk=4)
+        r_short = eng.submit({"tokens": p_short}, max_new=6)
+        r_long = eng.submit({"tokens": p_long}, max_new=4)
+        res = eng.drain()
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        np.testing.assert_array_equal(
+            res[r_short],
+            oracle.generate({"tokens": jnp.asarray(p_short)}, max_new=6,
+                            mode="batch")[0])
+        np.testing.assert_array_equal(
+            res[r_long],
+            oracle.generate({"tokens": jnp.asarray(p_long)}, max_new=4,
+                            mode="batch")[0])
+
+
+class TestEngineRecycling:
+    def test_slot_recycle_no_stale_cache(self, granite):
+        """capacity=1: the third request reuses a slot evicted twice; its
+        tokens match a fresh single-request run (no stale-KV leakage)."""
+        cfg, params = granite
+        rng = np.random.default_rng(11)
+        reqs = [rng.integers(0, cfg.vocab, (1, n)) for n in (6, 11, 9)]
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1,
+                     max_seq=32, chunk=4)
+        rids = [eng.submit({"tokens": p}, max_new=5) for p in reqs]
+        res = eng.drain()
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        for rid, p in zip(rids, reqs):
+            fresh = oracle.generate({"tokens": jnp.asarray(p)}, max_new=5,
+                                    mode="batch")[0]
+            np.testing.assert_array_equal(res[rid], fresh)
+
+    def test_inactive_slot_state_frozen(self, granite):
+        """decode_step with active=False must not advance a row's length
+        or overwrite its KV entries (the slot-parking contract)."""
+        cfg, params = granite
+        cache = T.init_cache(cfg, batch=2, max_seq=16)
+        lengths = jnp.asarray([4, 4], jnp.int32)
+        inputs = {"tokens": jnp.asarray([3, 3], jnp.int32)}
+        active = jnp.asarray([True, False])
+        _, new_cache, new_len = T.decode_step(params, cfg, inputs, cache,
+                                              lengths, active=active)
+        np.testing.assert_array_equal(np.asarray(new_len), [5, 4])
+        k_new = jax.tree.leaves(new_cache)[0]
+        k_old = jax.tree.leaves(cache)[0]
+        # row 0 written at position 4, row 1 untouched
+        assert not np.array_equal(np.asarray(k_new[:, 0]),
+                                  np.asarray(k_old[:, 0]))
+        np.testing.assert_array_equal(np.asarray(k_new[:, 1]),
+                                      np.asarray(k_old[:, 1]))
+
+
+class TestPadPromptsRejects:
+    def test_reject_prompt_longer_than_largest_bucket(self, granite):
+        """Regression: prompts longer than the largest bucket raise
+        instead of silently truncating."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16)
+        long_prompt = {"tokens": jnp.zeros((1, 20), jnp.int32)}
+        with pytest.raises(ValueError, match="largest prefill bucket"):
+            eng.generate(long_prompt, max_new=2, mode="batch")
+        with pytest.raises(ValueError, match="largest prefill bucket"):
+            eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=2)
+        # within the largest bucket still serves
+        ok = eng.generate({"tokens": jnp.zeros((1, 16), jnp.int32)},
+                          max_new=2, mode="batch")
+        assert ok.shape == (1, 2)
+
+    def test_pad_prompts_raises_on_truncation(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8)
+        with pytest.raises(ValueError, match="refusing to silently"):
+            eng._pad_prompts({"tokens": jnp.zeros((1, 12), jnp.int32)},
+                             s=12, s_pad=8)
+
+    def test_submit_rejects_overflowing_max_seq(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16)
+        eng.submit({"tokens": jnp.zeros((4,), jnp.int32)}, max_new=4)
+        with pytest.raises(ValueError, match="cache length"):
+            eng.submit({"tokens": jnp.zeros((14,), jnp.int32)}, max_new=8)
