@@ -20,6 +20,14 @@ arrival, so the continuous speedup reflects what the scheduler actually
 buys: prefill/decode overlapped with arrivals, and early-finishing slots
 recycled for queued requests instead of idling until the batch max.
 
+``--prefill-heavy`` adds a second continuous trace of LONG prompts --
+several times the prefill window width, so every admission streams
+chunk-by-chunk through the PREFILLING phase interleaved with decode
+ticks -- recorded as the ``continuous_prefill_heavy`` section.  This is
+the traffic shape the chunked-prefill refactor exists for: without it,
+one monolithic prefill per admission stalls the resident decode batch
+for the whole prompt.
+
 Writes BENCH_serving.json at the repo root so the perf trajectory tracks
 both headlines (packed decode speedup_vs_dequant, continuous
 speedup_vs_oneshot).
@@ -146,7 +154,10 @@ def _make_trace(rng, cfg, n: int, prompt_lens, max_new_range,
 
 def _submit_trace(sched: Scheduler, trace, with_arrivals: bool) -> None:
     for r in trace:
-        sched.submit({"tokens": jnp.asarray(r["prompt"])},
+        # prompts stay host arrays: the executor ships one window per
+        # prefill call (a device-resident prompt would round-trip on
+        # every window)
+        sched.submit({"tokens": r["prompt"]},
                      prompt_len=r["prompt"].shape[1],
                      max_new=r["max_new"],
                      arrival=r["arrival"] if with_arrivals else 0.0)
@@ -192,6 +203,40 @@ def _oneshot_once(eng: Engine, trace) -> tuple:
     return last_arrival + gen, useful
 
 
+def _measure_trace(eng: Engine, ex, trace, repeats: int, label: str) -> dict:
+    """Shared measurement protocol: warm both paths on the trace, then
+    best-of-``repeats`` walls for the one-shot padded-batch baseline and
+    the realtime continuous replay (both starting at the first arrival)."""
+    total_requested = sum(r["max_new"] for r in trace)
+    # warmup: compile every prompt window/bucket, the chunk scan,
+    # append/evict, and the baseline's padded batch shapes
+    _continuous_once(ex, trace, realtime=False)
+    _oneshot_once(eng, trace)
+
+    one_wall, one_tokens = min(
+        (_oneshot_once(eng, trace) for _ in range(repeats)),
+        key=lambda t: t[0])
+    cont = [_continuous_once(ex, trace, realtime=True)
+            for _ in range(repeats)]
+    cont_wall, cont_tokens, occupancy = min(cont, key=lambda t: t[0])
+    assert cont_tokens == total_requested, \
+        f"{label}: continuous emitted {cont_tokens}, " \
+        f"requested {total_requested}"
+
+    one_tps = one_tokens / one_wall
+    cont_tps = cont_tokens / cont_wall
+    print(f"  one-shot   {one_wall:6.3f}s  {one_tps:8.1f} tok/s")
+    print(f"  continuous {cont_wall:6.3f}s  {cont_tps:8.1f} tok/s  "
+          f"(occupancy {occupancy:.2f})  -> {cont_tps / one_tps:.2f}x")
+    return {
+        "total_new_tokens": total_requested,
+        "oneshot": {"wall_s": one_wall, "decode_tokens_per_s": one_tps},
+        "continuous": {"wall_s": cont_wall, "decode_tokens_per_s": cont_tps,
+                       "slot_occupancy": occupancy},
+        "continuous_speedup_vs_oneshot": cont_tps / one_tps,
+    }
+
+
 def run_continuous(cfg, q, args) -> dict:
     rng = np.random.default_rng(7)
     if args.smoke:
@@ -203,7 +248,6 @@ def run_continuous(cfg, q, args) -> dict:
         prompt_lens, max_new_range, mean_gap = (12, 40), (8, 64), 0.07
         prefill_bucket = 32
     trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
-    total_requested = sum(r["max_new"] for r in trace)
     s_cap = max(prompt_lens) + max_new_range[1]
 
     packed = deploy.pack_params(q)
@@ -214,39 +258,59 @@ def run_continuous(cfg, q, args) -> dict:
     print(f"[continuous] {n} requests, capacity {capacity}, chunk {chunk}, "
           f"prompts {prompt_lens}, max_new {max_new_range}, "
           f"mean gap {mean_gap * 1e3:.0f}ms")
-    # warmup: compile both prompt buckets, the chunk scan, insert/evict,
-    # and the baseline's padded batch shapes
-    _continuous_once(ex, trace, realtime=False)
-    _oneshot_once(eng, trace)
-
-    one_wall, one_tokens = min(
-        (_oneshot_once(eng, trace) for _ in range(args.repeats)),
-        key=lambda t: t[0])
-    cont = [_continuous_once(ex, trace, realtime=True)
-            for _ in range(args.repeats)]
-    cont_wall, cont_tokens, occupancy = min(cont, key=lambda t: t[0])
-    assert cont_tokens == total_requested, \
-        f"continuous emitted {cont_tokens}, requested {total_requested}"
-
-    one_tps = one_tokens / one_wall
-    cont_tps = cont_tokens / cont_wall
-    speedup = cont_tps / one_tps
-    print(f"  one-shot   {one_wall:6.3f}s  {one_tps:8.1f} tok/s")
-    print(f"  continuous {cont_wall:6.3f}s  {cont_tps:8.1f} tok/s  "
-          f"(occupancy {occupancy:.2f})  -> {speedup:.2f}x")
-    return {
+    report = {
         "n_requests": n,
         "capacity": capacity,
         "chunk": chunk,
         "prompt_lens": list(prompt_lens),
         "max_new_range": list(max_new_range),
         "arrival_mean_gap_s": mean_gap,
-        "total_new_tokens": total_requested,
-        "oneshot": {"wall_s": one_wall, "decode_tokens_per_s": one_tps},
-        "continuous": {"wall_s": cont_wall, "decode_tokens_per_s": cont_tps,
-                       "slot_occupancy": occupancy},
-        "continuous_speedup_vs_oneshot": speedup,
     }
+    report.update(_measure_trace(eng, ex, trace, args.repeats,
+                                 "continuous"))
+    return report
+
+
+def run_prefill_heavy(cfg, q, args) -> dict:
+    """Long-prompt trace: every prompt spans several prefill windows, so
+    admission exercises the chunked PREFILLING phase while resident slots
+    decode.  Same measurement protocol as ``run_continuous``."""
+    rng = np.random.default_rng(13)
+    if args.smoke:
+        n, capacity, chunk = 4, 2, 4
+        prompt_lens, max_new_range, mean_gap = (40, 72), (4, 8), 0.02
+        prefill_bucket, chunk_width, admit_k = 16, 16, 2
+    else:
+        n, capacity, chunk = 8, 4, 8
+        prompt_lens, max_new_range, mean_gap = (96, 160), (8, 16), 0.05
+        prefill_bucket, chunk_width, admit_k = 32, 32, 4
+    trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
+    s_cap = max(prompt_lens) + max_new_range[1]
+
+    packed = deploy.pack_params(q)
+    eng = Engine(packed, cfg, prefill_bucket=prefill_bucket,
+                 decode_bucket=16, capacity=capacity, chunk=chunk,
+                 prefill_chunk_width=chunk_width, admit_k=admit_k)
+    ex = eng._executor(capacity=capacity, max_seq=s_cap)
+
+    print(f"[prefill-heavy] {n} requests, capacity {capacity}, "
+          f"chunk {chunk}, prompts {prompt_lens} "
+          f"(window {ex.chunk_width}), max_new {max_new_range}, "
+          f"mean gap {mean_gap * 1e3:.0f}ms")
+    report = {
+        "n_requests": n,
+        "capacity": capacity,
+        "chunk": chunk,
+        "prompt_lens": list(prompt_lens),
+        "prefill_chunk_width": ex.chunk_width,
+        "admit_k": ex.admit_k,
+        "max_new_range": list(max_new_range),
+        "arrival_mean_gap_s": mean_gap,
+        "total_prompt_tokens": sum(r["prompt"].shape[1] for r in trace),
+    }
+    report.update(_measure_trace(eng, ex, trace, args.repeats,
+                                 "prefill-heavy"))
+    return report
 
 
 def main() -> None:
@@ -257,6 +321,9 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--mode", choices=("all", "paths", "continuous"),
                     default="all")
+    ap.add_argument("--prefill-heavy", action="store_true",
+                    help="also replay the long-prompt (chunked-prefill) "
+                         "trace -> continuous_prefill_heavy section")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (fast compile)")
     ap.add_argument("--out", default=OUT_PATH)
@@ -297,6 +364,9 @@ def main() -> None:
 
     if args.mode in ("all", "continuous"):
         report["continuous"] = run_continuous(cfg, q, args)
+        if args.prefill_heavy:
+            report["continuous_prefill_heavy"] = run_prefill_heavy(
+                cfg, q, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

@@ -215,6 +215,45 @@ def cache_slot_slice(cfg, cache: Any, slot) -> Any:
     return jax.tree.map(rd, cache, _cache_axes(cfg))
 
 
+def cache_rows_gather(cfg, cache: Any, slots: jnp.ndarray) -> Any:
+    """Read batch rows ``slots`` ((K,) int32) as a batch-K sub-cache.
+
+    The k-way generalization of ``cache_slot_slice`` backing the fused
+    admission path (serving/batch.prefill_append): one gather pulls every
+    seat's cache row so a K-seat prefill window runs as one batch-K model
+    call instead of K batch-1 calls.  Out-of-range slot ids (the padded
+    seats of a partially filled admission group) clamp to the last row --
+    callers mask those seats, so the garbage row is never consumed."""
+
+    def rd(big, axes):
+        bpos = axes.index("batch")
+        return jnp.take(big, slots, axis=bpos, mode="clip")
+
+    return jax.tree.map(rd, cache, _cache_axes(cfg))
+
+
+def cache_rows_scatter(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> Any:
+    """Write a batch-K sub-cache back into batch rows ``slots``.
+
+    The k-way generalization of ``cache_slot_insert``.  Seats with
+    ``mask`` False (or an out-of-range slot id) are routed out of bounds,
+    where scatter's drop semantics discard the update wholesale -- the
+    order-safe way to no-op padded seats (substituting "old" values for
+    masked seats would race a live write when a padded seat duplicates a
+    live seat's slot id).  Live seats must hold distinct slots."""
+
+    def wr(big, small, axes):
+        bpos = axes.index("batch")
+        sl = slots if mask is None else jnp.where(mask, slots,
+                                                  big.shape[bpos])
+        x = jnp.moveaxis(big, bpos, 0)
+        s = jnp.moveaxis(small.astype(big.dtype), bpos, 0)
+        return jnp.moveaxis(x.at[sl].set(s), 0, bpos)
+
+    return jax.tree.map(wr, cache, sub, _cache_axes(cfg))
+
+
 def deploy_params(qparams: Any) -> Any:
     """HaloQuantized/StackedHalo leaves -> ``DeployQuantWeight``.
 

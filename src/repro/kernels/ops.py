@@ -18,6 +18,7 @@ import numpy as np
 
 from ..core import tiling
 from ..core.quantize import HaloQuantized
+from ..utils import next_pow2
 from . import halo_matmul as hk
 from . import spmv as sk
 from .int8_matmul import int8_matmul
@@ -136,8 +137,8 @@ def stack_packed(packs: Sequence[HaloPacked],
         lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape), *packs)
 
 
-def _next_pow2(n: int) -> int:
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+# back-compat alias: the shared definition lives in repro.utils
+_next_pow2 = next_pow2
 
 
 def _byte_pair_table() -> np.ndarray:
@@ -214,7 +215,7 @@ def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
     # block-M sized to the actual row count (decode is M=1..batch): next
     # power of two of the rows, floored at the 8-sublane f32 tile, capped
     # at the caller's bm.  M=1 decode -> bm_eff = 8, not a full 128 block.
-    bm_eff = min(bm, max(8, _next_pow2(x2.shape[0])))
+    bm_eff = min(bm, max(8, next_pow2(x2.shape[0])))
     out = hk.halo_matmul_packed(
         x2, packed.idx_packed, packed.scale, packed.order_kt,
         packed.order_nt, packed.order_first, packed.order_last,

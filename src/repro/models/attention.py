@@ -163,6 +163,52 @@ def decode_attention(
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def append_attention(
+    q: jnp.ndarray,             # (B, W, H, D) window of new tokens
+    k_cache: jnp.ndarray,       # (B, S, Hkv, D) cache AFTER the window write
+    v_cache: jnp.ndarray,       # (B, S, Hkv, D)
+    q_positions: jnp.ndarray,   # (B, W) absolute position of each query
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Chunked-prefill attention: a W-token window attends a linear KV
+    cache at a per-row position offset (the causal mask is offset by
+    ``q_positions`` instead of assuming queries start at 0).
+
+    The cache must already contain the window's own K/V (the caller writes
+    the window at ``q_positions`` first, exactly like ``decode_attention``
+    consumes the post-write cache), and cache index i must hold absolute
+    position i -- ring buffers take the sequential path in
+    ``transformer.block_append``.  Query w of row b attends cache entries
+    ``kpos <= q_positions[b, w]`` (optionally windowed), so stale entries
+    beyond a row's live length are masked for every valid query.  Rows or
+    window slots past a row's chunk length produce junk outputs the caller
+    discards; the mask is never empty for a valid query (it covers its own
+    just-written key), and fully-masked junk rows stay finite (uniform
+    softmax over NEG_INF ties), never NaN.
+
+    Same GQA contract as ``decode_attention``: q-side grouping only, the
+    cache keeps its true kv-head count."""
+    b, w, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, w, hkv, g, d).astype(k_cache.dtype)
+    s = jnp.einsum("bwkgd,bskd->bwkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    kpos = jnp.arange(k_cache.shape[1])[None, None, :]
+    mask = kpos <= q_positions[:, :, None]
+    if window is not None:
+        mask &= kpos > (q_positions[:, :, None] - window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bwkgs,bskd->bwkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, w, h, d).astype(q.dtype)
+
+
 def decode_attention_partial(
     q: jnp.ndarray, k_local: jnp.ndarray, v_local: jnp.ndarray,
     valid_mask: jnp.ndarray,

@@ -27,7 +27,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..dist.sharding import shard_activation
 from . import rglru, ssm
-from .attention import (causal_blockwise_attention, decode_attention)
+from .attention import (append_attention, causal_blockwise_attention,
+                        decode_attention)
 from .layers import (activation, apply_rope, cross_entropy, dense,
                      embed_lookup, layernorm, materialize, rmsnorm, softcap)
 from .module import ParamSpec, stack_tree
@@ -456,6 +457,156 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# block append (chunked prefill: a W-token window into an existing cache)
+# ---------------------------------------------------------------------------
+
+def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                 cache, lengths: jnp.ndarray, positions: jnp.ndarray,
+                 valid: jnp.ndarray):
+    """Attention block over a (B, W) window appended at ``positions``.
+
+    Global attention writes the whole window into the cache in one masked
+    scatter (invalid window slots are routed out of bounds, so the scatter
+    drops them -- no read-modify-write race with a valid write at the same
+    index) and attends with the offset causal mask.  Sliding-window layers
+    keep a ring cache (cache len == min(max_seq, local_window), see
+    ``_block_cache_spec``) where later window tokens overwrite ring slots
+    earlier queries still need, so they take a per-token ``lax.scan`` of
+    exactly the ``block_decode`` write/attend step -- q/k/v are still
+    computed window-parallel; only write+attend serializes."""
+    b, w, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ap = p["attn"]
+    hin = _apply_norm(ap["ln"], cfg, x)
+    q = dense(hin, ap["wq"]) + (ap.get("bq", 0) if cfg.use_bias else 0)
+    k = dense(hin, ap["wk"]) + (ap.get("bk", 0) if cfg.use_bias else 0)
+    v = dense(hin, ap["wv"]) + (ap.get("bv", 0) if cfg.use_bias else 0)
+    q = q.reshape(b, w, h, dh)
+    k = k.reshape(b, w, hkv, dh)
+    v = v.reshape(b, w, hkv, dh)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    s_max = cache.k.shape[1]
+    ring = (kind == "attn_local" and cfg.local_window is not None
+            and s_max <= cfg.local_window)
+    if not ring:
+        # linear cache: one scatter for the whole window.  Invalid slots
+        # scatter out of bounds (index s_max) and are dropped wholesale,
+        # which also keeps them from colliding with a valid write clipped
+        # to the same index.
+        row = jnp.arange(b)[:, None]
+        pos_w = jnp.where(valid, jnp.minimum(positions, s_max - 1), s_max)
+
+        def write(buf, new):
+            return buf.at[row, pos_w].set(new.astype(buf.dtype))
+
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache = AttnCache(k=write(cache.k, kq), v=write(cache.v, vq),
+                                  k_scale=write(cache.k_scale, ks),
+                                  v_scale=write(cache.v_scale, vs))
+            with jax.named_scope("kvdec_vmem"):
+                kd = _dequantize_kv(new_cache.k, new_cache.k_scale, cfg.dtype)
+                vd = _dequantize_kv(new_cache.v, new_cache.v_scale, cfg.dtype)
+        else:
+            new_cache = AttnCache(k=write(cache.k, k), v=write(cache.v, v))
+            kd, vd = new_cache.k, new_cache.v
+        window = cfg.local_window if kind == "attn_local" else None
+        out = append_attention(q, kd, vd, positions, window=window,
+                               attn_softcap=cfg.attn_softcap)
+    else:
+        # ring cache: per-token scan, one write + one decode-attend a step
+        # (identical formulas to block_decode's ring branch)
+        rowi = jnp.arange(b)
+
+        def step(carry, xs):
+            kv, cur_len = carry
+            qi, ki, vi, vm = xs
+
+            slot = cur_len % s_max
+
+            def wr(buf, new):
+                return buf.at[rowi, slot].set(
+                    _mask_rows(vm, new.astype(buf.dtype), buf[rowi, slot]))
+
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks = _quantize_kv(ki)
+                vq, vs = _quantize_kv(vi)
+                kv = AttnCache(k=wr(kv.k, kq), v=wr(kv.v, vq),
+                               k_scale=wr(kv.k_scale, ks),
+                               v_scale=wr(kv.v_scale, vs))
+                with jax.named_scope("kvdec_vmem"):
+                    kd = _dequantize_kv(kv.k, kv.k_scale, cfg.dtype)
+                    vd = _dequantize_kv(kv.v, kv.v_scale, cfg.dtype)
+            else:
+                kv = AttnCache(k=wr(kv.k, ki), v=wr(kv.v, vi))
+                kd, vd = kv.k, kv.v
+            new_len = cur_len + vm.astype(cur_len.dtype)
+            out_i = decode_attention(qi, kd, vd,
+                                     jnp.minimum(new_len, s_max),
+                                     window=None,
+                                     attn_softcap=cfg.attn_softcap)
+            return (kv, new_len), out_i
+
+        (new_cache, _), outs = jax.lax.scan(
+            step, (cache, lengths),
+            (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), valid.T))
+        out = outs.swapaxes(0, 1)
+
+    out = dense(out.reshape(b, w, h * dh), ap["wo"]) \
+        + (ap.get("bo", 0) if cfg.use_bias else 0)
+    return x + out.astype(x.dtype), new_cache
+
+
+def _append_recurrent(decode_fn, x: jnp.ndarray, state,
+                      valid: jnp.ndarray):
+    """Run a per-token decode step over the (B, W) window, advancing the
+    recurrent state only for valid tokens (SSM / RG-LRU window append)."""
+
+    def step(carry, xs):
+        x_i, v_i = xs
+        y_i, new_state = decode_fn(x_i, carry)
+        new_state = jax.tree.map(lambda nn, oo: _mask_rows(v_i, nn, oo),
+                                 new_state, carry)
+        return new_state, y_i
+
+    state, ys = jax.lax.scan(step, state, (x.swapaxes(0, 1), valid.T))
+    return ys.swapaxes(0, 1), state
+
+
+def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                 cache, lengths: jnp.ndarray, positions: jnp.ndarray,
+                 valid: jnp.ndarray):
+    """One block over a W-token window appended to an existing cache.
+
+    x: (B, W, d); ``lengths``: (B,) tokens already in the cache (the
+    window's position offset); ``positions``: (B, W) absolute positions;
+    ``valid``: (B, W) bool -- False slots (padding past a row's chunk
+    length, or rows whose slot is not being appended) compute junk but
+    never touch cache/state, mirroring the ``active`` gate of
+    ``block_decode``.  Returns (x, new_cache_entry)."""
+    if kind == "mamba":
+        dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                            cfg.conv_k)
+        return _append_recurrent(
+            lambda xi, st: ssm.mamba_decode_step(p["mamba"], xi, st, dims),
+            x, cache, valid)
+    if kind == "rec":
+        x, new_state = _append_recurrent(
+            lambda xi, st: rglru.rglru_decode_step(p["rec"], xi, st),
+            x, cache, valid)
+        x, _ = _mlp_forward(p["mlp"], cfg, x)
+        return x, new_state
+    x, new_cache = _append_attn(p, cfg, kind, x, cache, lengths, positions,
+                                valid)
+    x, _ = _mlp_forward(p["mlp"], cfg, x)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
 # whole-model forward / prefill / decode
 # ---------------------------------------------------------------------------
 
@@ -610,6 +761,81 @@ def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
         logits = _logits(params, cfg, x_last)[:, 0]
     cache = {"period": period_cache, "remainder": tuple(rem_cache)}
     return logits, cache, lengths
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                  cache, lengths: jnp.ndarray,
+                  active: Optional[jnp.ndarray] = None):
+    """Incremental prefill: append a W-token prompt window into an
+    EXISTING cache at each row's current length (the cache-append
+    primitive under chunked prefill and k-way admission -- see
+    docs/serving.md).
+
+    ``batch``: tokens (B, W) or embeds (B, W, d); optional
+    ``chunk_lengths`` (B,) int32 = valid tokens this window (0..W, default
+    W -- rows may consume different amounts of one fused call); optional
+    ``positions`` (B, W) absolute positions (default ``lengths + arange``,
+    matching ``decode_step``'s use of ``lengths`` as the next position).
+
+    ``active`` (optional (B,) bool) is the slot-liveness gate: inactive
+    rows compute junk (shapes are static) but their cache rows, states and
+    lengths are untouched, exactly like ``decode_step`` -- so one fused
+    call can append windows to any subset of a resident slot batch.
+
+    Returns (logits (B, V) at each row's last valid window position,
+    new_cache, new_lengths).  Splitting a prompt into windows and feeding
+    them through ``prefill_chunk`` yields the same cache/logits as one
+    ``prefill`` call over the whole prompt (modulo fp summation order:
+    window attention is an offset-masked softmax over the cache rather
+    than the blockwise-online-softmax prefill uses)."""
+    lengths = lengths.astype(jnp.int32)
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_lookup(materialize(params["embed"]), batch["tokens"])
+    b, w = x.shape[:2]
+    cl = batch.get("chunk_lengths")
+    cl = (jnp.full((b,), w, jnp.int32) if cl is None
+          else cl.astype(jnp.int32))
+    if active is not None:
+        cl = jnp.where(active, cl, 0)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = lengths[:, None] + jnp.arange(w, dtype=jnp.int32)[None]
+    valid = jnp.arange(w)[None, :] < cl[:, None]
+
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_emb == "learned":
+        x = x + jnp.take(materialize(params["pos_embed"]),
+                         jnp.minimum(positions, cfg.max_position - 1),
+                         axis=0)
+    x = shard_activation(x.astype(cfg.dtype),
+                         ("batch", "act_seq", "act_embed"))
+
+    def period_fn(x, xs):
+        period_params, cache_slice = xs
+        new_entries = []
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            x, nc = block_append(period_params[pos_i], cfg, kind, x,
+                                 cache_slice[pos_i], lengths, positions,
+                                 valid)
+            new_entries.append(nc)
+        x = shard_activation(x, ("batch", "act_seq", "act_embed"))
+        return x, tuple(new_entries)
+
+    x, new_period = jax.lax.scan(period_fn, x,
+                                 (params["period"], cache["period"]))
+    new_rem = []
+    for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
+                            cache["remainder"]):
+        x, nc = block_append(rp, cfg, kind, x, ce, lengths, positions, valid)
+        new_rem.append(nc)
+    idx = jnp.clip(cl - 1, 0, w - 1)[:, None, None]
+    x_last = jnp.take_along_axis(x, idx, axis=1)          # (B, 1, d)
+    logits = _logits(params, cfg, x_last)[:, 0]
+    new_cache = {"period": new_period, "remainder": tuple(new_rem)}
+    return logits, new_cache, lengths + cl
 
 
 def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],

@@ -6,17 +6,23 @@ state (last token, per-slot length, per-slot PRNG stream, the KV/SSM/conv
 caches batched over slots) and the jitted updates the scheduler drives it
 with --
 
-  ``admit_slot``    insert a freshly prefilled request into a row and
-                    sample its first token
-  ``evict_slot``    zero a finished row so recycling never sees stale state
-  ``decode_chunk``  a ``lax.scan`` of ``n_steps`` decode steps with
-                    per-slot liveness gating (remaining-token budget and
-                    EOS stop evaluated on device, mid-chunk)
+  ``prefill_append``  one fused call that appends a W-token prompt window
+                      into up to K slots' cache rows at their current
+                      lengths (chunked prefill + k-way admission in one
+                      jit target; seats that complete their prompt sample
+                      their first token on device)
+  ``evict_slot``      zero a finished row so recycling never sees stale
+                      state
+  ``decode_chunk``    a ``lax.scan`` of ``n_steps`` decode steps with
+                      per-slot liveness gating (remaining-token budget and
+                      EOS stop evaluated on device, mid-chunk)
 
-All shapes are fixed by (capacity, max_seq, chunk): requests coming and
-going never trigger a recompile.  Inactive rows still compute each step
-(static shapes) but their cache rows, lengths, keys and last token are
-frozen by the ``active`` gate threaded through ``T.decode_step``.
+All decode shapes are fixed by (capacity, max_seq, chunk); prefill shapes
+by (K, W) where K is the admission seat count and W ranges over the
+bounded window-width bucket set -- requests coming and going never trigger
+a recompile.  Inactive rows still compute each step (static shapes) but
+their cache rows, lengths, keys and last token are frozen by the
+``active`` gate threaded through ``T.decode_step`` / ``T.prefill_chunk``.
 """
 
 from __future__ import annotations
@@ -130,35 +136,82 @@ def request_key(seed: int, rid: int) -> jax.Array:
 # jitted slot updates
 # ---------------------------------------------------------------------------
 
-def admit_slot(state: SlotState, slot, logits, sub_cache, length, key, *,
-               cfg: ModelConfig, sampler) -> Tuple[SlotState, jnp.ndarray]:
-    """Insert a prefilled request into row ``slot``.
+def prefill_append(params, state: SlotState, slots, window, chunk_lens,
+                   total_lens, seat, rids, first, *,
+                   cfg: ModelConfig, sampler, fresh: bool = False,
+                   max_seq: int = 0
+                   ) -> Tuple[SlotState, jnp.ndarray, jnp.ndarray]:
+    """Fused k-way chunked-prefill admission: append one W-token prompt
+    window to up to K slots in a single jit call.
 
-    ``logits``: (1, V) last-position prefill logits; ``sub_cache``: the
-    batch-1 prefill cache (same max_seq as the slot cache); ``length``:
-    scalar true prompt length; ``key``: the request's PRNG stream root.
-    Samples and returns the first token (it counts as the request's first
-    emission, exactly like the one-shot paths)."""
-    key, k0 = jax.random.split(key)
-    tok0 = sample_rows(logits, cfg, sampler, k0[None])[0]
+    ``slots``: (K,) int32 slot row per seat -- padded seats carry an
+    out-of-range id (>= capacity) and ``seat`` False, so every write
+    scatters to nowhere (order-safe no-op; see deploy.cache_rows_scatter).
+    ``window``: {"tokens": (K, W)} (or "embeds"/"positions") -- the next
+    window of each seat's prompt, right-padded to W;
+    ``chunk_lens``: (K,) int32 valid tokens this window;
+    ``total_lens``: (K,) int32 full prompt length;
+    ``rids``: (K,) int32 request ids -- each seat's PRNG stream root
+    (``request_key(sampler.seed, rid)``) is derived ON DEVICE and
+    installed on its ``first`` chunk (admission), then carried in slot
+    state across chunks (no per-admission host key sync).
+
+    Two internal strategies behind one contract:
+
+    ``fresh=True`` (static; the caller promises every seat is a FIRST
+    window covering its WHOLE prompt -- the dominant short-prompt case):
+    the window runs through the one-shot ``T.prefill`` -- blockwise
+    O(W*chunk) attention over a fresh ``max_seq``-sized cache, no row
+    gather (an admitted slot's rows are always zeroed by eviction) -- and
+    the K rows scatter in.  Token-for-token identical to the historical
+    batch-1 prefill+insert admission, just k seats per call.
+
+    ``fresh=False``: gathers the K seats' cache rows
+    (deploy.cache_rows_gather), appends the window via ``T.prefill_chunk``
+    at each row's current length -- compute scales with K seats, not
+    capacity -- and scatters the rows back.
+
+    Seats whose append reaches ``total_lens`` are ``done``: they sample
+    their first token from the final window logits with their own PRNG
+    stream (one split, exactly like the old one-shot admission, so a
+    request's sample sequence is unchanged).
+
+    Returns (new_state, tok0 (K,) int32, done (K,) bool); ``tok0`` is
+    meaningful only where ``done``."""
+    cap = state.tok.shape[0]
+    slots = jnp.asarray(slots, jnp.int32)
+    slots_c = jnp.clip(slots, 0, cap - 1)               # in-range gathers
+    req_keys = jax.vmap(lambda r: request_key(sampler.seed, r))(
+        jnp.asarray(rids, jnp.int32))
+    keys_in = jnp.where((first & seat)[:, None], req_keys,
+                        state.keys[slots_c])
+
+    batch = dict(window)
+    if fresh:
+        batch["prompt_lengths"] = jnp.asarray(chunk_lens, jnp.int32)
+        logits, new_sub, new_len = T.prefill(params, cfg, batch, max_seq)
+        new_len = jnp.where(seat, new_len, 0)
+    else:
+        sub_cache = deploy.cache_rows_gather(cfg, state.cache, slots_c)
+        sub_len = jnp.where(seat, state.lengths[slots_c], 0)
+        batch["chunk_lengths"] = jnp.asarray(chunk_lens, jnp.int32)
+        logits, new_sub, new_len = T.prefill_chunk(params, cfg, batch,
+                                                   sub_cache, sub_len,
+                                                   active=seat)
+    done = seat & (new_len >= total_lens)
+    split = jax.vmap(jax.random.split)(keys_in)          # (K, 2, 2)
+    keys_out = jnp.where(done[:, None], split[:, 0], keys_in)
+    t0 = sample_rows(logits, cfg, sampler, split[:, 1])
+    tok0 = jnp.where(done, t0, state.tok[slots_c])
+
+    sl = jnp.where(seat, slots, cap)                     # OOB -> dropped
     new = SlotState(
-        tok=state.tok.at[slot].set(tok0),
-        lengths=state.lengths.at[slot].set(
-            jnp.asarray(length, jnp.int32)),
-        keys=state.keys.at[slot].set(key),
-        cache=deploy.cache_slot_insert(cfg, state.cache, sub_cache, slot))
-    return new, tok0
-
-
-def prefill_admit(params, state: SlotState, slot, batch, key, *,
-                  cfg: ModelConfig, sampler, max_seq: int
-                  ) -> Tuple[SlotState, jnp.ndarray]:
-    """Fused batch-1 prefill + admission: one jit call per admission
-    instead of two (the prefill cache stays a jit-internal transient
-    rather than a materialized pytree handed between dispatches)."""
-    logits, cache, lengths = T.prefill(params, cfg, batch, max_seq)
-    return admit_slot(state, slot, logits, cache, lengths[0], key,
-                      cfg=cfg, sampler=sampler)
+        tok=state.tok.at[sl].set(tok0),
+        lengths=state.lengths.at[sl].set(new_len),
+        keys=state.keys.at[sl].set(keys_out),
+        cache=deploy.cache_rows_scatter(cfg, state.cache, new_sub, slots,
+                                        mask=seat))
+    return new, tok0, done
 
 
 def evict_slot(state: SlotState, slot, *, cfg: ModelConfig) -> SlotState:

@@ -23,16 +23,21 @@ call.  It is the continuous scheduler's throughput baseline
 loop (one host sync per token) as the ground-truth oracle.
 
 Prompt lengths are right-padded to ``prefill_bucket`` multiples so prefill
-compilations are bounded by the bucket count; prompts longer than the
-largest bucket (``max_prompt_len``, when set) are rejected, never
-truncated.  ``serve_step`` is the jit target the dry-run lowers for
-decode shapes.
+compilations are bounded by the bucket count.  The continuous path admits
+prompts of ANY length that fits the slot cache: prompts are appended to a
+slot's cache in fixed-width windows (``prefill_chunk_width``), up to
+``admit_k`` same-width seats fused into one jitted ``prefill_append``
+call, and long prompts stream window-by-window interleaved with decode
+ticks (the ``PREFILLING`` phase -- see docs/serving.md).  ``serve_step``
+is the jit target the dry-run lowers for decode shapes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -41,6 +46,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import transformer as T
+from ..utils import next_pow2, round_up
 from . import batch as B
 from .scheduler import Request, Scheduler
 
@@ -99,12 +105,14 @@ class _DeviceExecutor:
     in serving/scheduler.py).
 
     Owns the slot-batched decode state for one (capacity, max_seq) cache
-    and the four jitted entry points: bucketed batch-1 prefill, admission
-    (sample tok0 + slot insert), the chunked decode scan, and eviction.
-    Weights are resolved once via ``Engine.serve_params`` -- on CPU the
-    4-bit streams decode to dense copies held for the executor's lifetime
-    instead of once per token/call; on TPU the packed layout streams
-    through the Pallas kernels untouched."""
+    and the three jitted entry points: ``prefill_append`` (fused k-way
+    chunked-prefill admission -- one call appends a W-token prompt window
+    to up to ``admit_k`` slots and samples first tokens for seats that
+    complete), the chunked decode scan, and eviction.  Weights are
+    resolved once via ``Engine.serve_params`` -- on CPU the 4-bit streams
+    decode to dense copies held for the executor's lifetime instead of
+    once per token/call; on TPU the packed layout streams through the
+    Pallas kernels untouched."""
 
     def __init__(self, eng: "Engine", capacity: int, max_seq: int,
                  chunk: int):
@@ -113,31 +121,123 @@ class _DeviceExecutor:
         self.capacity = int(capacity)
         self.chunk = max(int(chunk), 1)
         self.max_seq = eng._round_bucket(int(max_seq))
+        self.admit_k = max(1, min(int(eng.admit_k), self.capacity))
+        self.chunk_width = eng._chunk_width()
         self.params = eng.serve_params()
         self.state = B.init_slots(cfg, self.capacity, self.max_seq)
-        self._prefill_admit = jax.jit(
-            functools.partial(B.prefill_admit, cfg=cfg, sampler=eng.sampler),
-            static_argnames=("max_seq",))
-        self._evict = jax.jit(functools.partial(B.evict_slot, cfg=cfg))
-        # slot state donated into the chunk (in-place on TPU; CPU has no
-        # donation support and would warn on every call)
+        # (width, n_seats) per fused append call -- k-way admission and
+        # chunk-streaming diagnostics (asserted on in tests); bounded so
+        # a long-running server's host memory tracks in-flight work
+        self.append_log: "deque[Tuple[int, int]]" = deque(maxlen=65536)
+        # slot state donated into append/chunk (in-place on TPU; CPU has
+        # no donation support and would warn on every call)
         donate = () if jax.default_backend() == "cpu" else (1,)
+        self._append = jax.jit(
+            functools.partial(B.prefill_append, cfg=cfg, sampler=eng.sampler),
+            static_argnames=("fresh", "max_seq"), donate_argnums=donate)
+        self._evict = jax.jit(functools.partial(B.evict_slot, cfg=cfg))
         self._chunk = jax.jit(
             functools.partial(B.decode_chunk, cfg=cfg, sampler=eng.sampler,
                               n_steps=self.chunk),
             donate_argnums=donate)
 
-    def prefill(self, slot: int, req: Request) -> int:
-        eng = self.eng
-        s = req.prompt_len
-        s_pad = eng._bucket(s)
-        padded = eng._pad_prompts(dict(req.prompt), s, s_pad)
-        padded["prompt_lengths"] = jnp.full((1,), s, jnp.int32)
-        key = B.request_key(eng.sampler.seed, req.rid)
-        self.state, tok0 = self._prefill_admit(
-            self.params, self.state, np.int32(slot), batch=padded, key=key,
+    def prefill_width(self, remaining: int) -> int:
+        """Window width for a seat with ``remaining`` prompt tokens left:
+        bucket-rounded, capped at ``prefill_chunk_width``.  The width set
+        {bucket, 2*bucket, ..., chunk_width} bounds append compilations."""
+        return min(self.chunk_width,
+                   self.eng._round_bucket(max(int(remaining), 1)))
+
+    def prefill_step(self, seats: List[Tuple[int, Request, int]]
+                     ) -> Dict[int, Tuple[int, Optional[int]]]:
+        """Advance every prefilling seat by one window.
+
+        ``seats``: (slot, request, tokens_already_appended).  Seats are
+        grouped by (window width, freshness) -- same-bucket requests land
+        in one fused ``prefill_append`` of up to ``admit_k`` seats -- and
+        each group call appends its window to all its slots' cache rows
+        at their current lengths.  Freshness (whole-prompt first window)
+        is part of the group key so a request's numeric path -- and
+        therefore its sampled tokens -- never depends on which neighbors
+        happen to share its admission call.  Returns
+        {slot: (tokens_consumed, tok0)} where tok0 is the request's first
+        sampled token when its prompt completed this step (None while
+        chunks remain)."""
+        out: Dict[int, Tuple[int, Optional[int]]] = {}
+        groups: Dict[Tuple[int, bool],
+                     List[Tuple[int, Request, int]]] = {}
+        for slot, req, start in seats:
+            if start == 0 and req.prompt_len + req.max_new > self.max_seq:
+                # guard for callers driving the Scheduler directly
+                # (Engine.submit checks this before enqueueing); without
+                # it the append would silently clamp overflow writes onto
+                # the last cache row and decode garbage
+                raise ValueError(
+                    f"rid {req.rid}: prompt_len {req.prompt_len} + "
+                    f"max_new {req.max_new} exceeds the slot cache "
+                    f"length {self.max_seq}")
+            wdt = self.prefill_width(req.prompt_len - start)
+            fresh = start == 0 and req.prompt_len <= wdt
+            groups.setdefault((wdt, fresh), []).append((slot, req, start))
+        for (wdt, fresh), group in groups.items():
+            for i in range(0, len(group), self.admit_k):
+                out.update(self._append_group(wdt, fresh,
+                                              group[i:i + self.admit_k]))
+        return out
+
+    def _append_group(self, width: int, fresh: bool,
+                      group: List[Tuple[int, Request, int]]
+                      ) -> Dict[int, Tuple[int, Optional[int]]]:
+        """One fused append of up to ``admit_k`` same-(width, fresh)
+        seats.  ``fresh`` seats (whole-prompt first windows) take the
+        fast path: blockwise one-shot prefill into zeroed rows (no
+        gather, cheaper attention).
+
+        The call is shaped (len(group), width): a lone admission computes
+        a batch-1 window rather than padding to ``admit_k`` seats (4x the
+        prefill FLOPs for nothing under trickle arrivals).  Compilations
+        stay bounded by admit_k x |width set| x 2."""
+        eng, cfg, k = self.eng, self.eng.cfg, len(group)
+        lead = "embeds" if cfg.embeds_input else "tokens"
+        slots = np.full((k,), self.capacity, np.int32)
+        seat = np.zeros((k,), bool)
+        chunk_lens = np.zeros((k,), np.int32)
+        total = np.zeros((k,), np.int32)
+        first = np.zeros((k,), bool)
+        rids = np.zeros((k,), np.int32)
+        win = (np.zeros((k, width, cfg.d_model), np.float32)
+               if cfg.embeds_input else np.zeros((k, width), np.int32))
+        for j, (slot, req, start) in enumerate(group):
+            take = min(width, req.prompt_len - start)
+            win[j, :take] = np.asarray(req.prompt[lead])[0, start:start + take]
+            slots[j], seat[j] = slot, True
+            chunk_lens[j], total[j] = take, req.prompt_len
+            first[j] = start == 0
+            rids[j] = req.rid
+        window = {lead: jnp.asarray(win)}
+        if any("positions" in req.prompt for _, req, _ in group):
+            pos = np.zeros((k, width), np.int32)
+            for j, (slot, req, start) in enumerate(group):
+                take = min(width, req.prompt_len - start)
+                if "positions" in req.prompt:
+                    p = np.asarray(req.prompt["positions"])[0]
+                    pos[j, :take] = p[start:start + take]
+                    last = int(p[start + take - 1]) if take else start
+                else:
+                    pos[j, :take] = start + np.arange(take)
+                    last = start + max(take, 1) - 1
+                pos[j, take:] = last + 1 + np.arange(width - take)
+            window["positions"] = jnp.asarray(pos)
+        self.state, tok0, done = self._append(
+            self.params, self.state, jnp.asarray(slots), window,
+            jnp.asarray(chunk_lens), jnp.asarray(total), jnp.asarray(seat),
+            jnp.asarray(rids), jnp.asarray(first), fresh=fresh,
             max_seq=self.max_seq)
-        return int(tok0)
+        tok0, done = np.asarray(tok0), np.asarray(done)   # host sync
+        self.append_log.append((width, len(group)))
+        return {int(slots[j]): (int(chunk_lens[j]),
+                                int(tok0[j]) if done[j] else None)
+                for j in range(len(group))}
 
     def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
                   eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -158,7 +258,9 @@ class Engine:
                  prefill_bucket: int = 64, decode_bucket: int = 16,
                  capacity: int = 8, chunk: int = 8,
                  max_seq: Optional[int] = None,
-                 max_prompt_len: Optional[int] = None):
+                 max_prompt_len: Optional[int] = None,
+                 prefill_chunk_width: Optional[int] = None,
+                 admit_k: int = 4):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
@@ -166,10 +268,20 @@ class Engine:
         self.decode_bucket = max(int(decode_bucket), 1)
         # continuous-batching knobs: slot count, decode steps per host
         # sync, slot cache length (None: sized from the first submit),
-        # largest admissible prompt (None: unbounded)
+        # widest prompt window per fused prefill-append call (None: 4
+        # buckets, floored at 64), seats per fused admission call
         self.capacity = max(int(capacity), 1)
         self.chunk = max(int(chunk), 1)
         self.max_seq = max_seq
+        self.prefill_chunk_width = prefill_chunk_width
+        self.admit_k = max(int(admit_k), 1)
+        if max_prompt_len is not None:
+            warnings.warn(
+                "max_prompt_len is deprecated and no longer rejects long "
+                "prompts: any prompt with prompt_len + max_new <= max_seq "
+                "is served via chunked prefill (see docs/serving.md); cap "
+                "prompt length at submission time if you need a policy "
+                "limit", DeprecationWarning, stacklevel=2)
         self.max_prompt_len = max_prompt_len
         self._prefill = jax.jit(
             lambda params, batch, max_seq: T.prefill(
@@ -193,25 +305,27 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _round_bucket(self, n: int) -> int:
-        b = self.prefill_bucket
-        return max(-(-n // b) * b, b)
+        return round_up(n, self.prefill_bucket)
 
-    def _bucket(self, n: int) -> int:
-        """Prompt-length bucket: rounded up to the bucket multiple, capped
-        at the largest bucket when ``max_prompt_len`` is set (the fixed
-        set of shapes a bucketed server actually compiles)."""
-        padded = self._round_bucket(n)
-        if self.max_prompt_len is not None:
-            padded = min(padded, self._round_bucket(self.max_prompt_len))
-        return padded
+    def _chunk_width(self) -> int:
+        """Widest prompt window a fused ``prefill_append`` call carries,
+        rounded to a bucket multiple.  Prompts longer than this stream in
+        ``chunk_width``-token windows interleaved with decode ticks; the
+        continuous path never compiles a prefill wider than this."""
+        w = self.prefill_chunk_width
+        if w is None:
+            w = max(4 * self.prefill_bucket, 64)
+        return self._round_bucket(max(int(w), 1))
 
     def _pad_prompts(self, prompts: Dict[str, jnp.ndarray], s: int,
                      s_pad: int) -> Dict[str, jnp.ndarray]:
+        """Right-pad a prompt batch from true length ``s`` to the bucketed
+        ``s_pad`` (a shape guard, not an admission policy: callers bucket
+        first, so ``s > s_pad`` means a bug, never a long prompt)."""
         if s > s_pad:
             raise ValueError(
-                f"prompt length {s} exceeds the largest prefill bucket "
-                f"({s_pad}); refusing to silently truncate -- raise "
-                f"max_prompt_len or shorten the prompt")
+                f"prompt length {s} exceeds the padded width {s_pad}; "
+                f"refusing to silently truncate")
         if s_pad == s:
             return dict(prompts)
         pad = s_pad - s
@@ -234,7 +348,7 @@ class Engine:
         cfg = self.cfg
         b, s = (prompts["embeds"].shape[:2] if cfg.embeds_input
                 else prompts["tokens"].shape)
-        s_pad = self._bucket(s)
+        s_pad = self._round_bucket(s)
         want = max_seq or (s + max_new)
         max_seq = max(self._round_bucket(want), s_pad)
         batch = self._pad_prompts(prompts, s, s_pad)
@@ -279,10 +393,14 @@ class Engine:
             self._executors.pop(next(iter(self._executors)))
         return ex
 
-    def _normalize_request(self, prompts) -> Tuple[Dict[str, jnp.ndarray],
+    def _normalize_request(self, prompts) -> Tuple[Dict[str, np.ndarray],
                                                    int]:
-        """-> (dict with leading batch dim 1, true prompt length)."""
-        out = {k: jnp.asarray(v) for k, v in dict(prompts).items()}
+        """-> (dict with leading batch dim 1, true prompt length).
+
+        Prompts are normalized to HOST arrays: the chunked-prefill path
+        slices windows host-side and ships only the active window to the
+        device, so a queued long prompt never occupies device memory."""
+        out = {k: np.asarray(v) for k, v in dict(prompts).items()}
         lead = "embeds" if self.cfg.embeds_input else "tokens"
         want_ndim = 3 if lead == "embeds" else 2
         if out[lead].ndim == want_ndim - 1:
@@ -303,14 +421,12 @@ class Engine:
         ``prompts``: {"tokens": (s,) or (1, s)} (or "embeds"/"positions"
         rows).  The request is admitted by the scheduler when a slot frees
         up and ``arrival`` has passed (as judged by the ``now`` handed to
-        ``step``/``drain``)."""
+        ``step``/``drain``).  There is no prompt-length bucket cap: a
+        prompt of any length completes via chunked prefill
+        (``prefill_chunk_width``-token windows interleaved with decode);
+        the only hard limit is the slot cache -- ``prompt_len + max_new``
+        must fit ``max_seq``."""
         req, s = self._normalize_request(prompts)
-        if self._bucket(s) < s:
-            # reject at submit rather than at admission, where the padded
-            # shape check (_pad_prompts) would raise mid-drain
-            raise ValueError(
-                f"prompt length {s} exceeds the largest prefill bucket "
-                f"({self._bucket(s)}); refusing to silently truncate")
         sched = self._scheduler(prompt_len=s, max_new=max_new)
         ms = sched.ex.max_seq
         if s + max_new > ms:
@@ -368,8 +484,8 @@ class Engine:
         # use power-of-two buckets to cap discarded work at <2x.
         db = self.decode_bucket
         if max_new >= db:
-            return -(-max_new // db) * db
-        return 1 if max_new <= 1 else 1 << (max_new - 1).bit_length()
+            return round_up(max_new, db)
+        return next_pow2(max_new)
 
     def generate(self, prompts: Dict[str, jnp.ndarray], max_new: int,
                  max_seq: Optional[int] = None,
@@ -403,14 +519,16 @@ class Engine:
         (capacity = batch, so admission is immediate); greedy output is
         token-for-token identical to mode="batch"."""
         cfg = self.cfg
-        prompts = dict(prompts)
+        # host copies once: the executor slices a window per prefill call,
+        # which must not re-fetch device-resident prompts every window
+        prompts = {k: np.asarray(v) for k, v in dict(prompts).items()}
         b, s = (prompts["embeds"].shape[:2] if cfg.embeds_input
                 else prompts["tokens"].shape)
         # mirror the batch path's cache sizing exactly (decode-bucketed
         # steps) so both modes compile and mask identical shapes
         n_steps = self._decode_steps(max_new)
         want = max_seq or (s + n_steps)
-        ms = max(self._round_bucket(want), self._bucket(s))
+        ms = max(self._round_bucket(want), self._round_bucket(s))
         ex = self._executor(capacity=b, max_seq=ms)
         sched = Scheduler(ex)
         rids = []

@@ -2,21 +2,32 @@
 
 Request lifecycle::
 
-    submit -> queue (FIFO) -> admission (free slot + arrival due; prompt
-    padded to its length bucket) -> interleaved chunked decode -> done ->
+    submit -> queue (FIFO) -> admission into a free slot (arrival due) ->
+    PREFILLING (prompt appended to the slot's cache window-by-window;
+    same-width seats fused k-way per tick; first token sampled when the
+    prompt completes) -> RUNNING (interleaved chunked decode) -> done ->
     slot recycled for the next queued request, mid-decode
 
 The scheduler is deliberately model-free: it drives an ``Executor`` --
 either the engine-backed device executor (serving.engine) or a scripted
 fake (tests/test_scheduler.py) -- through three operations::
 
-    prefill(slot, request)                 -> first emitted token
+    prefill_step(seats)                    -> {slot: (consumed, tok0|None)}
     run_chunk(active, remaining, eos_ids)  -> (tokens, emitted) [steps x B]
     release(slot)                          -> evict a finished row
 
+``prefill_step`` takes every seat currently prefilling, as (slot,
+request, tokens_already_appended) triples, advances each by one window
+(the engine executor fuses up to ``admit_k`` same-width seats per jitted
+call), and reports per-slot progress -- ``tok0`` is the request's first
+sampled token once its whole prompt is in the cache.  Prefill windows and
+decode chunks interleave tick-by-tick, so a long prompt streams in while
+resident slots keep decoding.
+
 This keeps the invariant surface (no dropped / duplicated / reordered
-tokens, occupancy <= capacity, FIFO admission, every slot freed at drain)
-property-testable without JAX in the loop.
+tokens, occupancy <= capacity, FIFO admission, prefill progress every
+tick, every slot freed at drain) property-testable without JAX in the
+loop.
 
 Token accounting matches the one-shot engine paths exactly: the first
 token of a request is sampled from its prefill logits (it counts toward
@@ -33,7 +44,8 @@ from typing import Any, Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
 
-QUEUED, RUNNING, DONE = "queued", "running", "done"
+QUEUED, PREFILLING, RUNNING, DONE = ("queued", "prefilling", "running",
+                                    "done")
 
 
 @dataclasses.dataclass
@@ -46,6 +58,7 @@ class Request:
     arrival: float = 0.0
     status: str = QUEUED
     slot: Optional[int] = None
+    prefilled: int = 0         # prompt tokens already appended to the cache
     tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -69,7 +82,8 @@ class Executor(Protocol):
     capacity: int
     chunk: int
 
-    def prefill(self, slot: int, req: Request) -> int: ...
+    def prefill_step(self, seats: List[Tuple[int, Request, int]]
+                     ) -> Dict[int, Tuple[int, Optional[int]]]: ...
 
     def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
                   eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]: ...
@@ -118,18 +132,26 @@ class Scheduler:
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    @property
+    def n_running(self) -> int:
+        return sum(1 for rid in self.slots if rid is not None
+                   and self.requests[rid].status == RUNNING)
+
     def next_arrival(self) -> Optional[float]:
         return (self.requests[self.queue[0]].arrival if self.queue
                 else None)
 
     def tick(self, now: float = float("inf")) -> List[int]:
-        """One scheduler step: admit due requests into free slots, then run
-        one decode chunk over the active slots.  Returns rids finished this
-        tick.  Slots freed by the chunk are refilled on the *next* tick
-        (mid-decode recycling)."""
+        """One scheduler step: admit due requests into free slots, advance
+        every prefilling slot by one prompt window, then run one decode
+        chunk over the running slots.  Returns rids finished this tick.
+        Slots freed by the chunk are refilled on the *next* tick
+        (mid-decode recycling); a request whose prompt completes in the
+        admission/prefill phase decodes in the SAME tick's chunk."""
         finished: List[int] = []
-        self._admit(now, finished)
-        if self.n_active:
+        self._admit(now)
+        self._prefill_tick(finished)
+        if self.n_running:
             self._decode_chunk(finished)
         return finished
 
@@ -158,11 +180,13 @@ class Scheduler:
             req.slot = None
         finished.append(req.rid)
 
-    def _admit(self, now: float, finished: List[int]) -> None:
-        """FIFO, head-of-line admission: a request is admitted only when it
-        has arrived AND a slot is free; later arrivals never jump the
+    def _admit(self, now: float) -> None:
+        """FIFO, head-of-line admission: a request claims a slot only when
+        it has arrived AND a slot is free; later arrivals never jump the
         queue, so per-request token order and cross-request admission
-        order are both preserved."""
+        order are both preserved.  Admission only assigns the slot
+        (PREFILLING); the prompt streams in via ``_prefill_tick`` --
+        same-width heads admitted together land in one fused append."""
         while self.queue:
             req = self.requests[self.queue[0]]
             if req.arrival > now:
@@ -172,9 +196,41 @@ class Scheduler:
             if slot is None:
                 break
             self.queue.popleft()
-            req.slot, req.status = slot, RUNNING
+            req.slot, req.status, req.prefilled = slot, PREFILLING, 0
             self.slots[slot] = req.rid
-            tok0 = self.ex.prefill(slot, req)
+
+    def _prefill_tick(self, finished: List[int]) -> None:
+        """Advance every PREFILLING slot by one prompt window.  A request
+        whose prompt completes samples its first token (it counts toward
+        ``max_new``, exactly like the one-shot paths) and turns RUNNING --
+        or finishes outright on max_new == 1 / instant EOS."""
+        seats = [(req.slot, req, req.prefilled)
+                 for rid in self.slots if rid is not None
+                 for req in (self.requests[rid],)
+                 if req.status == PREFILLING]
+        if not seats:
+            return
+        progress = self.ex.prefill_step(seats)
+        for slot, (consumed, tok0) in progress.items():
+            rid = self.slots[slot]
+            if rid is None:
+                raise RuntimeError(
+                    f"executor prefilled empty slot {int(slot)}")
+            req = self.requests[rid]
+            if consumed <= 0 and tok0 is None:
+                # consumed == 0 is legitimate only for the empty-prompt
+                # degenerate case, which must complete (tok0) immediately
+                raise RuntimeError(
+                    f"prefill_step made no progress on slot {int(slot)} "
+                    f"(rid {rid})")
+            req.prefilled += int(consumed)
+            if tok0 is None:
+                continue
+            if req.prefilled < req.prompt_len:
+                raise RuntimeError(
+                    f"rid {rid} sampled tok0 with only {req.prefilled}/"
+                    f"{req.prompt_len} prompt tokens appended")
+            req.status = RUNNING
             req.tokens.append(int(tok0))
             if req._should_finish():           # max_new == 1 or instant EOS
                 self._finish(req, finished)
@@ -188,6 +244,8 @@ class Scheduler:
             if rid is None:
                 continue
             req = self.requests[rid]
+            if req.status != RUNNING:          # PREFILLING slots stay parked
+                continue
             active[s] = True
             remaining[s] = req.remaining
             eos_ids[s] = req.eos_id

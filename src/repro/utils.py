@@ -1,0 +1,24 @@
+"""Small shared numeric helpers.
+
+Bucket/tile rounding shows up in every serving and kernel layer (prompt
+length buckets, decode-scan steps, Pallas block sizing).  One definition
+here so the shapes every jit target compiles against come from the same
+arithmetic -- a bucket disagreement between the engine and a kernel is a
+silent recompile storm, not an error.
+"""
+
+from __future__ import annotations
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n <= 1 -> 1)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest positive multiple of ``multiple`` >= n (never 0: n <= 0
+    rounds to one full multiple, matching bucket semantics where the empty
+    prompt still occupies the smallest bucket)."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    return max(-(-n // multiple) * multiple, multiple)

@@ -1,0 +1,280 @@
+"""Chunked incremental prefill: the cache-append primitive
+(T.prefill_chunk), the fused k-way admission path (B.prefill_append +
+deploy cache row helpers), and the shared bucket-rounding utility.
+
+Covers the contracts docs/serving.md promises:
+  - streaming a prompt window-by-window into a fresh cache reproduces the
+    one-shot ``T.prefill`` (logits + cache + lengths) across chunk widths,
+    position offsets, and every cache family (linear KV, ring local KV,
+    SSM, RG-LRU);
+  - one fused ``prefill_append`` call admits several same-bucket requests;
+  - interleaved prefill windows never write another slot's cache rows
+    (hypothesis(-stub) sweep over random seat subsets and widths).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs as configs
+from repro.core import deploy
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving import batch as B
+from repro.serving.engine import Engine, SamplerConfig
+from repro.utils import next_pow2, round_up
+
+
+def small_model(arch="granite-8b", seed=0):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def granite():
+    return _granite_cached()
+
+
+_GRANITE = []
+
+
+def _granite_cached():
+    """Module cache usable from @given tests (the hypothesis stub cannot
+    mix drawn arguments with pytest fixtures)."""
+    if not _GRANITE:
+        _GRANITE.append(small_model())
+    return _GRANITE[0]
+
+
+def make_prompt(cfg, rng, b, s):
+    if cfg.embeds_input:
+        return {"embeds": jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)).astype(np.float32))}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, s)).astype(np.int32))}
+
+
+def stream_chunks(cfg, params, batch, s, widths, max_seq, active=None):
+    """Feed ``batch`` through prefill_chunk in windows of ``widths``."""
+    b = (batch["embeds"] if cfg.embeds_input else batch["tokens"]).shape[0]
+    cache = T.init_cache(cfg, b, max_seq)
+    lengths = jnp.zeros((b,), jnp.int32)
+    logits, start = None, 0
+    for wdt in widths:
+        take = min(s - start, wdt)
+        win = {}
+        for kk, vv in batch.items():
+            arr = np.zeros((b, wdt) + vv.shape[2:], np.asarray(vv).dtype)
+            arr[:, :take] = np.asarray(vv)[:, start:start + take]
+            win[kk] = jnp.asarray(arr)
+        win["chunk_lengths"] = jnp.full((b,), take, jnp.int32)
+        logits, cache, lengths = T.prefill_chunk(params, cfg, win, cache,
+                                                 lengths, active=active)
+        start += take
+    assert start == s, "widths must cover the prompt"
+    return logits, cache, lengths
+
+
+class TestChunkedPrefillParity:
+    """Golden parity: chunked prefill == one-shot prefill, >=2 chunk
+    widths (uneven last window) and several position offsets, across the
+    cache families."""
+
+    @pytest.mark.parametrize("arch", ["granite-8b",     # linear KV
+                                      "gemma2-2b",      # ring local KV
+                                      "falcon-mamba-7b",  # SSM state
+                                      "recurrentgemma-2b"])  # RG-LRU + ring
+    @pytest.mark.parametrize("widths", [(4, 4, 4, 4), (8, 8)])
+    def test_matches_oneshot_prefill(self, arch, widths):
+        cfg, params = small_model(arch)
+        rng = np.random.default_rng(7)
+        b, s, max_seq = 2, 13, 32
+        batch = make_prompt(cfg, rng, b, s)
+        lg_ref, cache_ref, len_ref = T.prefill(params, cfg, dict(batch),
+                                               max_seq=max_seq)
+        lg, cache, lengths = stream_chunks(cfg, params, batch, s,
+                                           widths, max_seq)
+        np.testing.assert_array_equal(np.asarray(lengths),
+                                      np.asarray(len_ref))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   rtol=2e-4, atol=2e-5)
+        for a, r in zip(jax.tree.leaves(cache), jax.tree.leaves(cache_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                       rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("offset", [3, 9])
+    def test_position_offset_appends_after_existing_prompt(self, granite,
+                                                           offset):
+        """Appending the prompt tail at offset ``offset`` into a cache
+        already holding the prompt head == one-shot over the whole
+        prompt: the causal mask offset and cache writes line up."""
+        cfg, params = granite
+        rng = np.random.default_rng(offset)
+        b, s, max_seq = 2, 13, 32
+        batch = make_prompt(cfg, rng, b, s)
+        lg_ref, cache_ref, len_ref = T.prefill(params, cfg, dict(batch),
+                                               max_seq=max_seq)
+        lg, cache, lengths = stream_chunks(cfg, params, batch, s,
+                                           (offset, s - offset), max_seq)
+        np.testing.assert_array_equal(np.asarray(lengths),
+                                      np.asarray(len_ref))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_engine_long_prompt_matches_batch_mode(self, granite):
+        """Engine-level golden parity at two chunk widths: a prompt longer
+        than every window streams through the scheduler and emits exactly
+        the one-shot padded-batch tokens (greedy)."""
+        cfg, params = granite
+        rng = np.random.default_rng(3)
+        prompts = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (2, 21)).astype(np.int32))}
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        want = oracle.generate(dict(prompts), max_new=6, mode="batch")
+        for width in (8, 16):
+            eng = Engine(params, cfg, prefill_bucket=8,
+                         prefill_chunk_width=width)
+            got = eng.generate(dict(prompts), max_new=6)
+            np.testing.assert_array_equal(got, want)
+
+
+class TestKWayAdmission:
+    def test_same_bucket_requests_share_one_fused_call(self, granite):
+        """>= 2 queued same-bucket requests prefill in ONE prefill_append
+        call, and each emits exactly its fresh single-request tokens."""
+        cfg, params = granite
+        rng = np.random.default_rng(5)
+        reqs = [rng.integers(0, cfg.vocab, (1, 6)) for _ in range(3)]
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=4, admit_k=4,
+                     max_seq=32)
+        rids = [eng.submit({"tokens": p}, max_new=5) for p in reqs]
+        res = eng.drain()
+        log = eng._sched.ex.append_log
+        assert log[0] == (8, 3), \
+            f"expected one fused 3-seat admission, got {log}"
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        for rid, p in zip(rids, reqs):
+            fresh = oracle.generate({"tokens": jnp.asarray(p)}, max_new=5,
+                                    mode="batch")[0]
+            np.testing.assert_array_equal(res[rid], fresh)
+
+    def test_admit_k_splits_oversized_groups(self, granite):
+        """A same-width group larger than admit_k splits across fused
+        calls instead of recompiling a wider seat shape."""
+        cfg, params = granite
+        rng = np.random.default_rng(6)
+        reqs = [rng.integers(0, cfg.vocab, (1, 5)) for _ in range(3)]
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=4, admit_k=2,
+                     max_seq=32)
+        rids = [eng.submit({"tokens": p}, max_new=4) for p in reqs]
+        res = eng.drain()
+        assert list(eng._sched.ex.append_log)[:2] == [(8, 2), (8, 1)]
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        for rid, p in zip(rids, reqs):
+            fresh = oracle.generate({"tokens": jnp.asarray(p)}, max_new=4,
+                                    mode="batch")[0]
+            np.testing.assert_array_equal(res[rid], fresh)
+
+
+class TestSlotIsolation:
+    """prefill_append must never touch a row it was not handed: the
+    bystander invariant behind interleaving prefill with decode."""
+
+    @given(st.integers(0, 10 ** 6), st.integers(1, 2), st.integers(1, 2))
+    @settings(max_examples=8, deadline=None)
+    def test_append_never_writes_bystander_rows(self, seed, n_seats,
+                                                n_windows):
+        cfg, params = _granite_cached()
+        rnd = np.random.default_rng(seed)
+        cap, max_seq, width = 4, 16, 4
+        state = B.init_slots(cfg, cap, max_seq)
+        # occupy every row with distinct junk so "unchanged" is meaningful
+        state = state._replace(
+            tok=jnp.arange(cap, dtype=jnp.int32),
+            lengths=jnp.full((cap,), 3, jnp.int32),
+            keys=jnp.arange(2 * cap, dtype=jnp.uint32).reshape(cap, 2),
+            cache=jax.tree.map(
+                lambda l: jnp.asarray(
+                    rnd.normal(size=l.shape).astype(np.asarray(l).dtype))
+                if l.dtype != jnp.uint32 else l, state.cache))
+        seats = rnd.choice(cap, size=n_seats, replace=False)
+        others = np.setdiff1d(np.arange(cap), seats)
+        k = 2                                     # fixed seat count, padded
+        slots = np.full((k,), cap, np.int32)
+        slots[:n_seats] = seats
+        seat = np.zeros((k,), bool)
+        seat[:n_seats] = True
+        before = jax.device_get(deploy.cache_rows_gather(
+            cfg, state.cache, jnp.asarray(others)))
+        for w in range(n_windows):
+            window = {"tokens": jnp.asarray(
+                rnd.integers(0, cfg.vocab, (k, width)).astype(np.int32))}
+            state, _, _ = B.prefill_append(
+                params, state, jnp.asarray(slots), window,
+                jnp.full((k,), width, jnp.int32),          # chunk_lens
+                jnp.full((k,), n_windows * width + 1, jnp.int32),  # total
+                jnp.asarray(seat),
+                jnp.arange(k, dtype=jnp.int32),        # rids
+                jnp.asarray([w == 0] * k),
+                cfg=cfg, sampler=SamplerConfig())
+        after = jax.device_get(deploy.cache_rows_gather(
+            cfg, state.cache, jnp.asarray(others)))
+        for bb, aa in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(bb, aa)
+        # host-visible slot state of bystanders is untouched too
+        st_ = jax.device_get(state)
+        np.testing.assert_array_equal(st_.tok[others], others)
+        np.testing.assert_array_equal(st_.lengths[others], 3)
+
+    def test_rows_gather_scatter_roundtrip(self, granite):
+        """cache_rows_scatter(cache_rows_gather(...)) is the identity, and
+        masked/out-of-range seats drop their writes."""
+        cfg, params = granite
+        rnd = np.random.default_rng(0)
+        cache = jax.tree.map(
+            lambda l: jnp.asarray(rnd.normal(size=l.shape)
+                                  .astype(np.asarray(l).dtype)),
+            T.init_cache(cfg, 3, 8))
+        slots = jnp.asarray([2, 0], jnp.int32)
+        sub = deploy.cache_rows_gather(cfg, cache, slots)
+        back = deploy.cache_rows_scatter(cfg, cache, sub, slots)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # masked + OOB seats: nothing changes even with garbage payloads
+        junk = jax.tree.map(lambda l: l + 1 if l.dtype != jnp.uint32
+                            else l, sub)
+        kept = deploy.cache_rows_scatter(
+            cfg, cache, junk, jnp.asarray([1, 3], jnp.int32),
+            mask=jnp.asarray([False, True]))
+        for a, b in zip(jax.tree.leaves(kept), jax.tree.leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestSharedRounding:
+    def test_next_pow2(self):
+        assert [next_pow2(n) for n in (0, 1, 2, 3, 8, 9, 128, 129)] \
+            == [1, 1, 2, 4, 8, 16, 128, 256]
+
+    def test_round_up(self):
+        assert round_up(0, 8) == 8
+        assert round_up(1, 8) == 8
+        assert round_up(8, 8) == 8
+        assert round_up(9, 8) == 16
+        assert round_up(13, 5) == 15
+        with pytest.raises(ValueError):
+            round_up(4, 0)
+
+    def test_engine_and_kernels_share_the_definition(self, granite):
+        from repro.kernels import ops
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=12)
+        assert eng._round_bucket(13) == round_up(13, 12) == 24
+        assert eng._decode_steps(5) == next_pow2(5) == 8
+        assert ops._next_pow2 is next_pow2

@@ -36,25 +36,45 @@ class ScriptedExecutor:
     """Fake device executor honoring the scheduler's contract: a slot
     emits one scripted token per step while alive; it dies after its
     remaining budget or an EOS match (EOS emitted).  Tracks occupancy so
-    tests can assert capacity is never exceeded."""
+    tests can assert capacity is never exceeded.
 
-    def __init__(self, capacity, chunk, streams):
+    ``prefill_width`` bounds the prompt tokens consumed per prefill_step
+    per seat, so prompts longer than it stream across multiple ticks (the
+    chunked-prefill contract); the default swallows any prompt in one
+    step (the classic one-shot admission)."""
+
+    def __init__(self, capacity, chunk, streams, prefill_width=10 ** 9):
         self.capacity, self.chunk = capacity, chunk
         self.streams = streams                  # rid -> list of tokens
         self.slots = [None] * capacity          # [rid, cursor] or None
-        self.prefill_order = []
+        self.prefill_width = prefill_width
+        self.prefill_order = []                 # rids, at first chunk
+        self.prefill_calls = []                 # rids per prefill_step
         self.max_occupied = 0
 
     def _note_occupancy(self):
         n = sum(s is not None for s in self.slots)
         self.max_occupied = max(self.max_occupied, n)
 
-    def prefill(self, slot, req):
-        assert self.slots[slot] is None, "admission into an occupied slot"
-        self.slots[slot] = [req.rid, 1]
-        self.prefill_order.append(req.rid)
-        self._note_occupancy()
-        return self.streams[req.rid][0]
+    def prefill_step(self, seats):
+        self.prefill_calls.append([req.rid for _, req, _ in seats])
+        out = {}
+        for slot, req, start in seats:
+            if start == 0:
+                assert self.slots[slot] is None, \
+                    "admission into an occupied slot"
+                self.slots[slot] = [req.rid, 0]
+                self.prefill_order.append(req.rid)
+                self._note_occupancy()
+            assert self.slots[slot][0] == req.rid, "seat/slot mismatch"
+            assert self.slots[slot][1] == 0, "prefill after decode began"
+            take = min(self.prefill_width, req.prompt_len - start)
+            tok0 = None
+            if start + take >= req.prompt_len:  # prompt complete: emit tok0
+                self.slots[slot][1] = 1
+                tok0 = self.streams[req.rid][0]
+            out[slot] = (take, tok0)
+        return out
 
     def run_chunk(self, active, remaining, eos_ids):
         toks = np.zeros((self.chunk, self.capacity), np.int32)
@@ -90,12 +110,15 @@ def expected_tokens(toks, max_new, eos_id):
 
 class TestSchedulerInvariants:
     @given(st.integers(1, 4), st.integers(1, 12), st.integers(1, 5),
-           st.integers(0, 10 ** 6))
+           st.integers(1, 5), st.integers(0, 10 ** 6))
     @settings(max_examples=20, deadline=None)
-    def test_random_traces(self, capacity, n_requests, chunk, seed):
-        """Random arrival/length/EOS traces: every request completes with
-        exactly its scripted prefix -- nothing dropped, duplicated, or
-        reordered -- and occupancy never exceeds capacity."""
+    def test_random_traces(self, capacity, n_requests, chunk,
+                           prefill_width, seed):
+        """Random arrival/length/EOS traces with chunk-streamed prefill
+        (prompts up to several prefill widths long): every request
+        completes with exactly its scripted prefix -- nothing dropped,
+        duplicated, or reordered -- and occupancy never exceeds
+        capacity."""
         rnd = random.Random(seed)
         streams, plans = {}, []
         for rid in range(n_requests):
@@ -106,11 +129,13 @@ class TestSchedulerInvariants:
                 toks[eos_at] = EOS
             streams[rid] = toks
             plans.append((max_new, eos_at))
-        ex = ScriptedExecutor(capacity, chunk, streams)
+        ex = ScriptedExecutor(capacity, chunk, streams,
+                              prefill_width=prefill_width)
         sched = Scheduler(ex)
         arrivals = sorted(rnd.uniform(0, 3) for _ in range(n_requests))
         for rid, (max_new, _) in enumerate(plans):
-            got = sched.submit({"tokens": None}, prompt_len=4,
+            got = sched.submit({"tokens": None},
+                               prompt_len=rnd.randint(1, 12),
                                max_new=max_new, eos_id=EOS,
                                arrival=arrivals[rid])
             assert got == rid
@@ -123,6 +148,10 @@ class TestSchedulerInvariants:
         assert all(n <= capacity for n in sched.occupancy_trace)
         # FIFO admission: prefills happen in submit order, never reordered
         assert ex.prefill_order == sorted(ex.prefill_order)
+        # every prompt was streamed in fully before its first decode token
+        assert all(sched.requests[r].prefilled
+                   == sched.requests[r].prompt_len
+                   for r in range(n_requests))
         for rid, (max_new, _) in enumerate(plans):
             want = expected_tokens(streams[rid], max_new, EOS)
             assert sched.requests[rid].tokens == want, \
@@ -151,6 +180,28 @@ class TestSchedulerInvariants:
                 assert arrivals[rid] <= now
             now += 0.5
         assert len(ex.prefill_order) == n
+
+    def test_prefill_overlaps_decode(self):
+        """A long prompt streams in window-by-window while a resident slot
+        keeps decoding: admission no longer serializes ahead of decode."""
+        streams = {0: stream(0, 12), 1: stream(1, 3)}
+        ex = ScriptedExecutor(capacity=2, chunk=2, streams=streams,
+                              prefill_width=2)
+        sched = Scheduler(ex)
+        sched.submit(None, prompt_len=1, max_new=12)
+        sched.submit(None, prompt_len=6, max_new=3)   # 3 windows of 2
+        sched.tick()
+        assert sched.requests[0].tokens, "short request should be decoding"
+        assert sched.requests[1].status == "prefilling"
+        assert sched.requests[1].prefilled == 2
+        n0 = len(sched.requests[0].tokens)
+        sched.tick()
+        # decode progressed in the same ticks that streamed the prompt
+        assert len(sched.requests[0].tokens) > n0
+        assert sched.requests[1].prefilled == 4
+        sched.drain()
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
 
     def test_mid_decode_recycling(self):
         """A slot freed mid-trace is recycled while other slots keep
@@ -263,23 +314,51 @@ class TestEngineRecycling:
                                       np.asarray(k_old[:, 1]))
 
 
-class TestPadPromptsRejects:
-    def test_reject_prompt_longer_than_largest_bucket(self, granite):
-        """Regression: prompts longer than the largest bucket raise
-        instead of silently truncating."""
+class TestPromptAdmissionPolicy:
+    def test_long_prompt_admitted_via_chunking(self, granite):
+        """Regression (was: rejected at submit): a prompt longer than the
+        widest prefill window is admitted and completes via chunked
+        prefill, matching the one-shot oracle."""
         cfg, params = granite
-        eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16)
-        long_prompt = {"tokens": jnp.zeros((1, 20), jnp.int32)}
-        with pytest.raises(ValueError, match="largest prefill bucket"):
-            eng.generate(long_prompt, max_new=2, mode="batch")
-        with pytest.raises(ValueError, match="largest prefill bucket"):
-            eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=2)
-        # within the largest bucket still serves
-        ok = eng.generate({"tokens": jnp.zeros((1, 16), jnp.int32)},
-                          max_new=2, mode="batch")
-        assert ok.shape == (1, 2)
+        rng = np.random.default_rng(21)
+        p = rng.integers(0, cfg.vocab, (1, 20))
+        eng = Engine(params, cfg, prefill_bucket=8, prefill_chunk_width=8,
+                     capacity=1, max_seq=32)
+        rid = eng.submit({"tokens": p}, max_new=4)
+        res = eng.drain()
+        # the prompt streamed across ceil(20/8) = 3 append windows
+        widths = [w for w, _ in eng._sched.ex.append_log]
+        assert widths == [8, 8, 8]
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        np.testing.assert_array_equal(
+            res[rid],
+            oracle.generate({"tokens": jnp.asarray(p)}, max_new=4,
+                            mode="batch")[0])
+
+    def test_max_prompt_len_deprecated_and_inert(self, granite):
+        """max_prompt_len warns and no longer rejects: the over-"bucket"
+        prompt serves through the chunked path."""
+        cfg, params = granite
+        with pytest.warns(DeprecationWarning, match="chunked prefill"):
+            eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16,
+                         capacity=1, max_seq=32)
+        rid = eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=2)
+        res = eng.drain()
+        assert res[rid].shape == (2,)
+
+    def test_empty_prompt_completes(self, granite):
+        """Degenerate prompt_len == 0: the admission window consumes zero
+        tokens but must still complete (tok0 from the padded window's
+        logits), not trip the no-progress guard."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16)
+        rid = eng.submit({"tokens": jnp.zeros((0,), jnp.int32)}, max_new=2)
+        res = eng.drain()
+        assert res[rid].shape == (2,)
 
     def test_pad_prompts_raises_on_truncation(self, granite):
+        """_pad_prompts stays a shape guard: padding below the true length
+        raises rather than silently truncating."""
         cfg, params = granite
         eng = Engine(params, cfg, prefill_bucket=8)
         with pytest.raises(ValueError, match="refusing to silently"):
@@ -287,8 +366,23 @@ class TestPadPromptsRejects:
                              s=12, s_pad=8)
 
     def test_submit_rejects_overflowing_max_seq(self, granite):
+        """The one remaining hard limit: prompt_len + max_new must fit the
+        slot cache."""
         cfg, params = granite
         eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16)
         eng.submit({"tokens": jnp.zeros((4,), jnp.int32)}, max_new=4)
         with pytest.raises(ValueError, match="cache length"):
             eng.submit({"tokens": jnp.zeros((14,), jnp.int32)}, max_new=8)
+
+    def test_executor_guards_direct_scheduler_overflow(self, granite):
+        """Callers driving the Scheduler directly (bypassing Engine.submit,
+        as the benchmark does) still hit a hard error instead of silently
+        clamping overflow writes onto the last cache row."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8)
+        ex = eng._executor(capacity=1, max_seq=16)
+        sched = Scheduler(ex)
+        sched.submit({"tokens": np.zeros((1, 14), np.int32)},
+                     prompt_len=14, max_new=8)
+        with pytest.raises(ValueError, match="cache length"):
+            sched.drain()
