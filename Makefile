@@ -4,7 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 # serving tier: scheduler/engine/packed-path tests (CI runs these as their
 # own matrix entry with a 120s per-test ceiling)
 SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
-                 tests/test_serving_e2e.py tests/test_chunked_prefill.py
+                 tests/test_serving_e2e.py tests/test_chunked_prefill.py \
+                 tests/test_paged_cache.py
 
 .PHONY: test test-unit test-serving bench-smoke bench-smoke-continuous \
         bench-serving
@@ -23,9 +24,9 @@ test-serving:    ## serving tier: timings reported, >120s per test fails
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke
 
-bench-smoke-continuous:  ## continuous + prefill-heavy traces, tiny shapes
+bench-smoke-continuous:  ## continuous + prefill-heavy + paged, tiny shapes
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
-	  --prefill-heavy
+	  --prefill-heavy --paged
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

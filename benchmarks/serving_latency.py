@@ -28,6 +28,18 @@ the traffic shape the chunked-prefill refactor exists for: without it,
 one monolithic prefill per admission stalls the resident decode batch
 for the whole prompt.
 
+``--paged`` replays a LONG-CONTEXT trace (prompts up to near ``max_seq``,
+mixed with short ones) through the contiguous slot layout and through the
+block-paged KV cache at EQUAL cache memory but 2x the slot capacity
+(admission reserves pages, not whole ``max_seq`` rows) -- recorded as the
+``continuous_paged`` section.  The paged run completing the trace at
+double the seat count is the acceptance headline for gather-free
+long-context slots.
+
+All traces derive from ``--seed`` (default 0), which is recorded in the
+JSON -- so cross-PR deltas in BENCH_serving.json compare identical
+workloads instead of mixing trace noise with real regressions.
+
 Writes BENCH_serving.json at the repo root so the perf trajectory tracks
 both headlines (packed decode speedup_vs_dequant, continuous
 speedup_vs_oneshot).
@@ -113,7 +125,10 @@ def _time_generate(eng: Engine, prompts, max_new: int, legacy: bool,
 
 
 def run_paths(cfg, params, q, args) -> dict:
-    rng = np.random.default_rng(0)
+    # seed + fixed per-section offset: --seed 0 (the default) reproduces
+    # the historical traces exactly, so BENCH_serving.json stays
+    # comparable across the PRs that predate seeding
+    rng = np.random.default_rng(args.seed + 0)
     prompts = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt))
         .astype(np.int32))}
@@ -238,7 +253,9 @@ def _measure_trace(eng: Engine, ex, trace, repeats: int, label: str) -> dict:
 
 
 def run_continuous(cfg, q, args) -> dict:
-    rng = np.random.default_rng(7)
+    # trace derived from --seed (+ section offset; recorded in the report
+    # so cross-PR deltas replay the identical workload)
+    rng = np.random.default_rng(args.seed + 7)
     if args.smoke:
         n, capacity, chunk = 6, 3, 4
         prompt_lens, max_new_range, mean_gap = (8, 20), (4, 12), 0.02
@@ -259,6 +276,7 @@ def run_continuous(cfg, q, args) -> dict:
           f"prompts {prompt_lens}, max_new {max_new_range}, "
           f"mean gap {mean_gap * 1e3:.0f}ms")
     report = {
+        "seed": args.seed,
         "n_requests": n,
         "capacity": capacity,
         "chunk": chunk,
@@ -275,7 +293,7 @@ def run_prefill_heavy(cfg, q, args) -> dict:
     """Long-prompt trace: every prompt spans several prefill windows, so
     admission exercises the chunked PREFILLING phase while resident slots
     decode.  Same measurement protocol as ``run_continuous``."""
-    rng = np.random.default_rng(13)
+    rng = np.random.default_rng(args.seed + 13)
     if args.smoke:
         n, capacity, chunk = 4, 2, 4
         prompt_lens, max_new_range, mean_gap = (40, 72), (4, 8), 0.02
@@ -298,6 +316,7 @@ def run_prefill_heavy(cfg, q, args) -> dict:
           f"(window {ex.chunk_width}), max_new {max_new_range}, "
           f"mean gap {mean_gap * 1e3:.0f}ms")
     report = {
+        "seed": args.seed,
         "n_requests": n,
         "capacity": capacity,
         "chunk": chunk,
@@ -313,6 +332,81 @@ def run_prefill_heavy(cfg, q, args) -> dict:
     return report
 
 
+def run_paged(cfg, q, args) -> dict:
+    """Long-context trace: prompts up to near ``max_seq`` mixed with
+    short ones, replayed through (a) the contiguous slot layout and (b)
+    the block-paged cache at EQUAL KV memory but 2x the slot capacity --
+    paged admission reserves ceil((prompt+max_new)/page_size) frames
+    from the shared pool instead of a whole ``max_seq`` row, so the
+    extra seats are real concurrency, not extra memory.  Completing the
+    trace at the doubled seat count is the paged acceptance headline."""
+    rng = np.random.default_rng(args.seed + 29)
+    if args.smoke:
+        n, cap_c, chunk, page_size = 6, 2, 4, 16
+        max_seq, prompt_lens, max_new_range = 96, (80, 16, 24, 40), (4, 8)
+        prefill_bucket, chunk_width, mean_gap = 16, 32, 0.01
+    else:
+        n, cap_c, chunk, page_size = 12, 3, 8, 16
+        max_seq, prompt_lens, max_new_range = 192, (160, 32, 48, 64), (8, 16)
+        prefill_bucket, chunk_width, mean_gap = 32, 64, 0.03
+    cap_p = 2 * cap_c
+    pool = cap_c * (max_seq // page_size)      # == contiguous KV memory
+    trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
+    for r in trace:                            # cap at the slot cache
+        r["max_new"] = min(r["max_new"],
+                           max_seq - r["prompt"].shape[1])
+
+    packed = deploy.pack_params(q)
+    kw = dict(prefill_bucket=prefill_bucket, decode_bucket=16, chunk=chunk,
+              prefill_chunk_width=chunk_width)
+    eng_c = Engine(packed, cfg, capacity=cap_c, **kw)
+    ex_c = eng_c._executor(capacity=cap_c, max_seq=max_seq)
+    eng_p = Engine(packed, cfg, capacity=cap_p, paged=True,
+                   page_size=page_size, cache_pages=pool, **kw)
+    ex_p = eng_p._executor(capacity=cap_p, max_seq=max_seq)
+
+    print(f"[paged] {n} long-context requests, max_seq {max_seq}, "
+          f"prompts {prompt_lens}; contiguous {cap_c} slots vs paged "
+          f"{cap_p} slots over {pool} x {page_size}-token pages "
+          f"(equal cache memory)")
+    total = sum(r["max_new"] for r in trace)
+    _continuous_once(ex_c, trace, realtime=False)      # warm compiles
+    _continuous_once(ex_p, trace, realtime=False)
+    cont = [_continuous_once(ex_c, trace, realtime=True)
+            for _ in range(args.repeats)]
+    c_wall, c_tokens, c_occ = min(cont, key=lambda t: t[0])
+    pag = [_continuous_once(ex_p, trace, realtime=True)
+           for _ in range(args.repeats)]
+    p_wall, p_tokens, p_occ = min(pag, key=lambda t: t[0])
+    assert c_tokens == total and p_tokens == total, \
+        f"paged trace dropped tokens: {c_tokens}/{p_tokens}/{total}"
+    assert ex_p.allocator.n_free == ex_p.n_pages, "pages leaked"
+    c_tps, p_tps = total / c_wall, total / p_wall
+    print(f"  contiguous {c_wall:6.3f}s  {c_tps:8.1f} tok/s  "
+          f"(occupancy {c_occ:.2f}, {cap_c} slots)")
+    print(f"  paged      {p_wall:6.3f}s  {p_tps:8.1f} tok/s  "
+          f"(occupancy {p_occ:.2f}, {cap_p} slots)  "
+          f"-> {p_tps / c_tps:.2f}x")
+    return {
+        "seed": args.seed,
+        "n_requests": n,
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "n_pages": pool,
+        "prompt_lens": list(prompt_lens),
+        "max_new_range": list(max_new_range),
+        "contiguous_capacity": cap_c,
+        "paged_capacity": cap_p,
+        "slot_capacity_ratio": cap_p / cap_c,
+        "total_new_tokens": total,
+        "contiguous": {"wall_s": c_wall, "decode_tokens_per_s": c_tps,
+                       "slot_occupancy": c_occ},
+        "paged": {"wall_s": p_wall, "decode_tokens_per_s": p_tps,
+                  "slot_occupancy": p_occ},
+        "paged_speedup_vs_contiguous": p_tps / c_tps,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -324,6 +418,14 @@ def main() -> None:
     ap.add_argument("--prefill-heavy", action="store_true",
                     help="also replay the long-prompt (chunked-prefill) "
                          "trace -> continuous_prefill_heavy section")
+    ap.add_argument("--paged", action="store_true",
+                    help="also replay the long-context trace through the "
+                         "block-paged cache at 2x slot capacity / equal "
+                         "memory -> continuous_paged section")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed for every synthetic trace (recorded "
+                         "in the JSON so cross-PR deltas replay the same "
+                         "workload)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (fast compile)")
     ap.add_argument("--out", default=OUT_PATH)
@@ -352,6 +454,7 @@ def main() -> None:
         "batch": args.batch,
         "prompt_len": args.prompt,
         "max_new": args.max_new,
+        "seed": args.seed,
     })
 
     if args.mode in ("all", "paths"):
@@ -367,6 +470,8 @@ def main() -> None:
         if args.prefill_heavy:
             report["continuous_prefill_heavy"] = run_prefill_heavy(
                 cfg, q, args)
+        if args.paged:
+            report["continuous_paged"] = run_paged(cfg, q, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

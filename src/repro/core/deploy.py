@@ -166,14 +166,32 @@ def pack_params(qparams: Any, scheduled: bool = True) -> Any:
 # states), so the row ops key off ``cache_logical_axes`` to find each
 # leaf's batch axis.  All three are jit-safe with a traced ``slot``: one
 # compilation serves every slot.
+#
+# Paged mode (the cache dict carries a ``"page_table"`` leaf) changes the
+# ownership story: a slot owns a page-table ROW, not KV data rows.  The
+# row ops become page-table remaps -- pools pass through gathers
+# untouched (appends write the seats' physical frames in place), eviction
+# resets the slot's page-table row to the sentinel in O(pages) with no
+# gather or zeroing of KV data (freed frames are recycled by the host
+# allocator; a new tenant overwrites every frame position it can read).
 
-def _cache_axes(cfg):
+def _is_paged(cache: Any) -> bool:
+    return isinstance(cache, dict) and "page_table" in cache
+
+
+def _cache_axes(cfg, cache: Any):
     from ..models.transformer import cache_logical_axes
-    return cache_logical_axes(cfg)
+    return cache_logical_axes(cfg, paged=_is_paged(cache))
 
 
 def cache_slot_insert(cfg, cache: Any, sub: Any, slot) -> Any:
-    """Write a batch-1 sub-cache (same max_seq) into batch row ``slot``."""
+    """Write a batch-1 sub-cache (same max_seq) into batch row ``slot``.
+    Contiguous-only: paged slots are populated through ``prefill_append``
+    (frames are written in place; there is no dense row to insert)."""
+    if _is_paged(cache):
+        raise NotImplementedError(
+            "cache_slot_insert is contiguous-only; paged slots are "
+            "populated via serving.batch.prefill_append")
 
     def ins(big, small, axes):
         bpos = axes.index("batch")
@@ -182,13 +200,42 @@ def cache_slot_insert(cfg, cache: Any, sub: Any, slot) -> Any:
         return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
                                             start)
 
-    return jax.tree.map(ins, cache, sub, _cache_axes(cfg))
+    return jax.tree.map(ins, cache, sub, _cache_axes(cfg, cache))
 
 
 def cache_slot_evict(cfg, cache: Any, slot) -> Any:
-    """Zero batch row ``slot`` (hygiene on request completion: a recycled
+    """Free batch row ``slot``.
+
+    Contiguous: zero the row (hygiene on request completion: a recycled
     slot never observes the previous tenant's state even if an admission
-    bug skipped the insert)."""
+    bug skipped the insert).  Paged: reset the slot's page-table row to
+    the sentinel -- O(pages) int32 writes, the pools are untouched (a
+    recycled frame's stale data is unreachable: every position a new
+    tenant can attend is written by its own prefill/decode first) -- and
+    zero the batch-major leaves (SSM/RG-LRU/ring state) as before."""
+    if _is_paged(cache):
+        from ..models.transformer import PAGE_SENTINEL
+        body = {k: v for k, v in cache.items() if k != "page_table"}
+        axes = _cache_axes(cfg, cache)
+
+        def clr(big, leaf_axes):
+            if "pages" in leaf_axes:
+                return big
+            bpos = leaf_axes.index("batch")
+            row = big.shape[:bpos] + (1,) + big.shape[bpos + 1:]
+            start = [0] * big.ndim
+            start[bpos] = slot
+            return jax.lax.dynamic_update_slice(
+                big, jnp.zeros(row, big.dtype), start)
+
+        out = jax.tree.map(clr, body,
+                           {k: v for k, v in axes.items()
+                            if k != "page_table"})
+        pt = cache["page_table"]
+        out["page_table"] = jax.lax.dynamic_update_slice(
+            pt, jnp.full((1, pt.shape[1]), PAGE_SENTINEL, pt.dtype),
+            [slot, 0])
+        return out
 
     def clr(big, axes):
         bpos = axes.index("batch")
@@ -198,11 +245,17 @@ def cache_slot_evict(cfg, cache: Any, slot) -> Any:
         return jax.lax.dynamic_update_slice(big, jnp.zeros(row, big.dtype),
                                             start)
 
-    return jax.tree.map(clr, cache, _cache_axes(cfg))
+    return jax.tree.map(clr, cache, _cache_axes(cfg, cache))
 
 
 def cache_slot_slice(cfg, cache: Any, slot) -> Any:
-    """Read batch row ``slot`` back as a batch-1 sub-cache."""
+    """Read batch row ``slot`` back as a batch-1 sub-cache.
+    Contiguous-only (a paged slot's KV lives in shared pools; use
+    ``cache_rows_gather``, which hands pools through by reference)."""
+    if _is_paged(cache):
+        raise NotImplementedError(
+            "cache_slot_slice is contiguous-only; paged callers read "
+            "through the page table (cache_rows_gather)")
 
     def rd(big, axes):
         bpos = axes.index("batch")
@@ -212,7 +265,7 @@ def cache_slot_slice(cfg, cache: Any, slot) -> Any:
         sizes[bpos] = 1
         return jax.lax.dynamic_slice(big, start, sizes)
 
-    return jax.tree.map(rd, cache, _cache_axes(cfg))
+    return jax.tree.map(rd, cache, _cache_axes(cfg, cache))
 
 
 def cache_rows_gather(cfg, cache: Any, slots: jnp.ndarray) -> Any:
@@ -223,13 +276,21 @@ def cache_rows_gather(cfg, cache: Any, slots: jnp.ndarray) -> Any:
     seat's cache row so a K-seat prefill window runs as one batch-K model
     call instead of K batch-1 calls.  Out-of-range slot ids (the padded
     seats of a partially filled admission group) clamp to the last row --
-    callers mask those seats, so the garbage row is never consumed."""
+    callers mask those seats, so the garbage row is never consumed.
+
+    Paged leaves ("pages" axis) pass through UNgathered: the sub-cache
+    carries the shared pools by reference plus the K seats' page-table
+    rows, so a K-seat append still costs O(K) rows of bookkeeping, never
+    a copy of anyone's KV data."""
+    axes_tree = _cache_axes(cfg, cache)
 
     def rd(big, axes):
+        if "pages" in axes:
+            return big
         bpos = axes.index("batch")
         return jnp.take(big, slots, axis=bpos, mode="clip")
 
-    return jax.tree.map(rd, cache, _cache_axes(cfg))
+    return jax.tree.map(rd, cache, axes_tree)
 
 
 def cache_rows_scatter(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
@@ -241,9 +302,16 @@ def cache_rows_scatter(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
     where scatter's drop semantics discard the update wholesale -- the
     order-safe way to no-op padded seats (substituting "old" values for
     masked seats would race a live write when a padded seat duplicates a
-    live seat's slot id).  Live seats must hold distinct slots."""
+    live seat's slot id).  Live seats must hold distinct slots.
+
+    Paged leaves take the sub-cache's pool wholesale: the append already
+    scattered the seats' frames in place (masked window slots dropped at
+    the sentinel), so "scatter back" is the identity on KV data."""
+    axes_tree = _cache_axes(cfg, cache)
 
     def wr(big, small, axes):
+        if "pages" in axes:
+            return small.astype(big.dtype)
         bpos = axes.index("batch")
         sl = slots if mask is None else jnp.where(mask, slots,
                                                   big.shape[bpos])
@@ -251,7 +319,56 @@ def cache_rows_scatter(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
         s = jnp.moveaxis(small.astype(big.dtype), bpos, 0)
         return jnp.moveaxis(x.at[sl].set(s), 0, bpos)
 
-    return jax.tree.map(wr, cache, sub, _cache_axes(cfg))
+    return jax.tree.map(wr, cache, sub, axes_tree)
+
+
+def cache_rows_scatter_dense(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
+                             mask: Optional[jnp.ndarray] = None) -> Any:
+    """Write a CONTIGUOUS batch-K sub-cache (the ``T.prefill`` layout:
+    dense (K, max_seq, ...) KV rows, no page table) into ``cache``.
+
+    Contiguous caches: identical to ``cache_rows_scatter``.  Paged
+    caches: each dense row is split into page_size strips and scattered
+    to the seat's physical frames through its page-table row -- the
+    bridge that lets the ``fresh`` fast path (blockwise one-shot prefill
+    of whole short prompts) stay numerically identical in paged mode.
+    Strips beyond a seat's reservation hit sentinel entries and drop."""
+    if not _is_paged(cache):
+        return cache_rows_scatter(cfg, cache, sub, slots, mask=mask)
+
+    from ..models.transformer import PAGE_SENTINEL
+    pt = cache["page_table"]
+    cap = pt.shape[0]
+    slots_c = jnp.clip(slots, 0, cap - 1)
+    rows = pt[slots_c]                                    # (K, P)
+    seat_ok = (slots >= 0) & (slots < cap)
+    if mask is not None:
+        seat_ok &= mask
+    rows = jnp.where(seat_ok[:, None], rows, jnp.int32(PAGE_SENTINEL))
+    axes_tree = _cache_axes(cfg, cache)
+    body = {k: v for k, v in cache.items() if k != "page_table"}
+    body_axes = {k: v for k, v in axes_tree.items() if k != "page_table"}
+
+    def wr(big, small, axes):
+        if "pages" in axes:
+            ppos = axes.index("pages")                    # 0 or 1 (layers)
+            ps = big.shape[ppos + 1]
+            if ppos == 0:
+                k, s = small.shape[0], small.shape[1]
+                strips = small.reshape((k, s // ps, ps) + small.shape[2:])
+                return big.at[rows].set(strips.astype(big.dtype))
+            lyr, k, s = small.shape[0], small.shape[1], small.shape[2]
+            strips = small.reshape((lyr, k, s // ps, ps) + small.shape[3:])
+            return big.at[:, rows].set(strips.astype(big.dtype))
+        bpos = axes.index("batch")
+        sl = jnp.where(seat_ok, slots, big.shape[bpos])
+        x = jnp.moveaxis(big, bpos, 0)
+        s = jnp.moveaxis(small.astype(big.dtype), bpos, 0)
+        return jnp.moveaxis(x.at[sl].set(s), 0, bpos)
+
+    out = jax.tree.map(wr, body, sub, body_axes)
+    out["page_table"] = pt
+    return out
 
 
 def deploy_params(qparams: Any) -> Any:

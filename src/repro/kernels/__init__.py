@@ -1,5 +1,7 @@
 """Pallas TPU kernels for HALO deployment (validated in interpret mode on
 CPU): halo_matmul (codebook dequant + class-grouped MXU matmul), spmv
-(gather-free hypersparse outlier path), int8_matmul (W8A8 baseline)."""
+(gather-free hypersparse outlier path), int8_matmul (W8A8 baseline),
+paged_decode (page-table-indirect flash decode over the paged KV cache)."""
 
-from . import halo_matmul, int8_matmul, ops, ref, spmv  # noqa: F401
+from . import (halo_matmul, int8_matmul, ops, paged_decode, ref,  # noqa: F401
+               spmv)

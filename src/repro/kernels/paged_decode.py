@@ -1,0 +1,196 @@
+"""Pallas TPU paged flash-decode kernel: page-table-indirect KV reads.
+
+Single-token attention over a block-paged KV cache: K/V live in shared
+page pools ((n_pages, page_size, Hkv, D) per layer) and each slot owns a
+row of the page table ((B, P) int32 physical frame ids).  The pools stay
+in HBM (``memory_space=ANY``) -- per (slot, kv head) grid step the kernel
+walks the slot's page table (scalar-prefetched, so frame ids are known
+before the body runs) and double-buffers ONE physical frame at a time
+into VMEM scratch, overlapping each frame's DMA with the previous
+frame's online-softmax update.  VMEM residency is O(page_size * D) per
+buffer regardless of pool size, and HBM traffic is exactly the slot's
+``pages_per_slot`` frames -- never a dense (B, S, ...) gather and never
+the whole pool.
+
+``k_scale``/``v_scale`` pools ((n_pages, page_size, Hkv) f32) enable the
+int8-KV configuration: quantized frames are DMA'd at 1 byte/element and
+dequantized in VMEM, mirroring ``flash_decode_int8``'s contract for the
+contiguous layout.
+
+Sentinel page-table entries (>= n_pages: pages past the slot's
+reservation) clamp to the LAST frame (mirroring ``gather_pages``'s clip,
+the parity oracle) and are masked by the length bound; the
+loop covers all ``pages_per_slot`` logical pages so the fully-masked
+degenerate row (length == 0) keeps the same uniform-softmax semantics as
+``attention.decode_attention``.
+
+Same validation contract as ``flash_decode``: interpret-mode tested on
+this container (tests/test_paged_cache.py verifies it against the XLA
+gather lowering); compiles to Mosaic on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  page_size, pages_per_slot, n_pages, scale, window,
+                  softcap, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        o_ref, = rest
+    b, h = pl.program_id(0), pl.program_id(1)
+    g, d = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, D)
+    length = len_ref[b]
+
+    def run(*scratch):
+        if quantized:
+            k_buf, v_buf, ks_buf, vs_buf, sem = scratch
+        else:
+            k_buf, v_buf, sem = scratch
+
+        def frame_dmas(slot, j):
+            pid = jnp.minimum(pt_ref[b, j], n_pages - 1)  # sentinel clamp
+            dmas = [
+                pltpu.make_async_copy(k_ref.at[pid, :, h],
+                                      k_buf.at[slot], sem.at[slot, 0]),
+                pltpu.make_async_copy(v_ref.at[pid, :, h],
+                                      v_buf.at[slot], sem.at[slot, 1]),
+            ]
+            if quantized:
+                dmas += [
+                    pltpu.make_async_copy(ks_ref.at[pid, :, h],
+                                          ks_buf.at[slot],
+                                          sem.at[slot, 2]),
+                    pltpu.make_async_copy(vs_ref.at[pid, :, h],
+                                          vs_buf.at[slot],
+                                          sem.at[slot, 3]),
+                ]
+            return dmas
+
+        for dma in frame_dmas(0, 0):                    # warm up buffer 0
+            dma.start()
+
+        def body(j, carry):
+            m, l, acc = carry
+            slot, nxt = j % 2, (j + 1) % 2
+
+            @pl.when(j + 1 < pages_per_slot)
+            def _():
+                for dma in frame_dmas(nxt, j + 1):      # overlap next DMA
+                    dma.start()
+
+            for dma in frame_dmas(slot, j):
+                dma.wait()
+            k = k_buf[slot].astype(jnp.float32)         # (page_size, D)
+            v = v_buf[slot].astype(jnp.float32)
+            if quantized:                               # dequant in VMEM
+                k = k * ks_buf[slot][:, None]
+                v = v * vs_buf[slot][:, None]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32
+                                    ) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = j * page_size + jax.lax.broadcasted_iota(
+                jnp.int32, (1, page_size), 1)[0]
+            valid = kpos < length
+            if window is not None:
+                valid &= kpos >= (length - window)
+            s = jnp.where(valid[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((g,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((g,), jnp.float32)
+        a0 = jnp.zeros((g, d), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, pages_per_slot, body,
+                                      (m0, l0, a0))
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+    ps = page_size
+    scratch = [pltpu.VMEM((2, ps, d), k_ref.dtype),
+               pltpu.VMEM((2, ps, d), v_ref.dtype)]
+    n_sems = 2
+    if quantized:
+        scratch += [pltpu.VMEM((2, ps), jnp.float32),
+                    pltpu.VMEM((2, ps), jnp.float32)]
+        n_sems = 4
+    pl.run_scoped(run, *scratch, pltpu.SemaphoreType.DMA((2, n_sems)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_flash_decode(q: jnp.ndarray,            # (B, H, D)
+                       k_pool: jnp.ndarray,       # (n_pages, ps, Hkv, D)
+                       v_pool: jnp.ndarray,
+                       page_table: jnp.ndarray,   # (B, P) int32
+                       length: jnp.ndarray,       # (B,) int32
+                       k_scale: Optional[jnp.ndarray] = None,
+                       v_scale: Optional[jnp.ndarray] = None,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Single-token attention over a paged KV cache; returns (B, H, D) f32.
+
+    Same GQA contract as ``decode_attention``: q heads grouped over the
+    pool's kv heads, the pool never repeated.  ``k_scale``/``v_scale``
+    ((n_pages, ps, Hkv) f32) select the int8-KV path: frames dequantize
+    in VMEM after the DMA.  ``interpret=None`` follows
+    ``kernels.ops.default_interpret()`` (Mosaic on TPU, interpreter
+    elsewhere)."""
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    quantized = k_scale is not None
+    b, h, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    p = page_table.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = float(1.0 / np.sqrt(d))
+    kernel = functools.partial(
+        _paged_kernel, page_size=ps, pages_per_slot=p, n_pages=n_pages,
+        scale=scale, window=window, softcap=softcap, quantized=quantized)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bb, hh, PT, LN: (bb, hh, 0, 0)),
+        any_spec,          # k pool stays in HBM; frames DMA'd on demand
+        any_spec,
+    ]
+    args = [qg, k_pool, v_pool]
+    if quantized:
+        in_specs += [any_spec, any_spec]
+        args += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, PT, LN: (bb, hh, 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), length.astype(jnp.int32), *args)
+    return out.reshape(b, h, d)

@@ -209,6 +209,76 @@ def append_attention(
     return out.reshape(b, w, h, d).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (block-paged pools + per-slot page tables)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize per-slot KV rows from a shared page pool.
+
+    ``pool``: (n_pages, page_size, ...) -- one physical frame per row;
+    ``page_table``: (B, P) int32 -- physical frame per (slot, logical
+    page); sentinel entries (>= n_pages, the unassigned marker) clip to
+    the last frame, whose junk contents sit past the slot's length and
+    are masked by every caller.  Returns (B, P * page_size, ...), the
+    exact dense layout the contiguous cache stores -- so feeding the
+    gather into ``decode_attention``/``append_attention`` is bit-identical
+    to the contiguous path.  This is the XLA lowering the CPU fallback
+    uses; the Pallas kernel (kernels/paged_decode.py) reads the pool
+    page-table-indirect without materializing it."""
+    b, p = page_table.shape
+    ps = pool.shape[1]
+    g = jnp.take(pool, jnp.clip(page_table, 0, pool.shape[0] - 1), axis=0)
+    return g.reshape((b, p * ps) + pool.shape[2:])
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,             # (B, H, D) one new token per sequence
+    k_pool: jnp.ndarray,        # (n_pages, page_size, Hkv, D)
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,    # (B, P) int32 physical frame ids
+    length: jnp.ndarray,        # (B,) valid cache lengths
+    k_scale: Optional[jnp.ndarray] = None,   # (n_pages, ps, Hkv) f32
+    v_scale: Optional[jnp.ndarray] = None,   # (int8 pools only)
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    use_kernel: Optional[bool] = None,
+) -> jnp.ndarray:
+    """``decode_attention`` over a paged cache.
+
+    ``use_kernel=None`` routes to the Pallas paged flash-decode kernel on
+    TPU (pools stay in HBM, frames DMA'd page-table-indirect; int8 pools
+    dequantize in VMEM) and to the XLA gather lowering elsewhere; the
+    gather lowering is bit-identical to the contiguous
+    ``decode_attention`` (same dense shape, same masking, same reduction
+    order), which is what makes contiguous mode the paged path's parity
+    oracle."""
+    if use_kernel is None:
+        from ..kernels.ops import default_interpret
+        use_kernel = not default_interpret()
+    if use_kernel:
+        from ..kernels.paged_decode import paged_flash_decode
+        out = paged_flash_decode(q, k_pool, v_pool, page_table, length,
+                                 k_scale=k_scale, v_scale=v_scale,
+                                 window=window, softcap=attn_softcap)
+        return out.astype(q.dtype)
+    kd = gather_pages(k_pool, page_table)
+    vd = gather_pages(v_pool, page_table)
+    if k_scale is not None:
+        # XLA fallback of the int8 path: dequantize the gathered frames
+        # (elementwise, so gather-then-dequant == dequant-then-gather --
+        # the contiguous parity contract holds bit for bit)
+        with jax.named_scope("kvdec_vmem"):
+            kd = (kd.astype(jnp.float32)
+                  * gather_pages(k_scale, page_table)[..., None]
+                  ).astype(q.dtype)
+            vd = (vd.astype(jnp.float32)
+                  * gather_pages(v_scale, page_table)[..., None]
+                  ).astype(q.dtype)
+    return decode_attention(q, kd, vd, length, window=window,
+                            attn_softcap=attn_softcap)
+
+
 def decode_attention_partial(
     q: jnp.ndarray, k_local: jnp.ndarray, v_local: jnp.ndarray,
     valid_mask: jnp.ndarray,

@@ -28,7 +28,8 @@ from ..configs.base import ModelConfig
 from ..dist.sharding import shard_activation
 from . import rglru, ssm
 from .attention import (append_attention, causal_blockwise_attention,
-                        decode_attention)
+                        decode_attention, gather_pages,
+                        paged_decode_attention)
 from .layers import (activation, apply_rope, cross_entropy, dense,
                      embed_lookup, layernorm, materialize, rmsnorm, softcap)
 from .module import ParamSpec, stack_tree
@@ -157,7 +158,38 @@ def _dequantize_kv(q: jnp.ndarray, scale: Optional[jnp.ndarray],
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
-def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+# Paged mode: unassigned page-table entries carry this sentinel.  It is
+# far above any real frame id, so reads clip to the last frame (junk that
+# sits past the slot's length and is masked) and writes scatter out of
+# bounds and are dropped -- an evicted slot can never corrupt frame 0.
+PAGE_SENTINEL = 2 ** 30
+
+
+def paged_kind(cfg: ModelConfig, kind: str) -> bool:
+    """True for block kinds whose KV cache is block-paged in paged mode:
+    global attention (and windowless "attn_local", which behaves
+    identically).  Ring local-KV caches are already bounded by
+    ``local_window`` and stay batch-major; SSM/RG-LRU states are O(1) per
+    slot and have no sequence axis to page."""
+    if kind == "attn":
+        return True
+    return kind == "attn_local" and cfg.local_window is None
+
+
+def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                      paged: bool = False, page_size: int = 0,
+                      n_pages: int = 0):
+    if paged and paged_kind(cfg, kind):
+        shp = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim_)
+        if cfg.kv_cache_dtype == "int8":
+            sshp = (n_pages, page_size, cfg.n_kv_heads)
+            return AttnCache(
+                k=jax.ShapeDtypeStruct(shp, jnp.int8),
+                v=jax.ShapeDtypeStruct(shp, jnp.int8),
+                k_scale=jax.ShapeDtypeStruct(sshp, jnp.float32),
+                v_scale=jax.ShapeDtypeStruct(sshp, jnp.float32))
+        return AttnCache(k=jax.ShapeDtypeStruct(shp, cfg.dtype),
+                         v=jax.ShapeDtypeStruct(shp, cfg.dtype))
     if kind == "mamba":
         dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
                             cfg.conv_k)
@@ -194,18 +226,55 @@ def _stack_sds(tree, n: int):
         lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), tree)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
-    """Abstract cache pytree (ShapeDtypeStructs)."""
+def _check_paged_dims(max_seq: int, page_size: int) -> int:
+    if page_size < 1 or max_seq % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide max_seq {max_seq} "
+            f"(pick a page_size dividing the bucket-rounded slot length)")
+    return max_seq // page_size
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                paged: bool = False, page_size: int = 16,
+                n_pages: Optional[int] = None):
+    """Abstract cache pytree (ShapeDtypeStructs).
+
+    ``paged=True`` replaces each pageable KV leaf's per-slot contiguous
+    rows (batch, max_seq, ...) with a SHARED page pool (n_pages,
+    page_size, ...) and adds one top-level ``"page_table"`` leaf --
+    (batch, max_seq // page_size) int32 physical frame ids shared by every
+    layer (each layer's pool uses the same frame numbering, vLLM-style).
+    ``n_pages`` defaults to ``batch * max_seq // page_size``: the same
+    memory as the contiguous layout, but slots now borrow frames from one
+    pool, so the serving scheduler can run more slots than
+    ``n_pages // pages_per_slot`` whenever resident requests don't all
+    need ``max_seq`` (serving/scheduler.PageAllocator)."""
+    if not paged:
+        page_size = n_total = 0
+    else:
+        pps = _check_paged_dims(max_seq, page_size)
+        n_total = batch * pps if n_pages is None else int(n_pages)
     period = tuple(
-        _stack_sds(_block_cache_spec(cfg, kind, batch, max_seq), cfg.n_periods)
+        _stack_sds(_block_cache_spec(cfg, kind, batch, max_seq, paged,
+                                     page_size, n_total), cfg.n_periods)
         for kind in cfg.block_pattern)
-    rem = tuple(_block_cache_spec(cfg, kind, batch, max_seq)
+    rem = tuple(_block_cache_spec(cfg, kind, batch, max_seq, paged,
+                                  page_size, n_total)
                 for kind in cfg.remainder_pattern)
-    return {"period": period, "remainder": rem}
+    out = {"period": period, "remainder": rem}
+    if paged:
+        out["page_table"] = jax.ShapeDtypeStruct(
+            (batch, max_seq // page_size), jnp.int32)
+    return out
 
 
-def cache_logical_axes(cfg: ModelConfig):
-    """Logical axes per cache leaf, mirroring cache_specs structure."""
+def cache_logical_axes(cfg: ModelConfig, paged: bool = False):
+    """Logical axes per cache leaf, mirroring cache_specs structure.
+
+    Paged pool leaves carry a leading ``"pages"`` axis instead of
+    ``"batch"`` -- the deploy row helpers key off that to pass pools
+    through slot-row gathers untouched (the page table, not the pool, is
+    what a slot owns)."""
 
     def block_axes(kind: str, stacked: bool):
         lead = ("layers",) if stacked else ()
@@ -215,21 +284,33 @@ def cache_logical_axes(cfg: ModelConfig):
         if kind == "rec":
             return rglru.RglruState(conv=lead + ("batch", None, "act_mlp"),
                                     h=lead + ("batch", "act_mlp"))
-        kv_axes = lead + ("batch", "kv_seq", "kv", None)
-        sc_axes = lead + ("batch", "kv_seq", "kv")
+        lead_kv = "pages" if paged and paged_kind(cfg, kind) else "batch"
+        kv_axes = lead + (lead_kv, "kv_seq", "kv", None)
+        sc_axes = lead + (lead_kv, "kv_seq", "kv")
         if cfg.kv_cache_dtype == "int8":
             return AttnCache(k=kv_axes, v=kv_axes,
                              k_scale=sc_axes, v_scale=sc_axes)
         return AttnCache(k=kv_axes, v=kv_axes)
 
-    return {"period": tuple(block_axes(k, True) for k in cfg.block_pattern),
-            "remainder": tuple(block_axes(k, False)
-                               for k in cfg.remainder_pattern)}
+    out = {"period": tuple(block_axes(k, True) for k in cfg.block_pattern),
+           "remainder": tuple(block_axes(k, False)
+                              for k in cfg.remainder_pattern)}
+    if paged:
+        out["page_table"] = ("batch", None)
+    return out
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_specs(cfg, batch, max_seq))
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               paged: bool = False, page_size: int = 16,
+               n_pages: Optional[int] = None):
+    specs = cache_specs(cfg, batch, max_seq, paged=paged,
+                        page_size=page_size, n_pages=n_pages)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    if paged:
+        # all-zeros would alias every slot onto physical frame 0
+        cache["page_table"] = jnp.full(specs["page_table"].shape,
+                                       PAGE_SENTINEL, jnp.int32)
+    return cache
 
 
 # ---------------------------------------------------------------------------
@@ -363,13 +444,20 @@ def _mask_rows(active: Optional[jnp.ndarray], new: jnp.ndarray,
 
 def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray,
-                 active: Optional[jnp.ndarray] = None):
+                 active: Optional[jnp.ndarray] = None,
+                 page_table: Optional[jnp.ndarray] = None):
     """One block, one token.  x: (B, d).  Returns (x, new_cache).
 
     ``active`` (optional (B,) bool) freezes the cache rows of dead slots:
     a padded continuous-batching step still computes every row (static
     shapes), but an inactive row's KV/conv/SSM state must not drift while
-    the slot waits to be recycled."""
+    the slot waits to be recycled.
+
+    ``page_table`` ((B, P) int32, paged mode only): pageable KV leaves are
+    shared pools -- the new token's K/V scatters to the slot's physical
+    frame (inactive or unreserved rows route to the sentinel and drop)
+    and attention reads page-table-indirect (Pallas kernel on TPU, XLA
+    gather lowering elsewhere)."""
     if kind == "mamba":
         dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
                             cfg.conv_k)
@@ -402,6 +490,46 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                        cfg.rope_theta).reshape(b, h, dh)
         k = apply_rope(k.reshape(b, 1, hkv, dh), lengths[:, None],
                        cfg.rope_theta).reshape(b, hkv, dh)
+
+    if page_table is not None and paged_kind(cfg, kind):
+        # paged KV: scatter the token into the slot's physical frame,
+        # attend through the page table (same masking as contiguous)
+        npg, ps = cache.k.shape[0], cache.k.shape[1]
+        p_max = page_table.shape[1]
+        logical = jnp.clip(lengths // ps, 0, p_max - 1)
+        phys = jnp.take_along_axis(page_table, logical[:, None],
+                                   axis=1)[:, 0]
+        ok = lengths < p_max * ps
+        if active is not None:
+            ok &= active
+        phys = jnp.where(ok, phys, jnp.int32(PAGE_SENTINEL))  # OOB -> drop
+        off = lengths % ps
+        window = cfg.local_window if kind == "attn_local" else None
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache = AttnCache(
+                k=cache.k.at[phys, off].set(kq),
+                v=cache.v.at[phys, off].set(vq),
+                k_scale=cache.k_scale.at[phys, off].set(ks),
+                v_scale=cache.v_scale.at[phys, off].set(vs))
+            out = paged_decode_attention(
+                q.astype(cfg.dtype), new_cache.k, new_cache.v, page_table,
+                lengths + 1, k_scale=new_cache.k_scale,
+                v_scale=new_cache.v_scale, window=window,
+                attn_softcap=cfg.attn_softcap)
+        else:
+            kc = cache.k.at[phys, off].set(k.astype(cache.k.dtype))
+            vc = cache.v.at[phys, off].set(v.astype(cache.v.dtype))
+            new_cache = AttnCache(k=kc, v=vc)
+            out = paged_decode_attention(q, kc, vc, page_table,
+                                         lengths + 1, window=window,
+                                         attn_softcap=cfg.attn_softcap)
+        out = dense(out.reshape(b, h * dh), ap["wo"]) \
+            + (ap.get("bo", 0) if cfg.use_bias else 0)
+        x = x + out.astype(x.dtype)
+        x, _ = _mlp_forward(p["mlp"], cfg, x[:, None, :])
+        return x[:, 0], new_cache
 
     s_max = cache.k.shape[1]
     if kind == "attn_local" and cfg.local_window is not None \
@@ -462,7 +590,8 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
 
 def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray, positions: jnp.ndarray,
-                 valid: jnp.ndarray):
+                 valid: jnp.ndarray,
+                 page_table: Optional[jnp.ndarray] = None):
     """Attention block over a (B, W) window appended at ``positions``.
 
     Global attention writes the whole window into the cache in one masked
@@ -487,6 +616,47 @@ def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     if cfg.pos_emb == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+
+    if page_table is not None and paged_kind(cfg, kind):
+        # paged KV: scatter the whole window into the seats' physical
+        # frames (invalid slots route to the sentinel and drop), then
+        # attend the page-table gather with the same offset-causal mask
+        ps = cache.k.shape[1]
+        p_max = page_table.shape[1]
+        logical = jnp.clip(positions // ps, 0, p_max - 1)       # (B, W)
+        phys = jnp.take_along_axis(page_table, logical, axis=1)
+        ok = valid & (positions < p_max * ps)
+        phys = jnp.where(ok, phys, jnp.int32(PAGE_SENTINEL))
+        off = positions % ps
+
+        def pwrite(buf, new):
+            return buf.at[phys, off].set(new.astype(buf.dtype))
+
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache = AttnCache(k=pwrite(cache.k, kq),
+                                  v=pwrite(cache.v, vq),
+                                  k_scale=pwrite(cache.k_scale, ks),
+                                  v_scale=pwrite(cache.v_scale, vs))
+            with jax.named_scope("kvdec_vmem"):
+                kd = _dequantize_kv(
+                    gather_pages(new_cache.k, page_table),
+                    gather_pages(new_cache.k_scale, page_table), cfg.dtype)
+                vd = _dequantize_kv(
+                    gather_pages(new_cache.v, page_table),
+                    gather_pages(new_cache.v_scale, page_table), cfg.dtype)
+        else:
+            new_cache = AttnCache(k=pwrite(cache.k, k),
+                                  v=pwrite(cache.v, v))
+            kd = gather_pages(new_cache.k, page_table)
+            vd = gather_pages(new_cache.v, page_table)
+        window = cfg.local_window if kind == "attn_local" else None
+        out = append_attention(q, kd, vd, positions, window=window,
+                               attn_softcap=cfg.attn_softcap)
+        out = dense(out.reshape(b, w, h * dh), ap["wo"]) \
+            + (ap.get("bo", 0) if cfg.use_bias else 0)
+        return x + out.astype(x.dtype), new_cache
 
     s_max = cache.k.shape[1]
     ring = (kind == "attn_local" and cfg.local_window is not None
@@ -579,7 +749,8 @@ def _append_recurrent(decode_fn, x: jnp.ndarray, state,
 
 def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray, positions: jnp.ndarray,
-                 valid: jnp.ndarray):
+                 valid: jnp.ndarray,
+                 page_table: Optional[jnp.ndarray] = None):
     """One block over a W-token window appended to an existing cache.
 
     x: (B, W, d); ``lengths``: (B,) tokens already in the cache (the
@@ -601,7 +772,7 @@ def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         x, _ = _mlp_forward(p["mlp"], cfg, x)
         return x, new_state
     x, new_cache = _append_attn(p, cfg, kind, x, cache, lengths, positions,
-                                valid)
+                                valid, page_table=page_table)
     x, _ = _mlp_forward(p["mlp"], cfg, x)
     return x, new_cache
 
@@ -813,13 +984,15 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     x = shard_activation(x.astype(cfg.dtype),
                          ("batch", "act_seq", "act_embed"))
 
+    page_table = cache.get("page_table")
+
     def period_fn(x, xs):
         period_params, cache_slice = xs
         new_entries = []
         for pos_i, kind in enumerate(cfg.block_pattern):
             x, nc = block_append(period_params[pos_i], cfg, kind, x,
                                  cache_slice[pos_i], lengths, positions,
-                                 valid)
+                                 valid, page_table=page_table)
             new_entries.append(nc)
         x = shard_activation(x, ("batch", "act_seq", "act_embed"))
         return x, tuple(new_entries)
@@ -829,12 +1002,15 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     new_rem = []
     for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
                             cache["remainder"]):
-        x, nc = block_append(rp, cfg, kind, x, ce, lengths, positions, valid)
+        x, nc = block_append(rp, cfg, kind, x, ce, lengths, positions,
+                             valid, page_table=page_table)
         new_rem.append(nc)
     idx = jnp.clip(cl - 1, 0, w - 1)[:, None, None]
     x_last = jnp.take_along_axis(x, idx, axis=1)          # (B, 1, d)
     logits = _logits(params, cfg, x_last)[:, 0]
     new_cache = {"period": new_period, "remainder": tuple(new_rem)}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache, lengths + cl
 
 
@@ -860,12 +1036,15 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
                          jnp.minimum(lengths, cfg.max_position - 1), axis=0)
     x = shard_activation(x, ("batch", "act_embed"))
 
+    page_table = cache.get("page_table")
+
     def period_fn(x, xs):
         period_params, cache_slice = xs
         new_entries = []
         for pos_i, kind in enumerate(cfg.block_pattern):
             x, nc = block_decode(period_params[pos_i], cfg, kind, x,
-                                 cache_slice[pos_i], lengths, active=active)
+                                 cache_slice[pos_i], lengths, active=active,
+                                 page_table=page_table)
             new_entries.append(nc)
         return x, tuple(new_entries)
 
@@ -874,10 +1053,13 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
     new_rem = []
     for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
                             cache["remainder"]):
-        x, nc = block_decode(rp, cfg, kind, x, ce, lengths, active=active)
+        x, nc = block_decode(rp, cfg, kind, x, ce, lengths, active=active,
+                             page_table=page_table)
         new_rem.append(nc)
     logits = _logits(params, cfg, x)
     new_cache = {"period": new_period, "remainder": tuple(new_rem)}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     if active is None:
         new_lengths = lengths + 1
     else:

@@ -23,11 +23,17 @@ bounded window-width bucket set -- requests coming and going never trigger
 a recompile.  Inactive rows still compute each step (static shapes) but
 their cache rows, lengths, keys and last token are frozen by the
 ``active`` gate threaded through ``T.decode_step`` / ``T.prefill_chunk``.
+
+Paged mode (``init_slots(..., paged=True)``) swaps the per-slot
+contiguous KV rows for shared page pools plus a per-slot page table; the
+jitted updates are unchanged except that admission installs the slot's
+allocator-assigned frames via ``set_page_row`` and the fresh prefill
+path re-pages its dense rows (``deploy.cache_rows_scatter_dense``).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +52,23 @@ class SlotState(NamedTuple):
     cache: Any             # model cache pytree, batch axis = capacity
 
 
-def init_slots(cfg: ModelConfig, capacity: int, max_seq: int) -> SlotState:
+def init_slots(cfg: ModelConfig, capacity: int, max_seq: int,
+               paged: bool = False, page_size: int = 16,
+               n_pages: Optional[int] = None) -> SlotState:
     return SlotState(
         tok=jnp.zeros((capacity,), jnp.int32),
         lengths=jnp.zeros((capacity,), jnp.int32),
         keys=jnp.zeros((capacity, 2), jnp.uint32),
-        cache=T.init_cache(cfg, capacity, max_seq))
+        cache=T.init_cache(cfg, capacity, max_seq, paged=paged,
+                           page_size=page_size, n_pages=n_pages))
+
+
+def set_page_row(state: SlotState, slot, row: jnp.ndarray) -> SlotState:
+    """Install a slot's page-table row ((P,) int32 physical frame ids,
+    sentinel-padded past the reservation) -- the device half of paged
+    admission: the host allocator picks the frames, this writes them."""
+    pt = state.cache["page_table"].at[slot].set(row.astype(jnp.int32))
+    return state._replace(cache={**state.cache, "page_table": pt})
 
 
 # ---------------------------------------------------------------------------
@@ -205,12 +222,17 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
     tok0 = jnp.where(done, t0, state.tok[slots_c])
 
     sl = jnp.where(seat, slots, cap)                     # OOB -> dropped
+    # fresh windows come back in T.prefill's contiguous layout; in paged
+    # mode the dense rows are re-paged through the seats' page tables
+    # (cache_rows_scatter_dense), keeping the fresh fast path numerically
+    # identical across layouts.  Non-fresh subs already carry the pools.
+    scatter = (deploy.cache_rows_scatter_dense if fresh
+               else deploy.cache_rows_scatter)
     new = SlotState(
         tok=state.tok.at[sl].set(tok0),
         lengths=state.lengths.at[sl].set(new_len),
         keys=state.keys.at[sl].set(keys_out),
-        cache=deploy.cache_rows_scatter(cfg, state.cache, new_sub, slots,
-                                        mask=seat))
+        cache=scatter(cfg, state.cache, new_sub, slots, mask=seat))
     return new, tok0, done
 
 

@@ -22,6 +22,14 @@ call.  It is the continuous scheduler's throughput baseline
 ``generate(..., legacy_loop=True)`` keeps the original per-token Python
 loop (one host sync per token) as the ground-truth oracle.
 
+``Engine(..., paged=True, page_size=16, cache_pages=None)`` switches the
+continuous path's KV cache to the block-paged layout: shared page pools
+plus per-slot page tables, admission reserving pages from a host
+``PageAllocator`` -- so ``capacity`` may exceed what contiguous rows of
+the same memory could seat (see docs/serving.md).  Contiguous
+(``paged=False``, default) remains the parity oracle; the one-shot
+batch/legacy paths are contiguous-only.
+
 Prompt lengths are right-padded to ``prefill_bucket`` multiples so prefill
 compilations are bounded by the bucket count.  The continuous path admits
 prompts of ANY length that fits the slot cache: prompts are appended to a
@@ -48,7 +56,7 @@ from ..configs.base import ModelConfig
 from ..models import transformer as T
 from ..utils import next_pow2, round_up
 from . import batch as B
-from .scheduler import Request, Scheduler
+from .scheduler import PageAllocator, Request, Scheduler, pages_needed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,7 +132,32 @@ class _DeviceExecutor:
         self.admit_k = max(1, min(int(eng.admit_k), self.capacity))
         self.chunk_width = eng._chunk_width()
         self.params = eng.serve_params()
-        self.state = B.init_slots(cfg, self.capacity, self.max_seq)
+        # paged KV: shared page pool + per-slot page tables; admission
+        # reserves ceil((prompt_len + max_new) / page_size) frames from
+        # the host allocator, so capacity may exceed what a contiguous
+        # layout of the same memory could seat (see docs/serving.md)
+        self.paged = bool(eng.paged)
+        self.page_size = int(eng.page_size)
+        if self.paged:
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"page_size {self.page_size} must divide the "
+                    f"bucket-rounded slot cache length {self.max_seq}")
+            self.pages_per_slot = self.max_seq // self.page_size
+            self.n_pages = (int(eng.cache_pages)
+                            if eng.cache_pages is not None
+                            else self.capacity * self.pages_per_slot)
+            self.allocator = PageAllocator(self.n_pages)
+            self._slot_frames: Dict[int, List[int]] = {}
+            # donate the slot state: without it every admission's row
+            # update would copy the whole state -- pools included
+            donate = () if jax.default_backend() == "cpu" else (0,)
+            self._set_pages = jax.jit(B.set_page_row,
+                                      donate_argnums=donate)
+        self.state = B.init_slots(cfg, self.capacity, self.max_seq,
+                                  paged=self.paged,
+                                  page_size=self.page_size,
+                                  n_pages=getattr(self, "n_pages", None))
         # (width, n_seats) per fused append call -- k-way admission and
         # chunk-streaming diagnostics (asserted on in tests); bounded so
         # a long-running server's host memory tracks in-flight work
@@ -248,7 +281,41 @@ class _DeviceExecutor:
         # the one host sync per chunk
         return np.asarray(toks), np.asarray(emitted)
 
+    def reserve(self, slot: int, req: Request) -> bool:
+        """Paged admission: reserve the request's whole page budget --
+        ceil((prompt_len + max_new) / page_size) frames -- and install
+        them in the slot's page-table row.  Reserving up front is what
+        makes mid-flight allocation failure impossible: prefill windows
+        and decode chunks only ever touch reserved frames.  Returns False
+        (admission blocks, head-of-line) while the pool is too full.
+        Contiguous executors always admit on a free seat."""
+        if not self.paged:
+            return True
+        if req.prompt_len + req.max_new > self.max_seq:
+            raise ValueError(
+                f"rid {req.rid}: prompt_len {req.prompt_len} + max_new "
+                f"{req.max_new} exceeds the slot cache length "
+                f"{self.max_seq}")
+        need = pages_needed(req.prompt_len, req.max_new, self.page_size)
+        if need > self.n_pages:
+            raise ValueError(
+                f"rid {req.rid}: needs {need} pages but the pool holds "
+                f"{self.n_pages}; raise cache_pages or lower max_new")
+        frames = self.allocator.alloc(need)
+        if frames is None:
+            return False
+        row = np.full((self.pages_per_slot,), T.PAGE_SENTINEL, np.int32)
+        row[:need] = frames
+        self.state = self._set_pages(self.state, np.int32(slot),
+                                     jnp.asarray(row))
+        self._slot_frames[slot] = frames
+        return True
+
     def release(self, slot: int) -> None:
+        if self.paged:
+            frames = self._slot_frames.pop(slot, None)
+            if frames:
+                self.allocator.free(frames)
         self.state = self._evict(self.state, np.int32(slot))
 
 
@@ -260,7 +327,9 @@ class Engine:
                  max_seq: Optional[int] = None,
                  max_prompt_len: Optional[int] = None,
                  prefill_chunk_width: Optional[int] = None,
-                 admit_k: int = 4):
+                 admit_k: int = 4,
+                 paged: bool = False, page_size: int = 16,
+                 cache_pages: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
@@ -275,14 +344,18 @@ class Engine:
         self.max_seq = max_seq
         self.prefill_chunk_width = prefill_chunk_width
         self.admit_k = max(int(admit_k), 1)
-        if max_prompt_len is not None:
-            warnings.warn(
-                "max_prompt_len is deprecated and no longer rejects long "
-                "prompts: any prompt with prompt_len + max_new <= max_seq "
-                "is served via chunked prefill (see docs/serving.md); cap "
-                "prompt length at submission time if you need a policy "
-                "limit", DeprecationWarning, stacklevel=2)
+        # paged KV cache (continuous path only): slots share one page
+        # pool of ``cache_pages`` frames (default capacity * max_seq /
+        # page_size, i.e. the contiguous layout's memory) and admission
+        # reserves pages for prompt_len + max_new -- so capacity slots
+        # can exceed what contiguous rows of equal memory could hold
+        self.paged = bool(paged)
+        self.page_size = max(int(page_size), 1)
+        self.cache_pages = cache_pages
+        self._warned_max_prompt_len = False
         self.max_prompt_len = max_prompt_len
+        if max_prompt_len is not None:
+            self._warn_max_prompt_len()
         self._prefill = jax.jit(
             lambda params, batch, max_seq: T.prefill(
                 B.predecode(params, cfg), cfg, batch, max_seq),
@@ -299,6 +372,20 @@ class Engine:
         self._resolved_params = None
         self._sched: Optional[Scheduler] = None
         self._executors: Dict[Tuple[int, int], _DeviceExecutor] = {}
+
+    def _warn_max_prompt_len(self) -> None:
+        """Deprecation notice for ``max_prompt_len``, AT MOST ONCE per
+        Engine (regression: it used to re-fire on later calls), with the
+        stacklevel pointing at the user's call site."""
+        if self._warned_max_prompt_len:
+            return
+        self._warned_max_prompt_len = True
+        warnings.warn(
+            "max_prompt_len is deprecated and no longer rejects long "
+            "prompts: any prompt with prompt_len + max_new <= max_seq "
+            "is served via chunked prefill (see docs/serving.md); cap "
+            "prompt length at submission time if you need a policy "
+            "limit", DeprecationWarning, stacklevel=3)
 
     # ------------------------------------------------------------------
     # prefill (bucketed)
@@ -428,12 +515,22 @@ class Engine:
         must fit ``max_seq``."""
         req, s = self._normalize_request(prompts)
         sched = self._scheduler(prompt_len=s, max_new=max_new)
-        ms = sched.ex.max_seq
-        if s + max_new > ms:
+        ex = sched.ex
+        if s + max_new > ex.max_seq:
             raise ValueError(
                 f"prompt_len {s} + max_new {max_new} exceeds the slot "
-                f"cache length {ms}; construct the Engine with max_seq>="
-                f"{s + max_new}")
+                f"cache length {ex.max_seq}; construct the Engine with "
+                f"max_seq>={s + max_new}")
+        if ex.paged:
+            # reject a request that could NEVER be admitted here, not at
+            # its queue-head turn -- a late raise from reserve() would
+            # strand every request behind it
+            need = pages_needed(s, max_new, ex.page_size)
+            if need > ex.n_pages:
+                raise ValueError(
+                    f"prompt_len {s} + max_new {max_new} needs {need} "
+                    f"pages but the pool holds {ex.n_pages}; raise "
+                    f"cache_pages or lower max_new")
         return sched.submit(req, s, max_new, eos_id=eos_id,
                             arrival=arrival)
 

@@ -29,6 +29,11 @@ tokens, occupancy <= capacity, FIFO admission, prefill progress every
 tick, every slot freed at drain) property-testable without JAX in the
 loop.
 
+Paged executors additionally expose ``reserve(slot, req)``: admission
+claims KV pages (``PageAllocator``) before a request takes its seat, and
+blocks head-of-line while the pool is too full -- free SEATS are no
+longer sufficient, the backing pages must exist too.
+
 Token accounting matches the one-shot engine paths exactly: the first
 token of a request is sampled from its prefill logits (it counts toward
 ``max_new``), the remaining ``max_new - 1`` come from decode steps, and an
@@ -46,6 +51,57 @@ import numpy as np
 
 QUEUED, PREFILLING, RUNNING, DONE = ("queued", "prefilling", "running",
                                     "done")
+
+
+def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Frames a request's admission must reserve: whole prompt + decode
+    budget, rounded up to whole pages, never zero (the empty prompt still
+    owns the frame its first decode token lands in).  Single definition
+    shared by ``Engine.submit``'s early reject and the executor's
+    ``reserve`` backstop -- a disagreement between the two would let a
+    request pass submit and then strand the queue at its head turn."""
+    return max(1, -(-(int(prompt_len) + int(max_new)) // int(page_size)))
+
+
+class PageAllocator:
+    """Host-side free list over a shared KV page pool (paged serving).
+
+    A slot's admission RESERVES ``ceil((prompt_len + max_new) /
+    page_size)`` physical frames up front (``alloc``), so device-side
+    prefill windows and decode chunks can never run out of frames
+    mid-flight -- the deadlock-free discipline behind letting capacity
+    exceed ``n_pages // pages_per_slot`` seats.  ``free`` returns a
+    finished request's frames in O(pages).  Pure host bookkeeping, no
+    JAX: property-tested directly (tests/test_paged_cache.py)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = int(n_pages)
+        # LIFO free list: recently freed (still-warm) frames reused first
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` free frames, or None (and no change) if unavailable."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        frames = [self._free.pop() for _ in range(n)]
+        self._used.update(frames)
+        return frames
+
+    def free(self, frames: List[int]) -> None:
+        for f in frames:
+            if f not in self._used:
+                raise ValueError(f"double free of page {f}")
+            self._used.remove(f)
+            self._free.append(f)
 
 
 @dataclasses.dataclass
@@ -90,6 +146,12 @@ class Executor(Protocol):
 
     def release(self, slot: int) -> None: ...
 
+    # Optional (paged executors): claim backing resources (KV pages) for a
+    # request before it takes ``slot``; False blocks admission at the
+    # queue head until a release frees enough.  Executors without the
+    # method admit on free seats alone.
+    # def reserve(self, slot: int, req: Request) -> bool: ...
+
 
 class Scheduler:
     def __init__(self, executor: Executor):
@@ -98,10 +160,15 @@ class Scheduler:
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * executor.capacity
         self._ids = itertools.count()
-        # active-slot count per decode step, for occupancy reporting
+        # busy-slot count per executor step, for occupancy reporting
         # (bounded so a long-running server doesn't grow host memory
-        # per decode step)
+        # per decode step).  Entries count decoding slots that emitted
+        # PLUS slots that spent the tick appending prompt windows -- a
+        # PREFILLING slot is doing real work (see ``occupancy``).
         self.occupancy_trace: deque[int] = deque(maxlen=65536)
+        # prefill-busy seats per tick (diagnostics / the prefill-heavy
+        # bench section); parallel to ticks, not decode steps
+        self.prefill_trace: deque[int] = deque(maxlen=65536)
 
     # ------------------------------------------------------------------
     # submission
@@ -150,9 +217,15 @@ class Scheduler:
         admission/prefill phase decodes in the SAME tick's chunk."""
         finished: List[int] = []
         self._admit(now)
-        self._prefill_tick(finished)
+        pf_busy = self._prefill_tick(finished)
         if self.n_running:
-            self._decode_chunk(finished)
+            self._decode_chunk(finished, pf_busy)
+        elif pf_busy:
+            # prefill-only tick: decode ran zero steps but pf_busy slots
+            # did prompt-append work -- record one occupancy entry so
+            # utilization doesn't read as idle (the old accounting bug:
+            # PREFILLING slots were invisible to occupancy())
+            self.occupancy_trace.append(pf_busy)
         return finished
 
     def drain(self, now: float = float("inf")) -> List[int]:
@@ -195,21 +268,33 @@ class Scheduler:
                         None)
             if slot is None:
                 break
+            reserve = getattr(self.ex, "reserve", None)
+            if reserve is not None and not reserve(slot, req):
+                break          # backing pages exhausted: head-of-line waits
             self.queue.popleft()
             req.slot, req.status, req.prefilled = slot, PREFILLING, 0
             self.slots[slot] = req.rid
 
-    def _prefill_tick(self, finished: List[int]) -> None:
+    def _prefill_tick(self, finished: List[int]) -> int:
         """Advance every PREFILLING slot by one prompt window.  A request
         whose prompt completes samples its first token (it counts toward
         ``max_new``, exactly like the one-shot paths) and turns RUNNING --
-        or finishes outright on max_new == 1 / instant EOS."""
+        or finishes outright on max_new == 1 / instant EOS.
+
+        Returns the number of seats whose prompt-append work this tick is
+        NOT otherwise visible to occupancy: seats still prefilling after
+        the tick, plus seats that finished outright here (max_new == 1 /
+        instant EOS -- they never reach a decode chunk).  Seats that
+        turned RUNNING are excluded: they decode in the same tick's chunk
+        and would double-count."""
         seats = [(req.slot, req, req.prefilled)
                  for rid in self.slots if rid is not None
                  for req in (self.requests[rid],)
                  if req.status == PREFILLING]
         if not seats:
-            return
+            self.prefill_trace.append(0)
+            return 0
+        pf_busy = 0
         progress = self.ex.prefill_step(seats)
         for slot, (consumed, tok0) in progress.items():
             rid = self.slots[slot]
@@ -225,6 +310,7 @@ class Scheduler:
                     f"(rid {rid})")
             req.prefilled += int(consumed)
             if tok0 is None:
+                pf_busy += 1                   # still appending next tick
                 continue
             if req.prefilled < req.prompt_len:
                 raise RuntimeError(
@@ -234,8 +320,11 @@ class Scheduler:
             req.tokens.append(int(tok0))
             if req._should_finish():           # max_new == 1 or instant EOS
                 self._finish(req, finished)
+                pf_busy += 1                   # worked here, never decodes
+        self.prefill_trace.append(pf_busy)
+        return pf_busy
 
-    def _decode_chunk(self, finished: List[int]) -> None:
+    def _decode_chunk(self, finished: List[int], pf_busy: int = 0) -> None:
         cap = self.ex.capacity
         active = np.zeros((cap,), bool)
         remaining = np.zeros((cap,), np.int32)
@@ -250,7 +339,11 @@ class Scheduler:
             remaining[s] = req.remaining
             eos_ids[s] = req.eos_id
         toks, emitted = self.ex.run_chunk(active, remaining, eos_ids)
-        self.occupancy_trace.extend(int(n) for n in emitted.sum(axis=1))
+        # each decode step's busy count includes the seats concurrently
+        # streaming prompt windows this tick (disjoint from RUNNING
+        # slots, so the sum stays <= capacity)
+        self.occupancy_trace.extend(int(n) + pf_busy
+                                    for n in emitted.sum(axis=1))
         for t in range(toks.shape[0]):
             for s in np.nonzero(emitted[t])[0]:
                 rid = self.slots[s]
@@ -267,7 +360,15 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def occupancy(self) -> float:
-        """Mean fraction of slots doing useful work per decode step."""
+        """Mean fraction of slots doing useful work per executor step.
+
+        "Useful work" counts decode emissions AND prompt-window appends:
+        a slot mid-chunked-prefill is busy, not idle (the prefill-heavy
+        bench section previously misreported utilization because only
+        decode ``emitted`` steps were counted).  Prefill-only ticks
+        contribute one entry each; ticks with a decode chunk contribute
+        one entry per decode step, each including the seats that spent
+        the tick prefilling."""
         if not self.occupancy_trace:
             return 0.0
         return float(np.mean(self.occupancy_trace)) / self.ex.capacity

@@ -1,0 +1,433 @@
+"""Paged KV cache: paged==contiguous token parity across the cache
+families x chunked prefill x mid-decode recycling, the host page
+allocator's invariants (no double allocation, frees on evict, admission
+blocks when the pool is exhausted), and the Pallas paged decode kernel
+against its XLA gather lowering.
+
+The contiguous layout is the parity oracle: on the XLA fallback the paged
+read path gathers frames back into exactly the dense (B, S, ...) layout
+the contiguous cache stores, so greedy outputs must match token for
+token -- any drift means a page remap bug, not fp noise.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs as configs
+from repro.core import deploy
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.models.attention import decode_attention, gather_pages
+from repro.serving.engine import Engine
+from repro.serving.scheduler import PageAllocator, Scheduler
+
+ARCHS = ["granite-8b",          # linear KV
+         "gemma2-2b",           # ring local KV + global KV mix
+         "falcon-mamba-7b",     # SSM state
+         "recurrentgemma-2b"]   # RG-LRU + ring
+
+
+def small_model(arch="granite-8b", seed=0, **over):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32, **over)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+_CACHE = {}
+
+
+def cached_model(arch="granite-8b", **over):
+    key = (arch, tuple(sorted(over.items())))
+    if key not in _CACHE:
+        _CACHE[key] = small_model(arch, **over)
+    return _CACHE[key]
+
+
+@pytest.fixture(scope="module")
+def granite():
+    return cached_model()
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: paged == contiguous, token for token
+# ---------------------------------------------------------------------------
+
+class TestPagedParity:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_families_chunked_prefill_and_recycling(self, arch):
+        """Every cache family, exercised through the full serving life:
+        a prompt longer than the prefill window (chunked PREFILLING),
+        short prompts (the fresh fast path), and more requests than
+        slots (mid-decode recycling) -- paged greedy tokens == contiguous
+        greedy tokens for every request."""
+        cfg, params = cached_model(arch)
+        rng = np.random.default_rng(17)
+        reqs = [rng.integers(0, cfg.vocab, (1, n)) for n in (21, 5, 11)]
+        kw = dict(prefill_bucket=8, prefill_chunk_width=8, capacity=2,
+                  max_seq=32, chunk=4)
+        eng_c = Engine(params, cfg, **kw)
+        eng_p = Engine(params, cfg, paged=True, page_size=8, **kw)
+        rc = [eng_c.submit({"tokens": p}, max_new=5) for p in reqs]
+        rp = [eng_p.submit({"tokens": p}, max_new=5) for p in reqs]
+        res_c, res_p = eng_c.drain(), eng_p.drain()
+        for a, b in zip(rc, rp):
+            np.testing.assert_array_equal(res_p[b], res_c[a])
+
+    def test_generate_wrapper_parity(self, granite):
+        """Engine.generate on a paged engine == contiguous == one-shot
+        batch mode (greedy), across a two-bucket prompt batch."""
+        cfg, params = granite
+        rng = np.random.default_rng(3)
+        prompts = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (2, 13)).astype(np.int32))}
+        eng_c = Engine(params, cfg, prefill_bucket=8)
+        eng_p = Engine(params, cfg, prefill_bucket=8, paged=True,
+                       page_size=8)
+        want = eng_c.generate(dict(prompts), max_new=6, mode="batch")
+        np.testing.assert_array_equal(
+            eng_p.generate(dict(prompts), max_new=6), want)
+
+    def test_int8_kv_paged_parity(self):
+        """int8 KV pools (values + per-position scale pools) stay
+        token-identical to the contiguous int8 cache."""
+        cfg, params = cached_model("granite-8b", kv_cache_dtype="int8")
+        rng = np.random.default_rng(23)
+        prompts = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (2, 11)).astype(np.int32))}
+        kw = dict(prefill_bucket=8, prefill_chunk_width=8)
+        want = Engine(params, cfg, **kw).generate(dict(prompts), max_new=5)
+        got = Engine(params, cfg, paged=True, page_size=8,
+                     **kw).generate(dict(prompts), max_new=5)
+        np.testing.assert_array_equal(got, want)
+
+    def test_unit_prefill_chunk_decode_bitwise(self, granite):
+        """Below the engine: paged prefill_chunk windows + decode_step
+        produce BIT-identical logits to the contiguous run (the gather
+        lowering reconstructs the exact dense layout)."""
+        cfg, params = granite
+        rng = np.random.default_rng(1)
+        b, s, max_seq, w = 2, 12, 16, 4
+        toks = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
+        outs = []
+        for paged in (False, True):
+            cache = T.init_cache(cfg, b, max_seq, paged=paged, page_size=4)
+            if paged:
+                pps = max_seq // 4
+                pt = np.arange(b * pps, dtype=np.int32).reshape(b, pps)
+                cache["page_table"] = jnp.asarray(pt)
+            lengths = jnp.zeros((b,), jnp.int32)
+            logits = None
+            for start in range(0, s, w):
+                win = {"tokens": jnp.asarray(toks[:, start:start + w])}
+                logits, cache, lengths = T.prefill_chunk(
+                    params, cfg, win, cache, lengths)
+            step_logits, cache, lengths = T.decode_step(
+                params, cfg, {"tokens": jnp.argmax(logits, -1)
+                              .astype(jnp.int32)}, cache, lengths)
+            outs.append((np.asarray(logits), np.asarray(step_logits),
+                         np.asarray(lengths)))
+        for a, b_ in zip(outs[0], outs[1]):
+            np.testing.assert_array_equal(a, b_)
+
+    def test_empty_prompt_paged(self, granite):
+        """prompt_len == 0 admits, reserves pages for max_new alone,
+        samples tok0 from the padded window and finishes."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16,
+                     paged=True, page_size=8)
+        rid = eng.submit({"tokens": jnp.zeros((0,), jnp.int32)}, max_new=2)
+        res = eng.drain()
+        assert res[rid].shape == (2,)
+        assert eng._sched.ex.allocator.n_free == eng._sched.ex.n_pages
+
+
+# ---------------------------------------------------------------------------
+# page allocator + admission
+# ---------------------------------------------------------------------------
+
+class TestPageAllocator:
+    @given(st.integers(1, 64), st.integers(0, 10 ** 6))
+    @settings(max_examples=20, deadline=None)
+    def test_random_alloc_free_invariants(self, n_pages, seed):
+        """No frame is ever handed out twice while live; alloc fails iff
+        the request exceeds the free count (and then changes nothing);
+        frees return frames for reuse; double frees raise."""
+        import random
+        rnd = random.Random(seed)
+        alloc = PageAllocator(n_pages)
+        live = {}
+        for i in range(40):
+            if rnd.random() < 0.6:
+                want = rnd.randint(0, n_pages)
+                before = alloc.n_free
+                got = alloc.alloc(want)
+                if want > before:
+                    assert got is None and alloc.n_free == before
+                else:
+                    assert got is not None and len(got) == want
+                    for f in got:
+                        assert 0 <= f < n_pages
+                        assert all(f not in v for v in live.values()), \
+                            "double allocation"
+                    live[i] = got
+            elif live:
+                key = rnd.choice(list(live))
+                alloc.free(live.pop(key))
+        for key in list(live):
+            alloc.free(live.pop(key))
+        assert alloc.n_free == n_pages
+        with pytest.raises(ValueError, match="double free"):
+            alloc.free([0, 0])
+
+    def test_admission_blocks_until_pages_free(self):
+        """Scheduler-level: a reserve()-bearing executor gates admission
+        on pages, head-of-line -- the second request waits for the first
+        release even though a SEAT is free the whole time."""
+
+        class PagedScripted:
+            capacity, chunk = 2, 2
+
+            def __init__(self):
+                self.alloc = PageAllocator(4)
+                self.frames = {}
+                self.admitted = []
+                self.slots = {}
+
+            def reserve(self, slot, req):
+                got = self.alloc.alloc(3)      # every request needs 3/4
+                if got is None:
+                    return False
+                self.frames[slot] = got
+                return True
+
+            def prefill_step(self, seats):
+                out = {}
+                for slot, req, start in seats:
+                    if start == 0:
+                        self.admitted.append(req.rid)
+                        self.slots[slot] = req.rid
+                    out[slot] = (req.prompt_len, req.rid * 100)
+                return out
+
+            def run_chunk(self, active, remaining, eos_ids):
+                toks = np.zeros((self.chunk, self.capacity), np.int32)
+                emitted = np.zeros((self.chunk, self.capacity), bool)
+                alive, rem = active.copy(), remaining.copy()
+                for t in range(self.chunk):
+                    for s in range(self.capacity):
+                        if not alive[s]:
+                            continue
+                        toks[t, s] = self.slots[s] * 100 + 1
+                        emitted[t, s] = True
+                        rem[s] -= 1
+                        alive[s] = rem[s] > 0
+                return toks, emitted
+
+            def release(self, slot):
+                self.alloc.free(self.frames.pop(slot))
+
+        ex = PagedScripted()
+        sched = Scheduler(ex)
+        sched.submit({"tokens": None}, prompt_len=2, max_new=3)
+        sched.submit({"tokens": None}, prompt_len=2, max_new=3)
+        sched.tick()
+        # seat 1 is free but the pool (1 frame left) blocks request 1
+        assert ex.admitted == [0]
+        assert sched.requests[1].status == "queued"
+        sched.drain()
+        assert ex.admitted == [0, 1]
+        assert ex.alloc.n_free == 4
+        assert sched.requests[1].done
+
+    def test_engine_pool_smaller_than_capacity(self, granite):
+        """Engine-level exhaustion: capacity 3 seats over a pool holding
+        2 full-length requests -- all requests complete correctly and the
+        third is admitted only after an eviction frees frames."""
+        cfg, params = granite
+        rng = np.random.default_rng(31)
+        reqs = [rng.integers(0, cfg.vocab, (1, 10)) for _ in range(3)]
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=3, max_seq=16,
+                     chunk=2, paged=True, page_size=8, cache_pages=4)
+        rids = [eng.submit({"tokens": p}, max_new=4) for p in reqs]
+        res = eng.drain()
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        for rid, p in zip(rids, reqs):
+            fresh = oracle.generate({"tokens": jnp.asarray(p)}, max_new=4,
+                                    mode="batch")[0]
+            np.testing.assert_array_equal(res[rid], fresh)
+        ex = eng._sched.ex
+        assert ex.allocator.n_free == ex.n_pages
+
+    def test_oversized_request_rejected_at_submit(self, granite):
+        """A request that could never fit the pool is rejected at submit
+        time -- a late raise at its queue-head turn would strand every
+        request behind it -- and valid neighbors still complete."""
+        cfg, params = granite
+        rng = np.random.default_rng(37)
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=2, max_seq=32,
+                     paged=True, page_size=8, cache_pages=2)
+        p_ok = rng.integers(0, cfg.vocab, (1, 6))
+        rid = eng.submit({"tokens": p_ok}, max_new=4)
+        with pytest.raises(ValueError, match="pool"):
+            eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=4)
+        res = eng.drain()
+        oracle = Engine(params, cfg, prefill_bucket=8)
+        np.testing.assert_array_equal(
+            res[rid],
+            oracle.generate({"tokens": jnp.asarray(p_ok)}, max_new=4,
+                            mode="batch")[0])
+
+    def test_oversized_request_backstop_for_direct_scheduler(self, granite):
+        """Callers driving the Scheduler directly still hit the reserve()
+        guard instead of a silent admission deadlock."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=2,
+                     paged=True, page_size=8, cache_pages=2)
+        ex = eng._executor(capacity=2, max_seq=32)
+        sched = Scheduler(ex)
+        sched.submit({"tokens": np.zeros((1, 20), np.int32)},
+                     prompt_len=20, max_new=4)
+        with pytest.raises(ValueError, match="pool"):
+            sched.drain()
+
+    def test_evict_resets_page_table_only(self, granite):
+        """cache_slot_evict in paged mode: the slot's page-table row goes
+        back to the sentinel, pools are untouched (O(pages) eviction),
+        batch-major leaves are zeroed."""
+        cfg, params = granite
+        cache = T.init_cache(cfg, 2, 16, paged=True, page_size=4)
+        cache["page_table"] = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]],
+                                          jnp.int32)
+        rng = np.random.default_rng(0)
+        cache = {k: (jax.tree.map(lambda l: jnp.asarray(
+            rng.normal(size=l.shape).astype(np.asarray(l).dtype)), v)
+            if k != "page_table" else v) for k, v in cache.items()}
+        out = deploy.cache_slot_evict(cfg, cache, 0)
+        pt = np.asarray(out["page_table"])
+        assert (pt[0] >= T.PAGE_SENTINEL).all()
+        np.testing.assert_array_equal(pt[1], [4, 5, 6, 7])
+        for a, b in zip(jax.tree.leaves(out["period"]),
+                        jax.tree.leaves(cache["period"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cache_pages_zero_rejected(self, granite):
+        """cache_pages=0 is an error, not a silent fall-through to the
+        full default pool."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16,
+                     paged=True, page_size=8, cache_pages=0)
+        with pytest.raises(ValueError, match="n_pages"):
+            eng._executor(capacity=1, max_seq=16)
+
+    def test_slot_ops_reject_paged(self, granite):
+        cfg, params = granite
+        cache = T.init_cache(cfg, 2, 16, paged=True, page_size=4)
+        with pytest.raises(NotImplementedError):
+            deploy.cache_slot_slice(cfg, cache, 0)
+        with pytest.raises(NotImplementedError):
+            deploy.cache_slot_insert(cfg, cache, cache, 0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged decode kernel (interpret) vs the XLA gather lowering
+# ---------------------------------------------------------------------------
+
+class TestPagedDecodeKernel:
+    @pytest.mark.parametrize("window,softcap", [(None, None), (6, None),
+                                                (None, 5.0), (6, 5.0)])
+    def test_matches_gather_lowering(self, window, softcap):
+        from repro.kernels.paged_decode import paged_flash_decode
+        rng = np.random.default_rng(0)
+        b, h, hkv, d, ps, p, npg = 3, 4, 2, 8, 4, 6, 18
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        kp = jnp.asarray(rng.normal(size=(npg, ps, hkv, d))
+                         .astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(npg, ps, hkv, d))
+                         .astype(np.float32))
+        pt = jnp.asarray(rng.permutation(npg)[:b * p].reshape(b, p)
+                         .astype(np.int32))
+        length = jnp.asarray([5, 17, 1], jnp.int32)
+        out = paged_flash_decode(q, kp, vp, pt, length, window=window,
+                                 softcap=softcap, interpret=True)
+        ref = decode_attention(q, gather_pages(kp, pt),
+                               gather_pages(vp, pt), length,
+                               window=window, attn_softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_int8_pools_dequantize_in_kernel(self):
+        """int8 K/V pools + per-position scale pools: the kernel's
+        in-VMEM dequant matches gather-then-dequant."""
+        from repro.kernels.paged_decode import paged_flash_decode
+        rng = np.random.default_rng(7)
+        b, h, hkv, d, ps, p, npg = 2, 4, 2, 8, 4, 4, 10
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        kq = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d))
+                         .astype(np.int8))
+        vq = jnp.asarray(rng.integers(-127, 128, (npg, ps, hkv, d))
+                         .astype(np.int8))
+        ks = jnp.asarray(rng.uniform(0.01, 0.1, (npg, ps, hkv))
+                         .astype(np.float32))
+        vs = jnp.asarray(rng.uniform(0.01, 0.1, (npg, ps, hkv))
+                         .astype(np.float32))
+        pt = jnp.asarray(rng.permutation(npg)[:b * p].reshape(b, p)
+                         .astype(np.int32))
+        length = jnp.asarray([13, 3], jnp.int32)
+        out = paged_flash_decode(q, kq, vq, pt, length, k_scale=ks,
+                                 v_scale=vs, interpret=True)
+        kd = (gather_pages(kq, pt).astype(jnp.float32)
+              * gather_pages(ks, pt)[..., None])
+        vd = (gather_pages(vq, pt).astype(jnp.float32)
+              * gather_pages(vs, pt)[..., None])
+        ref = decode_attention(q, kd, vd, length)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_sentinel_pages_are_masked(self):
+        """Page-table entries past the reservation carry the sentinel;
+        the kernel clamps the frame id and the length mask keeps the junk
+        out of the softmax."""
+        from repro.kernels.paged_decode import paged_flash_decode
+        rng = np.random.default_rng(4)
+        b, h, hkv, d, ps, p, npg = 2, 2, 1, 8, 4, 4, 8
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        kp = jnp.asarray(rng.normal(size=(npg, ps, hkv, d))
+                         .astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(npg, ps, hkv, d))
+                         .astype(np.float32))
+        pt = np.full((b, p), T.PAGE_SENTINEL, np.int32)
+        pt[0, :2] = [3, 5]
+        pt[1, :1] = [1]
+        length = jnp.asarray([7, 2], jnp.int32)
+        out = paged_flash_decode(q, kp, vp, jnp.asarray(pt), length,
+                                 interpret=True)
+        ref = decode_attention(q, gather_pages(kp, jnp.asarray(pt)),
+                               gather_pages(vp, jnp.asarray(pt)), length)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestGatherPages:
+    def test_roundtrip_layout(self):
+        """gather_pages reconstructs exactly the contiguous layout for an
+        identity page table, and remaps frames for a permuted one."""
+        rng = np.random.default_rng(2)
+        npg, ps = 6, 4
+        pool = jnp.asarray(rng.normal(size=(npg, ps, 2, 3))
+                           .astype(np.float32))
+        ident = jnp.arange(6, dtype=jnp.int32).reshape(1, 6)
+        np.testing.assert_array_equal(
+            np.asarray(gather_pages(pool, ident))[0],
+            np.asarray(pool).reshape(npg * ps, 2, 3))
+        perm = jnp.asarray([[2, 0, 1]], jnp.int32)
+        got = np.asarray(gather_pages(pool, perm))[0]
+        want = np.concatenate([np.asarray(pool)[i] for i in (2, 0, 1)])
+        np.testing.assert_array_equal(got, want)

@@ -10,6 +10,7 @@ request's tokens, and slot occupancy never exceeds capacity.
 
 import dataclasses
 import random
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -203,6 +204,61 @@ class TestSchedulerInvariants:
         assert sched.requests[0].tokens == streams[0]
         assert sched.requests[1].tokens == streams[1]
 
+    def test_occupancy_counts_prefilling_slots(self):
+        """Regression: occupancy() only counted decode ``emitted`` steps,
+        so a slot streaming a long prompt window-by-window read as IDLE
+        and the prefill-heavy bench misreported utilization.  With one
+        slot decoding and one prefilling every tick, occupancy must be
+        near-full, not ~0.5."""
+        streams = {0: stream(0, 12), 1: stream(1, 2)}
+        ex = ScriptedExecutor(capacity=2, chunk=2, streams=streams,
+                              prefill_width=2)
+        sched = Scheduler(ex)
+        sched.submit(None, prompt_len=1, max_new=12)
+        sched.submit(None, prompt_len=12, max_new=2)   # 6 windows of 2
+        sched.drain()
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
+        # ticks 1-5: slot 0 emits 2/chunk while slot 1 appends windows
+        # (both busy); tick 6: slot 1 completes and both die on step 1
+        assert list(sched.occupancy_trace) == [2, 2] * 5 + [2, 0]
+        assert np.isclose(sched.occupancy(), 11 / 12)
+        # the parallel prefill trace records the busy prefill seats
+        assert list(sched.prefill_trace) == [1] * 5 + [0]
+        assert all(n <= ex.capacity for n in sched.occupancy_trace)
+
+    def test_prefill_only_ticks_count_as_busy(self):
+        """A tick with no RUNNING slot but active prompt streaming still
+        contributes occupancy (previously such ticks vanished from the
+        trace entirely)."""
+        streams = {0: stream(0, 2)}
+        ex = ScriptedExecutor(capacity=1, chunk=2, streams=streams,
+                              prefill_width=2)
+        sched = Scheduler(ex)
+        sched.submit(None, prompt_len=6, max_new=2)    # 3 windows, alone
+        sched.tick()
+        sched.tick()
+        # two prefill-only ticks: one busy slot each, no decode steps
+        assert list(sched.occupancy_trace) == [1, 1]
+        sched.drain()
+        assert sched.requests[0].tokens == streams[0]
+
+    def test_prefill_finish_outright_counts_as_busy(self):
+        """max_new == 1 requests do all their work in the prefill phase
+        (append + tok0, never a decode chunk); occupancy must count those
+        ticks as busy, not idle."""
+        streams = {0: stream(0, 1), 1: stream(1, 1)}
+        ex = ScriptedExecutor(capacity=1, chunk=2, streams=streams)
+        sched = Scheduler(ex)
+        sched.submit(None, prompt_len=3, max_new=1)
+        sched.submit(None, prompt_len=3, max_new=1)
+        sched.drain()
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
+        # two ticks, each: one seat appends its whole prompt and finishes
+        assert list(sched.occupancy_trace) == [1, 1]
+        assert sched.occupancy() == 1.0
+
     def test_mid_decode_recycling(self):
         """A slot freed mid-trace is recycled while other slots keep
         decoding; the newcomer's stream is untouched by the tenant swap."""
@@ -345,6 +401,51 @@ class TestPromptAdmissionPolicy:
         rid = eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=2)
         res = eng.drain()
         assert res[rid].shape == (2,)
+
+    def test_max_prompt_len_warns_exactly_once(self, granite):
+        """Regression: the deprecation warning must fire exactly once per
+        Engine, not on every submit/generate call."""
+        cfg, params = granite
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16,
+                         capacity=1, max_seq=32)
+            for _ in range(3):
+                eng.submit({"tokens": jnp.zeros((4,), jnp.int32)},
+                           max_new=2)
+            eng.drain()
+            eng.generate({"tokens": jnp.zeros((1, 4), jnp.int32)},
+                         max_new=2)
+        dep = [w for w in rec
+               if issubclass(w.category, DeprecationWarning)
+               and "max_prompt_len" in str(w.message)]
+        assert len(dep) == 1, \
+            f"expected exactly one deprecation warning, got {len(dep)}"
+        # stacklevel points at the caller, not engine internals
+        assert dep[0].filename == __file__
+
+    def test_empty_prompt_generate_path(self, granite):
+        """End-to-end empty prompt through generate(): a (B, 0) token
+        batch admits via the degenerate window, samples tok0 and emits
+        exactly max_new tokens, matching repeated runs."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8)
+        prompts = {"tokens": jnp.zeros((2, 0), jnp.int32)}
+        a = eng.generate(dict(prompts), max_new=3)
+        b = eng.generate(dict(prompts), max_new=3)
+        assert a.shape == (2, 3)
+        np.testing.assert_array_equal(a, b)
+        assert a.max() < cfg.vocab
+
+    def test_empty_prompt_max_new_one(self, granite):
+        """prompt_len == 0 with max_new == 1: tok0 is the entire output;
+        the request must finish in the prefill phase without tripping the
+        no-progress guard."""
+        cfg, params = granite
+        eng = Engine(params, cfg, prefill_bucket=8, capacity=1, max_seq=16)
+        rid = eng.submit({"tokens": jnp.zeros((0,), jnp.int32)}, max_new=1)
+        res = eng.drain()
+        assert res[rid].shape == (1,)
 
     def test_empty_prompt_completes(self, granite):
         """Degenerate prompt_len == 0: the admission window consumes zero
