@@ -5,10 +5,10 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 # own matrix entry with a 120s per-test ceiling)
 SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_serving_e2e.py tests/test_chunked_prefill.py \
-                 tests/test_paged_cache.py
+                 tests/test_paged_cache.py tests/test_serving_fuzz.py
 
-.PHONY: test test-unit test-serving bench-smoke bench-smoke-continuous \
-        bench-serving
+.PHONY: test test-unit test-serving test-fuzz bench-smoke \
+        bench-smoke-continuous bench-serving
 
 test:            ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -21,12 +21,16 @@ test-serving:    ## serving tier: timings reported, >120s per test fails
 	$(PYTHON) -m pytest -q --durations=10 --max-test-seconds=120 \
 	  $(SERVING_TESTS)
 
+test-fuzz:       ## cross-mode differential serving fuzzer, bigger budget
+	FUZZ_EXAMPLES=8 $(PYTHON) -m pytest -q --durations=10 \
+	  tests/test_serving_fuzz.py
+
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke
 
-bench-smoke-continuous:  ## continuous + prefill-heavy + paged, tiny shapes
+bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
-	  --prefill-heavy --paged
+	  --prefill-heavy --paged --share-prefix
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

@@ -36,6 +36,16 @@ block-paged KV cache at EQUAL cache memory but 2x the slot capacity
 double the seat count is the acceptance headline for gather-free
 long-context slots.
 
+``--share-prefix`` replays a trace of N requests over K SYSTEM PROMPTS
+(every request = one of K page-aligned prefixes + a unique suffix)
+through the paged cache with and without copy-on-write prefix sharing,
+on a pool deliberately sized at HALF capacity -- recorded as the
+``continuous_shared`` section.  Without sharing the duplicated prefix
+pages exhaust the pool and admission blocks; with sharing each prefix
+is charged once (refcount > 1) and its prefill windows are skipped, so
+the shared run admits more seats concurrently and streams fewer prefill
+windows at equal cache memory.
+
 All traces derive from ``--seed`` (default 0), which is recorded in the
 JSON -- so cross-PR deltas in BENCH_serving.json compare identical
 workloads instead of mixing trace noise with real regressions.
@@ -182,9 +192,11 @@ def _continuous_once(ex, trace, realtime: bool) -> tuple:
     """Replay the trace through a fresh scheduler over a warm executor.
     ``realtime=False`` ignores arrival times (used for the compile
     warmup); otherwise requests become admissible as the wall clock
-    passes their arrival stamps."""
+    passes their arrival stamps.  Returns (wall, tokens, occupancy,
+    peak resident seats)."""
     sched = Scheduler(ex)
     _submit_trace(sched, trace, with_arrivals=realtime)
+    peak = 0
     t0 = time.perf_counter()
     while sched.pending:
         now = time.perf_counter() - t0
@@ -194,9 +206,10 @@ def _continuous_once(ex, trace, realtime: bool) -> tuple:
                 time.sleep(nxt - now)
                 now = nxt
         sched.tick(now)
+        peak = max(peak, sched.n_active)
     wall = time.perf_counter() - t0
     n_toks = sum(len(r.tokens) for r in sched.requests.values())
-    return wall, n_toks, sched.occupancy()
+    return wall, n_toks, sched.occupancy(), peak
 
 
 def _oneshot_once(eng: Engine, trace) -> tuple:
@@ -233,7 +246,7 @@ def _measure_trace(eng: Engine, ex, trace, repeats: int, label: str) -> dict:
         key=lambda t: t[0])
     cont = [_continuous_once(ex, trace, realtime=True)
             for _ in range(repeats)]
-    cont_wall, cont_tokens, occupancy = min(cont, key=lambda t: t[0])
+    cont_wall, cont_tokens, occupancy, _ = min(cont, key=lambda t: t[0])
     assert cont_tokens == total_requested, \
         f"{label}: continuous emitted {cont_tokens}, " \
         f"requested {total_requested}"
@@ -374,10 +387,10 @@ def run_paged(cfg, q, args) -> dict:
     _continuous_once(ex_p, trace, realtime=False)
     cont = [_continuous_once(ex_c, trace, realtime=True)
             for _ in range(args.repeats)]
-    c_wall, c_tokens, c_occ = min(cont, key=lambda t: t[0])
+    c_wall, c_tokens, c_occ, _ = min(cont, key=lambda t: t[0])
     pag = [_continuous_once(ex_p, trace, realtime=True)
            for _ in range(args.repeats)]
-    p_wall, p_tokens, p_occ = min(pag, key=lambda t: t[0])
+    p_wall, p_tokens, p_occ, _ = min(pag, key=lambda t: t[0])
     assert c_tokens == total and p_tokens == total, \
         f"paged trace dropped tokens: {c_tokens}/{p_tokens}/{total}"
     assert ex_p.allocator.n_free == ex_p.n_pages, "pages leaked"
@@ -407,6 +420,122 @@ def run_paged(cfg, q, args) -> dict:
     }
 
 
+def run_shared(cfg, q, args) -> dict:
+    """Shared-prefix trace: N requests over K system prompts (the
+    dominant real-traffic shape), replayed through the paged cache with
+    and without ``share_prefix`` at EQUAL capacity and cache memory.
+    Sharing maps each repeated system prefix's pages at refcount + 1
+    instead of re-reserving and re-prefilling them, so the shared run
+    must admit more requests concurrently (a tight pool no longer blocks
+    on duplicated prefix pages) and/or stream fewer prefill windows --
+    the ``continuous_shared`` acceptance headline."""
+    rng = np.random.default_rng(args.seed + 41)
+    if args.smoke:
+        n, n_sys, capacity, chunk, page_size = 6, 2, 4, 4, 16
+        max_seq, sys_len, sfx_hi, max_new_range = 96, 48, 12, (4, 8)
+        prefill_bucket, chunk_width, mean_gap = 16, 16, 0.005
+    else:
+        n, n_sys, capacity, chunk, page_size = 12, 3, 6, 8, 16
+        max_seq, sys_len, sfx_hi, max_new_range = 192, 96, 24, (8, 16)
+        prefill_bucket, chunk_width, mean_gap = 32, 32, 0.02
+    # pool sized for HALF the seats at full length: without sharing the
+    # duplicated system prefixes exhaust it and admission blocks; with
+    # sharing the prefix pages are charged once
+    pool = (capacity // 2) * (max_seq // page_size)
+    systems = [rng.integers(0, cfg.vocab, (sys_len,), dtype=np.int64)
+               for _ in range(n_sys)]
+    gaps = rng.exponential(mean_gap, n)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    lo, hi = max_new_range
+    trace = []
+    for i in range(n):
+        sfx = rng.integers(0, cfg.vocab, (int(rng.integers(1, sfx_hi + 1)),),
+                           dtype=np.int64)
+        prompt = np.concatenate([systems[i % n_sys], sfx])
+        trace.append({"arrival": float(arrivals[i]),
+                      "prompt": prompt.astype(np.int32)[None],
+                      "max_new": int(rng.integers(lo, hi + 1))})
+
+    packed = deploy.pack_params(q)
+    kw = dict(prefill_bucket=prefill_bucket, decode_bucket=16, chunk=chunk,
+              prefill_chunk_width=chunk_width, capacity=capacity,
+              paged=True, page_size=page_size, cache_pages=pool)
+    eng_p = Engine(packed, cfg, **kw)
+    ex_p = eng_p._executor(capacity=capacity, max_seq=max_seq)
+    eng_s = Engine(packed, cfg, share_prefix=True, **kw)
+    ex_s = eng_s._executor(capacity=capacity, max_seq=max_seq)
+
+    print(f"[shared-prefix] {n} requests over {n_sys} system prompts "
+          f"({sys_len} tokens each), {capacity} seats over {pool} x "
+          f"{page_size}-token pages (half-capacity pool)")
+
+    total_prompt = sum(r["prompt"].shape[1] for r in trace)
+
+    def measure(ex):
+        """One realtime replay plus the sharing headlines, all as
+        PER-REPLAY deltas (the executor's counters are cumulative across
+        warmup and repeats; deltas are what one trace actually did)."""
+        windows0 = ex.append_calls        # monotonic (append_log caps)
+        skipped0 = ex.skipped_tokens if ex.share else 0
+        forks0 = ex.forks if ex.share else 0
+        wall, toks, occ, peak = _continuous_once(ex, trace, realtime=True)
+        skipped = (ex.skipped_tokens if ex.share else 0) - skipped0
+        return {"wall_s": wall, "tokens": toks,
+                "peak_resident": peak,
+                "prefill_windows": ex.append_calls - windows0,
+                # exact: every prompt token is either appended by a
+                # prefill window or skipped via a shared mapping
+                "prompt_tokens_appended": total_prompt - skipped,
+                "prompt_tokens_skipped": skipped,
+                "forks": (ex.forks if ex.share else 0) - forks0,
+                "slot_occupancy": occ}
+
+    total = sum(r["max_new"] for r in trace)
+    for ex in (ex_p, ex_s):                     # warm compiles + index
+        _continuous_once(ex, trace, realtime=False)
+    p = min((measure(ex_p) for _ in range(args.repeats)),
+            key=lambda r: r["wall_s"])
+    s = min((measure(ex_s) for _ in range(args.repeats)),
+            key=lambda r: r["wall_s"])
+    assert p["tokens"] == total and s["tokens"] == total, \
+        f"shared trace dropped tokens: {p['tokens']}/{s['tokens']}/{total}"
+    for name, ex in (("paged", ex_p), ("shared", ex_s)):
+        live = ex.allocator.n_live
+        pins = len(ex.prefix) if ex.share else 0
+        assert live == pins, f"{name}: {live} frames leaked ({pins} pins)"
+    p_tps, s_tps = total / p["wall_s"], total / s["wall_s"]
+    print(f"  paged      {p['wall_s']:6.3f}s  {p_tps:8.1f} tok/s  "
+          f"(peak {p['peak_resident']} seats, "
+          f"{p['prefill_windows']} prefill windows)")
+    print(f"  +share     {s['wall_s']:6.3f}s  {s_tps:8.1f} tok/s  "
+          f"(peak {s['peak_resident']} seats, "
+          f"{s['prefill_windows']} prefill windows, "
+          f"{s['prompt_tokens_skipped']}/{total_prompt} prompt tokens "
+          f"skipped)  -> {s_tps / p_tps:.2f}x")
+    keys = ("wall_s", "peak_resident", "prefill_windows",
+            "prompt_tokens_appended", "prompt_tokens_skipped", "forks",
+            "slot_occupancy")
+    return {
+        "seed": args.seed,
+        "n_requests": n,
+        "n_system_prompts": n_sys,
+        "system_prompt_len": sys_len,
+        "max_seq": max_seq,
+        "page_size": page_size,
+        "n_pages": pool,
+        "capacity": capacity,
+        "max_new_range": list(max_new_range),
+        "total_new_tokens": total,
+        "total_prompt_tokens": total_prompt,
+        "paged": {k: p[k] for k in keys},
+        "shared": {k: s[k] for k in keys},
+        "shared_speedup_vs_paged": s_tps / p_tps,
+        "shared_admits_more": (s["peak_resident"] > p["peak_resident"]
+                               or s["prefill_windows"]
+                               < p["prefill_windows"]),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -422,6 +551,11 @@ def main() -> None:
                     help="also replay the long-context trace through the "
                          "block-paged cache at 2x slot capacity / equal "
                          "memory -> continuous_paged section")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="also replay a K-system-prompt trace through the "
+                         "paged cache with copy-on-write prefix sharing "
+                         "on a half-capacity pool -> continuous_shared "
+                         "section")
     ap.add_argument("--seed", type=int, default=0,
                     help="root seed for every synthetic trace (recorded "
                          "in the JSON so cross-PR deltas replay the same "
@@ -472,6 +606,8 @@ def main() -> None:
                 cfg, q, args)
         if args.paged:
             report["continuous_paged"] = run_paged(cfg, q, args)
+        if args.share_prefix:
+            report["continuous_shared"] = run_shared(cfg, q, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

@@ -322,6 +322,39 @@ def cache_rows_scatter(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
     return jax.tree.map(wr, cache, sub, axes_tree)
 
 
+def cache_page_copy(cfg, cache: Any, src, dst) -> Any:
+    """Duplicate physical frame ``src`` into frame ``dst`` in EVERY paged
+    pool leaf (K/V and, in int8 mode, their scale pools) -- the
+    fork-on-write data move: before a write may land in a refcount-shared
+    frame, the frame is copied to a private one and the single page-table
+    entry remapped (serving.batch.fork_page / the admission-time fork in
+    serving.engine).  The page table and every batch-major leaf pass
+    through untouched; non-paged caches are returned as-is.
+
+    On TPU each leaf's frame is copied through the Pallas DMA primitive
+    (kernels.paged_decode.page_copy -- one frame of VMEM residency, no
+    dense gather); the XLA lowering ``pool.at[dst].set(pool[src])`` is
+    bitwise-identical and serves everywhere else."""
+    if not _is_paged(cache):
+        return cache
+    from ..kernels.ops import default_interpret
+    use_kernel = not default_interpret()
+
+    def cp(leaf, axes):
+        if "pages" not in axes:
+            return leaf
+        ppos = axes.index("pages")                    # 0 or 1 (layers)
+        if use_kernel:
+            from ..kernels.paged_decode import page_copy
+            return page_copy(leaf, src, dst, stacked=ppos == 1,
+                             interpret=False)
+        if ppos == 0:
+            return leaf.at[dst].set(leaf[src])
+        return leaf.at[:, dst].set(leaf[:, src])
+
+    return jax.tree.map(cp, cache, _cache_axes(cfg, cache))
+
+
 def cache_rows_scatter_dense(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
                              mask: Optional[jnp.ndarray] = None) -> Any:
     """Write a CONTIGUOUS batch-K sub-cache (the ``T.prefill`` layout:

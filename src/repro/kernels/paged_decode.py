@@ -194,3 +194,80 @@ def paged_flash_decode(q: jnp.ndarray,            # (B, H, D)
         interpret=interpret,
     )(page_table.astype(jnp.int32), length.astype(jnp.int32), *args)
     return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# page copy (copy-on-write fork primitive)
+# ---------------------------------------------------------------------------
+
+def _page_copy_kernel(idx_ref, pool_ref, out_ref, *, n_pages):
+    """Duplicate physical frame ``idx[0]`` into frame ``idx[1]`` of a
+    pool left in HBM (``memory_space=ANY``): one frame DMA'd into VMEM
+    scratch and back out -- the same per-frame DMA discipline as
+    ``_paged_kernel``, so VMEM residency is one frame regardless of pool
+    size.  The pool aliases the output, so every other frame passes
+    through untouched."""
+    lyr = pl.program_id(0)
+    src = jnp.minimum(idx_ref[0], n_pages - 1)
+    dst = jnp.minimum(idx_ref[1], n_pages - 1)
+
+    def run(scratch, sems):
+        cp_in = pltpu.make_async_copy(pool_ref.at[lyr, src], scratch,
+                                      sems.at[0])
+        cp_in.start()
+        cp_in.wait()
+        cp_out = pltpu.make_async_copy(scratch, out_ref.at[lyr, dst],
+                                       sems.at[1])
+        cp_out.start()
+        cp_out.wait()
+
+    pl.run_scoped(run,
+                  pltpu.VMEM(pool_ref.shape[2:], pool_ref.dtype),
+                  pltpu.SemaphoreType.DMA((2,)))
+
+
+@functools.partial(jax.jit, static_argnames=("stacked", "interpret"))
+def page_copy(pool: jnp.ndarray, src, dst,
+              stacked: bool = False,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Copy one physical frame of a page pool: ``pool[.., dst] =
+    pool[.., src]``, everything else unchanged.
+
+    ``pool``: ``(n_pages, page_size, *rest)``, or with a leading layer
+    stack when ``stacked`` (``(layers, n_pages, page_size, *rest)`` --
+    the shape must disambiguate, hence the explicit flag).  Works for
+    K/V pools and the int8 mode's scale pools alike (``rest`` is
+    whatever the frame carries).  This is the fork-on-write primitive:
+    a decode write aimed at a refcount-shared frame first duplicates the
+    frame, then the single page-table entry is remapped to the copy
+    (serving.batch.fork_page) -- the sharer never observes the write.
+
+    Bitwise-identical to the XLA lowering ``pool.at[dst].set(pool[src])``
+    (asserted in tests/test_paged_cache.py); ``interpret=None`` follows
+    ``kernels.ops.default_interpret()``."""
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    shape = pool.shape
+    lead = shape[0] if stacked else 1
+    body = shape[1:] if stacked else shape
+    n_pages, ps = body[0], body[1]
+    rest = int(np.prod(body[2:], dtype=np.int64)) if body[2:] else 1
+    flat = pool.reshape(lead, n_pages, ps, rest)
+    idx = jnp.stack([jnp.asarray(src, jnp.int32),
+                     jnp.asarray(dst, jnp.int32)])
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(lead,),
+        in_specs=[any_spec],
+        out_specs=any_spec,
+    )
+    out = pl.pallas_call(
+        functools.partial(_page_copy_kernel, n_pages=n_pages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(idx, flat)
+    return out.reshape(shape)

@@ -445,7 +445,8 @@ def _mask_rows(active: Optional[jnp.ndarray], new: jnp.ndarray,
 def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray,
                  active: Optional[jnp.ndarray] = None,
-                 page_table: Optional[jnp.ndarray] = None):
+                 page_table: Optional[jnp.ndarray] = None,
+                 write_floor: Optional[jnp.ndarray] = None):
     """One block, one token.  x: (B, d).  Returns (x, new_cache).
 
     ``active`` (optional (B,) bool) freezes the cache rows of dead slots:
@@ -457,7 +458,14 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     shared pools -- the new token's K/V scatters to the slot's physical
     frame (inactive or unreserved rows route to the sentinel and drop)
     and attention reads page-table-indirect (Pallas kernel on TPU, XLA
-    gather lowering elsewhere)."""
+    gather lowering elsewhere).
+
+    ``write_floor`` (optional (B,) int32, paged mode only): the
+    shared-prefix write guard -- positions below a row's floor live in
+    refcount-shared frames other page tables map (copy-on-write prefix
+    sharing, see docs/serving.md), so writes aimed there route to the
+    sentinel and drop.  The READ path is unchanged: shared frames are
+    ordinary page-table indirection."""
     if kind == "mamba":
         dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
                             cfg.conv_k)
@@ -502,6 +510,8 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         ok = lengths < p_max * ps
         if active is not None:
             ok &= active
+        if write_floor is not None:
+            ok &= lengths >= write_floor       # shared frames: read-only
         phys = jnp.where(ok, phys, jnp.int32(PAGE_SENTINEL))  # OOB -> drop
         off = lengths % ps
         window = cfg.local_window if kind == "attn_local" else None
@@ -591,7 +601,8 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
 def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray, positions: jnp.ndarray,
                  valid: jnp.ndarray,
-                 page_table: Optional[jnp.ndarray] = None):
+                 page_table: Optional[jnp.ndarray] = None,
+                 write_floor: Optional[jnp.ndarray] = None):
     """Attention block over a (B, W) window appended at ``positions``.
 
     Global attention writes the whole window into the cache in one masked
@@ -626,6 +637,8 @@ def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         logical = jnp.clip(positions // ps, 0, p_max - 1)       # (B, W)
         phys = jnp.take_along_axis(page_table, logical, axis=1)
         ok = valid & (positions < p_max * ps)
+        if write_floor is not None:
+            ok &= positions >= write_floor[:, None]  # shared: read-only
         phys = jnp.where(ok, phys, jnp.int32(PAGE_SENTINEL))
         off = positions % ps
 
@@ -750,7 +763,8 @@ def _append_recurrent(decode_fn, x: jnp.ndarray, state,
 def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                  cache, lengths: jnp.ndarray, positions: jnp.ndarray,
                  valid: jnp.ndarray,
-                 page_table: Optional[jnp.ndarray] = None):
+                 page_table: Optional[jnp.ndarray] = None,
+                 write_floor: Optional[jnp.ndarray] = None):
     """One block over a W-token window appended to an existing cache.
 
     x: (B, W, d); ``lengths``: (B,) tokens already in the cache (the
@@ -758,7 +772,8 @@ def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     ``valid``: (B, W) bool -- False slots (padding past a row's chunk
     length, or rows whose slot is not being appended) compute junk but
     never touch cache/state, mirroring the ``active`` gate of
-    ``block_decode``.  Returns (x, new_cache_entry)."""
+    ``block_decode``; ``write_floor`` is the paged shared-prefix write
+    guard (see ``block_decode``).  Returns (x, new_cache_entry)."""
     if kind == "mamba":
         dims = ssm.ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
                             cfg.conv_k)
@@ -772,7 +787,8 @@ def block_append(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         x, _ = _mlp_forward(p["mlp"], cfg, x)
         return x, new_state
     x, new_cache = _append_attn(p, cfg, kind, x, cache, lengths, positions,
-                                valid, page_table=page_table)
+                                valid, page_table=page_table,
+                                write_floor=write_floor)
     x, _ = _mlp_forward(p["mlp"], cfg, x)
     return x, new_cache
 
@@ -936,7 +952,8 @@ def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
                   cache, lengths: jnp.ndarray,
-                  active: Optional[jnp.ndarray] = None):
+                  active: Optional[jnp.ndarray] = None,
+                  write_floor: Optional[jnp.ndarray] = None):
     """Incremental prefill: append a W-token prompt window into an
     EXISTING cache at each row's current length (the cache-append
     primitive under chunked prefill and k-way admission -- see
@@ -952,6 +969,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     rows compute junk (shapes are static) but their cache rows, states and
     lengths are untouched, exactly like ``decode_step`` -- so one fused
     call can append windows to any subset of a resident slot batch.
+    ``write_floor`` (optional (B,) int32, paged only) guards
+    refcount-shared prefix frames against writes (see ``block_decode``).
 
     Returns (logits (B, V) at each row's last valid window position,
     new_cache, new_lengths).  Splitting a prompt into windows and feeding
@@ -992,7 +1011,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
         for pos_i, kind in enumerate(cfg.block_pattern):
             x, nc = block_append(period_params[pos_i], cfg, kind, x,
                                  cache_slice[pos_i], lengths, positions,
-                                 valid, page_table=page_table)
+                                 valid, page_table=page_table,
+                                 write_floor=write_floor)
             new_entries.append(nc)
         x = shard_activation(x, ("batch", "act_seq", "act_embed"))
         return x, tuple(new_entries)
@@ -1003,7 +1023,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
                             cache["remainder"]):
         x, nc = block_append(rp, cfg, kind, x, ce, lengths, positions,
-                             valid, page_table=page_table)
+                             valid, page_table=page_table,
+                             write_floor=write_floor)
         new_rem.append(nc)
     idx = jnp.clip(cl - 1, 0, w - 1)[:, None, None]
     x_last = jnp.take_along_axis(x, idx, axis=1)          # (B, 1, d)
@@ -1016,7 +1037,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
                 cache, lengths: jnp.ndarray,
-                active: Optional[jnp.ndarray] = None):
+                active: Optional[jnp.ndarray] = None,
+                write_floor: Optional[jnp.ndarray] = None):
     """One decode step.  inputs: token (B,) or embeds (B, d).
     Returns (logits (B, V), new_cache, new_lengths).
 
@@ -1024,7 +1046,9 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
     mask: inactive rows still compute (shapes are static) but their cache
     rows and lengths are frozen, so a parked slot can be recycled later
     with no state drift.  ``active=None`` (default) advances every row --
-    the one-shot/batch paths are unchanged."""
+    the one-shot/batch paths are unchanged.  ``write_floor`` (optional
+    (B,) int32, paged only) guards refcount-shared prefix frames against
+    writes (see ``block_decode``)."""
     if cfg.embeds_input:
         x = inputs["embeds"].astype(cfg.dtype)
     else:
@@ -1044,7 +1068,8 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
         for pos_i, kind in enumerate(cfg.block_pattern):
             x, nc = block_decode(period_params[pos_i], cfg, kind, x,
                                  cache_slice[pos_i], lengths, active=active,
-                                 page_table=page_table)
+                                 page_table=page_table,
+                                 write_floor=write_floor)
             new_entries.append(nc)
         return x, tuple(new_entries)
 
@@ -1054,7 +1079,8 @@ def decode_step(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
     for rp, kind, ce in zip(params["remainder"], cfg.remainder_pattern,
                             cache["remainder"]):
         x, nc = block_decode(rp, cfg, kind, x, ce, lengths, active=active,
-                             page_table=page_table)
+                             page_table=page_table,
+                             write_floor=write_floor)
         new_rem.append(nc)
     logits = _logits(params, cfg, x)
     new_cache = {"period": new_period, "remainder": tuple(new_rem)}

@@ -63,12 +63,43 @@ def init_slots(cfg: ModelConfig, capacity: int, max_seq: int,
                            page_size=page_size, n_pages=n_pages))
 
 
-def set_page_row(state: SlotState, slot, row: jnp.ndarray) -> SlotState:
+def set_page_row(state: SlotState, slot, row: jnp.ndarray,
+                 length=0) -> SlotState:
     """Install a slot's page-table row ((P,) int32 physical frame ids,
     sentinel-padded past the reservation) -- the device half of paged
-    admission: the host allocator picks the frames, this writes them."""
+    admission: the host allocator picks the frames, this writes them.
+
+    ``length`` seeds the slot's resident token count; admission with a
+    shared prefix passes the skip (the prefix tokens are already IN the
+    mapped frames, so the first append window must offset past them).
+    Plain admissions pass 0 (the eviction default, re-asserted)."""
     pt = state.cache["page_table"].at[slot].set(row.astype(jnp.int32))
-    return state._replace(cache={**state.cache, "page_table": pt})
+    return state._replace(
+        lengths=state.lengths.at[slot].set(jnp.asarray(length, jnp.int32)),
+        cache={**state.cache, "page_table": pt})
+
+
+def copy_frame(state: SlotState, src, dst, *, cfg: ModelConfig) -> SlotState:
+    """Duplicate physical frame ``src`` into ``dst`` across every paged
+    pool leaf (no page-table change) -- the data half of fork-on-write.
+    Admission uses it when a shared prefix must be re-entered (the
+    re-run window writes into the last shared page, so that page is
+    forked into a private frame before the row is installed)."""
+    return state._replace(
+        cache=deploy.cache_page_copy(cfg, state.cache, src, dst))
+
+
+def fork_page(state: SlotState, slot, logical, src, dst, *,
+              cfg: ModelConfig) -> SlotState:
+    """Full copy-on-write fork: duplicate frame ``src`` into ``dst`` and
+    remap the SINGLE page-table entry ``(slot, logical)`` to the copy.
+    The sharer's page table still maps ``src`` -- its subsequent reads
+    and tokens are untouched (bystander isolation, asserted in
+    tests/test_serving_fuzz.py)."""
+    cache = deploy.cache_page_copy(cfg, state.cache, src, dst)
+    pt = cache["page_table"].at[slot, logical].set(
+        jnp.asarray(dst, jnp.int32))
+    return state._replace(cache={**cache, "page_table": pt})
 
 
 # ---------------------------------------------------------------------------
@@ -154,7 +185,8 @@ def request_key(seed: int, rid: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def prefill_append(params, state: SlotState, slots, window, chunk_lens,
-                   total_lens, seat, rids, first, *,
+                   total_lens, seat, rids, first,
+                   write_floor: Optional[jnp.ndarray] = None, *,
                    cfg: ModelConfig, sampler, fresh: bool = False,
                    max_seq: int = 0
                    ) -> Tuple[SlotState, jnp.ndarray, jnp.ndarray]:
@@ -172,6 +204,13 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
     (``request_key(sampler.seed, rid)``) is derived ON DEVICE and
     installed on its ``first`` chunk (admission), then carried in slot
     state across chunks (no per-admission host key sync).
+    ``write_floor`` (optional (K,) int32): per-seat first writable
+    position -- the shared-prefix scatter guard (paged mode): positions
+    below a seat's floor live in refcount-shared frames another page
+    table maps, so their writes are routed out of bounds and dropped.
+    Correct flows never aim a write below the floor (appends start at
+    the seat's length >= floor); the guard makes a bug corrupt the
+    buggy request instead of its sharers.
 
     Two internal strategies behind one contract:
 
@@ -214,7 +253,8 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
         batch["chunk_lengths"] = jnp.asarray(chunk_lens, jnp.int32)
         logits, new_sub, new_len = T.prefill_chunk(params, cfg, batch,
                                                    sub_cache, sub_len,
-                                                   active=seat)
+                                                   active=seat,
+                                                   write_floor=write_floor)
     done = seat & (new_len >= total_lens)
     split = jax.vmap(jax.random.split)(keys_in)          # (K, 2, 2)
     keys_out = jnp.where(done[:, None], split[:, 0], keys_in)
@@ -249,14 +289,18 @@ def evict_slot(state: SlotState, slot, *, cfg: ModelConfig) -> SlotState:
 # ---------------------------------------------------------------------------
 
 def decode_chunk(params, state: SlotState, active: jnp.ndarray,
-                 remaining: jnp.ndarray, eos_ids: jnp.ndarray, *,
+                 remaining: jnp.ndarray, eos_ids: jnp.ndarray,
+                 write_floor: Optional[jnp.ndarray] = None, *,
                  cfg: ModelConfig, sampler, n_steps: int
                  ) -> Tuple[SlotState, jnp.ndarray, jnp.ndarray]:
     """Run ``n_steps`` decode steps over all slots.
 
     ``active``: (B,) bool rows holding a live request at chunk entry;
     ``remaining``: (B,) int32 tokens each row may still emit;
-    ``eos_ids``: (B,) int32 per-slot stop token (-1: never stops).
+    ``eos_ids``: (B,) int32 per-slot stop token (-1: never stops);
+    ``write_floor`` (optional (B,) int32): per-slot shared-prefix scatter
+    guard (see ``prefill_append``) -- decode positions below a slot's
+    floor would land in refcount-shared frames, so those writes drop.
 
     Returns (new_state, toks (n_steps, B) int32, emitted (n_steps, B)
     bool).  A row alive at the start of a step emits exactly one token
@@ -270,7 +314,7 @@ def decode_chunk(params, state: SlotState, active: jnp.ndarray,
         st, alive, rem = carry
         logits, cache, lengths = T.decode_step(
             params, cfg, decode_inputs(st.tok, cfg), st.cache, st.lengths,
-            active=alive)
+            active=alive, write_floor=write_floor)
         split = jax.vmap(jax.random.split)(st.keys)          # (B, 2, 2)
         keys = jnp.where(alive[:, None], split[:, 0], st.keys)
         new_tok = sample_rows(logits, cfg, sampler, split[:, 1])

@@ -30,6 +30,18 @@ the same memory could seat (see docs/serving.md).  Contiguous
 (``paged=False``, default) remains the parity oracle; the one-shot
 batch/legacy paths are contiguous-only.
 
+``Engine(..., paged=True, share_prefix=True)`` additionally shares
+full-page-aligned prompt prefixes ACROSS requests, copy-on-write: a
+host ``PrefixIndex`` maps page-aligned token blocks to the physical
+frames that already hold their KV; admission of a matching request maps
+those frames into its page table at refcount + 1 and skips their
+prefill windows entirely (PREFILLING starts at the first unshared
+page).  Requires an architecture whose cache is fully pageable (pure
+global attention); engines mixing recurrent / ring-local state serve
+normally with sharing inert.  Token outputs are unchanged -- the
+differential fuzzer (tests/test_serving_fuzz.py) holds all modes to the
+contiguous oracle.
+
 Prompt lengths are right-padded to ``prefill_bucket`` multiples so prefill
 compilations are bounded by the bucket count.  The continuous path admits
 prompts of ANY length that fits the slot cache: prompts are appended to a
@@ -56,7 +68,8 @@ from ..configs.base import ModelConfig
 from ..models import transformer as T
 from ..utils import next_pow2, round_up
 from . import batch as B
-from .scheduler import PageAllocator, Request, Scheduler, pages_needed
+from .scheduler import (PageAllocator, PrefixIndex, Request, Scheduler,
+                        pages_needed, prefix_keys)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +151,13 @@ class _DeviceExecutor:
         # layout of the same memory could seat (see docs/serving.md)
         self.paged = bool(eng.paged)
         self.page_size = int(eng.page_size)
+        # prefix sharing needs every sequence-axis cache leaf paged: a
+        # recurrent (SSM/RG-LRU) or ring local-KV block would need its
+        # prefix STATE rebuilt, which is exactly the prefill work sharing
+        # skips -- such engines serve normally with sharing inert
+        self.share = (bool(eng.share_prefix) and self.paged and all(
+            T.paged_kind(cfg, k)
+            for k in tuple(cfg.block_pattern) + tuple(cfg.remainder_pattern)))
         if self.paged:
             if self.max_seq % self.page_size:
                 raise ValueError(
@@ -149,19 +169,38 @@ class _DeviceExecutor:
                             else self.capacity * self.pages_per_slot)
             self.allocator = PageAllocator(self.n_pages)
             self._slot_frames: Dict[int, List[int]] = {}
+            # shared-prefix write guard: first position each slot may
+            # write (positions below live in refcount-shared frames)
+            self._floors = np.zeros((self.capacity,), np.int32)
+            if self.share:
+                self.prefix = PrefixIndex(self.allocator)
+                # (chain keys, frames) per slot, registered into the
+                # index when the slot's prefill completes
+                self._slot_reg: Dict[int, Tuple[list, List[int]]] = {}
+                # sharing diagnostics (asserted on in tests; reported
+                # by the --share-prefix bench section)
+                self.shared_pages = 0      # frames mapped from the index
+                self.forks = 0             # copy-on-write page forks
+                self.skipped_tokens = 0    # prefill tokens never appended
             # donate the slot state: without it every admission's row
             # update would copy the whole state -- pools included
             donate = () if jax.default_backend() == "cpu" else (0,)
             self._set_pages = jax.jit(B.set_page_row,
                                       donate_argnums=donate)
+            self._copy_frame = jax.jit(
+                functools.partial(B.copy_frame, cfg=cfg),
+                donate_argnums=donate)
         self.state = B.init_slots(cfg, self.capacity, self.max_seq,
                                   paged=self.paged,
                                   page_size=self.page_size,
                                   n_pages=getattr(self, "n_pages", None))
         # (width, n_seats) per fused append call -- k-way admission and
         # chunk-streaming diagnostics (asserted on in tests); bounded so
-        # a long-running server's host memory tracks in-flight work
+        # a long-running server's host memory tracks in-flight work.
+        # ``append_calls`` is the monotonic companion: delta arithmetic
+        # over it stays correct after the deque saturates.
         self.append_log: "deque[Tuple[int, int]]" = deque(maxlen=65536)
+        self.append_calls = 0
         # slot state donated into append/chunk (in-place on TPU; CPU has
         # no donation support and would warn on every call)
         donate = () if jax.default_backend() == "cpu" else (1,)
@@ -200,7 +239,8 @@ class _DeviceExecutor:
         groups: Dict[Tuple[int, bool],
                      List[Tuple[int, Request, int]]] = {}
         for slot, req, start in seats:
-            if start == 0 and req.prompt_len + req.max_new > self.max_seq:
+            if (start == req.prefill_skip
+                    and req.prompt_len + req.max_new > self.max_seq):
                 # guard for callers driving the Scheduler directly
                 # (Engine.submit checks this before enqueueing); without
                 # it the append would silently clamp overflow writes onto
@@ -210,12 +250,24 @@ class _DeviceExecutor:
                     f"max_new {req.max_new} exceeds the slot cache "
                     f"length {self.max_seq}")
             wdt = self.prefill_width(req.prompt_len - start)
-            fresh = start == 0 and req.prompt_len <= wdt
+            # fresh = whole prompt in one first window into ZEROED rows;
+            # a shared-prefix seat (prefill_skip > 0) starts mid-cache,
+            # so it always takes the gather/append path
+            fresh = start == 0 and req.prefill_skip == 0 \
+                and req.prompt_len <= wdt
             groups.setdefault((wdt, fresh), []).append((slot, req, start))
         for (wdt, fresh), group in groups.items():
             for i in range(0, len(group), self.admit_k):
                 out.update(self._append_group(wdt, fresh,
                                               group[i:i + self.admit_k]))
+        if self.paged and self.share:
+            # completed prompts: publish their full-page prefix frames
+            # (the KV is finished now, never before) into the index
+            for slot, (_, tok0) in out.items():
+                if tok0 is not None:
+                    keys, frames = self._slot_reg.pop(slot, ((), ()))
+                    if keys:
+                        self.prefix.register(keys, frames)
         return out
 
     def _append_group(self, width: int, fresh: bool,
@@ -240,13 +292,18 @@ class _DeviceExecutor:
         rids = np.zeros((k,), np.int32)
         win = (np.zeros((k, width, cfg.d_model), np.float32)
                if cfg.embeds_input else np.zeros((k, width), np.int32))
+        floors = np.zeros((k,), np.int32)
         for j, (slot, req, start) in enumerate(group):
             take = min(width, req.prompt_len - start)
             win[j, :take] = np.asarray(req.prompt[lead])[0, start:start + take]
             slots[j], seat[j] = slot, True
             chunk_lens[j], total[j] = take, req.prompt_len
-            first[j] = start == 0
+            # a shared-prefix seat's FIRST window starts at its skip
+            # offset (its PRNG root installs there, like start == 0)
+            first[j] = start == req.prefill_skip
             rids[j] = req.rid
+            if self.paged:
+                floors[j] = self._floors[slot]
         window = {lead: jnp.asarray(win)}
         if any("positions" in req.prompt for _, req, _ in group):
             pos = np.zeros((k, width), np.int32)
@@ -264,20 +321,22 @@ class _DeviceExecutor:
         self.state, tok0, done = self._append(
             self.params, self.state, jnp.asarray(slots), window,
             jnp.asarray(chunk_lens), jnp.asarray(total), jnp.asarray(seat),
-            jnp.asarray(rids), jnp.asarray(first), fresh=fresh,
-            max_seq=self.max_seq)
+            jnp.asarray(rids), jnp.asarray(first), jnp.asarray(floors),
+            fresh=fresh, max_seq=self.max_seq)
         tok0, done = np.asarray(tok0), np.asarray(done)   # host sync
         self.append_log.append((width, len(group)))
+        self.append_calls += 1
         return {int(slots[j]): (int(chunk_lens[j]),
                                 int(tok0[j]) if done[j] else None)
                 for j in range(len(group))}
 
     def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
                   eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        floor = jnp.asarray(self._floors) if self.paged else None
         self.state, toks, emitted = self._chunk(
             self.params, self.state, jnp.asarray(active),
             jnp.asarray(remaining, dtype=jnp.int32),
-            jnp.asarray(eos_ids, dtype=jnp.int32))
+            jnp.asarray(eos_ids, dtype=jnp.int32), floor)
         # the one host sync per chunk
         return np.asarray(toks), np.asarray(emitted)
 
@@ -288,7 +347,20 @@ class _DeviceExecutor:
         makes mid-flight allocation failure impossible: prefill windows
         and decode chunks only ever touch reserved frames.  Returns False
         (admission blocks, head-of-line) while the pool is too full.
-        Contiguous executors always admit on a free seat."""
+        Contiguous executors always admit on a free seat.
+
+        With prefix sharing, the request's full-page-aligned prompt
+        prefix is first looked up in the ``PrefixIndex``: hit frames map
+        into the new page table at refcount + 1 instead of consuming
+        fresh pages, and ``req.prefill_skip`` tells the scheduler to
+        start PREFILLING past them.  A prompt shared in its ENTIRETY
+        still re-enters its last token (the logits that seed tok0 must
+        come from a real forward pass), so its last shared page is
+        forked copy-on-write -- frame duplicated, one page-table entry
+        remapped -- before the window writes into it.  When the free
+        list alone can't cover the unshared remainder, LRU index entries
+        are reclaimed first (cached-but-unmapped frames are reclaimable
+        capacity, not leaks)."""
         if not self.paged:
             return True
         if req.prompt_len + req.max_new > self.max_seq:
@@ -301,21 +373,75 @@ class _DeviceExecutor:
             raise ValueError(
                 f"rid {req.rid}: needs {need} pages but the pool holds "
                 f"{self.n_pages}; raise cache_pages or lower max_new")
-        frames = self.allocator.alloc(need)
+        ps = self.page_size
+        keys: list = []
+        kept: List[int] = []
+        fork_src: Optional[int] = None
+        skip = 0
+        # sharing keys on prompt TOKENS; an explicit "positions" row
+        # changes the RoPE rotation baked into cached K, so such prompts
+        # neither share nor register (identical tokens at different
+        # positions are different KV)
+        if (self.share and req.prompt is not None
+                and "tokens" in req.prompt
+                and "positions" not in req.prompt
+                and req.prompt_len >= ps):
+            keys = req.prefix_key_chain
+            if keys is None:
+                toks = np.asarray(req.prompt["tokens"]).reshape(-1)
+                keys = prefix_keys(toks[:req.prompt_len], ps)
+                req.prefix_key_chain = keys
+            kept = self.prefix.lookup(keys)
+            skip = len(kept) * ps
+            if skip == req.prompt_len:
+                # whole prompt resident: re-enter the last token for its
+                # logits; its window writes into the last shared page,
+                # which therefore forks copy-on-write
+                skip -= 1
+                fork_src = kept.pop()
+        n_fresh = need - len(kept)
+        # pin the hits BEFORE allocating: reclaim below can then never
+        # free them (their refcount is >= 2 until we undo)
+        self.allocator.share(kept)
+        frames = self.allocator.alloc(n_fresh)
+        if frames is None and self.share:
+            self.prefix.reclaim(n_fresh - self.allocator.n_free)
+            frames = self.allocator.alloc(n_fresh)
         if frames is None:
+            self.allocator.free(kept)          # undo: admission blocks
             return False
+        row_frames = kept + frames             # page order: shared, fresh
         row = np.full((self.pages_per_slot,), T.PAGE_SENTINEL, np.int32)
-        row[:need] = frames
+        row[:need] = row_frames
+        if fork_src is not None:
+            # duplicate the donor's frame into our private one (the
+            # page-copy primitive), THEN install the row mapping it
+            self.state = self._copy_frame(self.state, np.int32(fork_src),
+                                          np.int32(frames[0]))
+            self.forks += 1
         self.state = self._set_pages(self.state, np.int32(slot),
-                                     jnp.asarray(row))
-        self._slot_frames[slot] = frames
+                                     jnp.asarray(row), np.int32(skip))
+        self._slot_frames[slot] = row_frames
+        self._floors[slot] = len(kept) * ps
+        req.prefill_skip = skip
+        if self.share:
+            n_full = req.prompt_len // ps
+            self._slot_reg[slot] = (keys[:n_full], row_frames[:n_full])
+            self.shared_pages += len(kept)
+            self.skipped_tokens += skip
         return True
 
     def release(self, slot: int) -> None:
         if self.paged:
             frames = self._slot_frames.pop(slot, None)
             if frames:
+                # refcount decrement: frames another table or the prefix
+                # index still holds stay resident (and index-cached
+                # frames stay warm for the next shared admission)
                 self.allocator.free(frames)
+            self._floors[slot] = 0
+            if self.share:
+                self._slot_reg.pop(slot, None)
         self.state = self._evict(self.state, np.int32(slot))
 
 
@@ -329,7 +455,8 @@ class Engine:
                  prefill_chunk_width: Optional[int] = None,
                  admit_k: int = 4,
                  paged: bool = False, page_size: int = 16,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 share_prefix: bool = False):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
@@ -352,6 +479,14 @@ class Engine:
         self.paged = bool(paged)
         self.page_size = max(int(page_size), 1)
         self.cache_pages = cache_pages
+        # copy-on-write prefix sharing across requests (paged only):
+        # page-aligned prompt prefixes already resident in the pool are
+        # mapped at refcount + 1 and their prefill windows skipped
+        self.share_prefix = bool(share_prefix)
+        if self.share_prefix and not self.paged:
+            raise ValueError(
+                "share_prefix=True requires paged=True (prefix sharing "
+                "maps page-table entries; contiguous rows have none)")
         self._warned_max_prompt_len = False
         self.max_prompt_len = max_prompt_len
         if max_prompt_len is not None:

@@ -32,7 +32,11 @@ loop.
 Paged executors additionally expose ``reserve(slot, req)``: admission
 claims KV pages (``PageAllocator``) before a request takes its seat, and
 blocks head-of-line while the pool is too full -- free SEATS are no
-longer sufficient, the backing pages must exist too.
+longer sufficient, the backing pages must exist too.  With prefix
+sharing (``PrefixIndex``), reserve may map already-resident prefix
+frames into the new page table (refcount + 1) and set
+``req.prefill_skip``: the scheduler then skips those tokens' prefill
+windows entirely and streams only the unshared suffix.
 
 Token accounting matches the one-shot engine paths exactly: the first
 token of a request is sampled from its prefill logits (it counts toward
@@ -44,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
@@ -64,15 +68,25 @@ def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Host-side free list over a shared KV page pool (paged serving).
+    """Host-side refcounted free list over a shared KV page pool.
 
     A slot's admission RESERVES ``ceil((prompt_len + max_new) /
     page_size)`` physical frames up front (``alloc``), so device-side
     prefill windows and decode chunks can never run out of frames
     mid-flight -- the deadlock-free discipline behind letting capacity
-    exceed ``n_pages // pages_per_slot`` seats.  ``free`` returns a
-    finished request's frames in O(pages).  Pure host bookkeeping, no
-    JAX: property-tested directly (tests/test_paged_cache.py)."""
+    exceed ``n_pages // pages_per_slot`` seats.
+
+    Prefix sharing adds per-frame REFCOUNTS: ``alloc`` hands out frames
+    at refcount 1, ``share`` pins an already-live frame for one more
+    owner (a second page table mapping it, or the prefix index caching
+    it), and ``free`` releases one owner -- a frame returns to the free
+    list only when its last owner lets go, so evicting a sharer can
+    never free frames a live sequence still maps.  Conservation
+    invariant (property-tested in tests/test_serving_fuzz.py)::
+
+        n_free + n_live == n_pages      (every frame free or refcounted)
+
+    Pure host bookkeeping, no JAX."""
 
     def __init__(self, n_pages: int):
         if n_pages < 1:
@@ -80,28 +94,141 @@ class PageAllocator:
         self.n_pages = int(n_pages)
         # LIFO free list: recently freed (still-warm) frames reused first
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
-        self._used: set = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_live(self) -> int:
+        """Frames with refcount >= 1 (mapped by a table or index-cached)."""
+        return len(self._ref)
+
+    def refcount(self, frame: int) -> int:
+        return self._ref.get(frame, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` free frames, or None (and no change) if unavailable."""
+        """Pop ``n`` free frames at refcount 1, or None (and no change)
+        if unavailable."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
             return None
         frames = [self._free.pop() for _ in range(n)]
-        self._used.update(frames)
+        for f in frames:
+            self._ref[f] = 1
         return frames
 
-    def free(self, frames: List[int]) -> None:
+    def share(self, frames: List[int]) -> None:
+        """Add one owner to each (live) frame -- the copy-on-write map:
+        a prefix hit installs the donor's frames in a second page table
+        at refcount + 1 instead of copying them."""
         for f in frames:
-            if f not in self._used:
+            if self._ref.get(f, 0) < 1:
+                raise ValueError(f"share of free page {f}")
+            self._ref[f] += 1
+
+    def free(self, frames: List[int]) -> None:
+        """Release one owner per frame; frames whose last owner lets go
+        return to the free list."""
+        for f in frames:
+            r = self._ref.get(f, 0)
+            if r < 1:
                 raise ValueError(f"double free of page {f}")
-            self._used.remove(f)
-            self._free.append(f)
+            if r == 1:
+                del self._ref[f]
+                self._free.append(f)
+            else:
+                self._ref[f] = r - 1
+
+
+def prefix_keys(tokens, page_size: int) -> List[Any]:
+    """Chain keys for every FULL page of a prompt: ``key_i =
+    sha256(key_{i-1} || page_i tokens)`` covers tokens ``[0, (i+1) *
+    page_size)``, so two prompts share key_i iff their first ``(i+1) *
+    page_size`` tokens are identical (collisions cryptographically
+    negligible).  Chained digests keep every key constant-size -- dict
+    hashing and equality are O(1) per page regardless of prefix length
+    (nested token tuples would re-hash the whole ancestry on every
+    lookup, quadratic in prompt length).  The tail partial page never
+    gets a key: only pages whose every position holds a prompt token are
+    shareable."""
+    import hashlib
+    toks = np.ascontiguousarray(np.asarray(tokens).astype(np.int64))
+    keys: List[Any] = []
+    digest = b"halo-prefix-v1"
+    for i in range(toks.shape[0] // page_size):
+        page = toks[i * page_size:(i + 1) * page_size].tobytes()
+        digest = hashlib.sha256(digest + page).digest()
+        keys.append(digest)
+    return keys
+
+
+class PrefixIndex:
+    """Host-side prefix cache: chain key (``prefix_keys``) -> physical
+    frame holding that page's KV.
+
+    Each entry pins its frame with one ``share`` ref, so a donor's pages
+    survive the donor's release ("recently freed but cached") until pool
+    pressure reclaims them LRU-first (``reclaim`` -- an evicted entry
+    drops the index ref; the frame is actually freed only if no live
+    page table still maps it).  ``lookup`` walks the chain from page 0
+    and returns the longest indexed prefix; the caller shares the hit
+    frames into the new page table.  Entries are only ever registered
+    AFTER the owning request's prefill completed, so an indexed frame
+    always holds finished prompt KV.
+
+    Note the chain discipline: reclaiming a parent entry makes any
+    surviving extension unreachable (``lookup`` stops at the gap); such
+    orphans age out LRU like everything else."""
+
+    def __init__(self, allocator: PageAllocator):
+        self.alloc = allocator
+        self._entries: "OrderedDict[Any, int]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, keys: List[Any]) -> List[int]:
+        """Longest indexed prefix of ``keys`` -> its frames (LRU-touched).
+        Frames are NOT shared here; the caller pins the ones it keeps."""
+        hits: List[int] = []
+        for k in keys:
+            f = self._entries.get(k)
+            if f is None:
+                break
+            self._entries.move_to_end(k)
+            hits.append(f)
+        return hits
+
+    def register(self, keys: List[Any], frames: List[int]) -> None:
+        """Index ``frames[i]`` under ``keys[i]`` (one index ref each).
+        Keys already present keep their existing frame (two requests that
+        prefilled the same prefix concurrently: first writer wins, the
+        duplicate frames stay owned by their seat alone)."""
+        for k, f in zip(keys, frames):
+            if k in self._entries:
+                self._entries.move_to_end(k)
+                continue
+            self.alloc.share([f])
+            self._entries[k] = f
+
+    def reclaim(self, n: int) -> int:
+        """Drop LRU entries until ``n`` frames actually returned to the
+        free list (entries whose frame a live table still maps free
+        nothing) or the index is empty.  Returns the frames freed."""
+        freed = 0
+        while self._entries and freed < n:
+            _, f = self._entries.popitem(last=False)
+            before = self.alloc.n_free
+            self.alloc.free([f])
+            freed += self.alloc.n_free - before
+        return freed
+
+    def flush(self) -> int:
+        """Drop every entry (shutdown / tests).  Returns frames freed."""
+        return self.reclaim(self.alloc.n_pages)
 
 
 @dataclasses.dataclass
@@ -115,6 +242,15 @@ class Request:
     status: str = QUEUED
     slot: Optional[int] = None
     prefilled: int = 0         # prompt tokens already appended to the cache
+    # prompt tokens already RESIDENT at admission (shared-prefix pages the
+    # executor's reserve() mapped from the prefix index): prefill starts
+    # at this offset instead of 0, skipping the shared windows entirely
+    prefill_skip: int = 0
+    # memoized ``prefix_keys(...)`` result (reserve() retries every tick
+    # while the head of line is blocked on pages; the chain is computed
+    # once)
+    prefix_key_chain: Optional[List[Any]] = dataclasses.field(
+        default=None, repr=False)
     tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -149,7 +285,10 @@ class Executor(Protocol):
     # Optional (paged executors): claim backing resources (KV pages) for a
     # request before it takes ``slot``; False blocks admission at the
     # queue head until a release frees enough.  Executors without the
-    # method admit on free seats alone.
+    # method admit on free seats alone.  A successful reserve may set
+    # ``req.prefill_skip`` > 0 (shared-prefix pages already resident):
+    # the scheduler then starts PREFILLING at that offset and the
+    # executor treats the first window as ``start == prefill_skip``.
     # def reserve(self, slot: int, req: Request) -> bool: ...
 
 
@@ -272,7 +411,10 @@ class Scheduler:
             if reserve is not None and not reserve(slot, req):
                 break          # backing pages exhausted: head-of-line waits
             self.queue.popleft()
-            req.slot, req.status, req.prefilled = slot, PREFILLING, 0
+            # reserve() may have mapped shared-prefix pages: those prompt
+            # tokens are already resident, so prefill starts past them
+            req.slot, req.status = slot, PREFILLING
+            req.prefilled = req.prefill_skip
             self.slots[slot] = req.rid
 
     def _prefill_tick(self, finished: List[int]) -> int:

@@ -415,6 +415,79 @@ class TestPagedDecodeKernel:
         assert np.isfinite(np.asarray(out)).all()
 
 
+class TestPageCopy:
+    """Fork-on-write page-copy primitive: the Pallas DMA kernel is
+    bitwise-identical to the XLA ``pool.at[dst].set(pool[src])``
+    lowering for fp and int8 pools, stacked and unstacked."""
+
+    @pytest.mark.parametrize("dtype,shape,stacked", [
+        (np.float32, (6, 4, 2, 3), False),       # unstacked K/V pool
+        (np.float32, (3, 6, 4, 2, 3), True),     # layer-stacked K/V pool
+        (np.int8, (6, 4, 2, 8), False),          # int8 value pool
+        (np.int8, (2, 6, 4, 2, 8), True),
+        (np.float32, (6, 4, 2), False),          # scale pool (no Dh)
+        (np.float32, (3, 6, 4, 2), True),        # stacked scale pool
+    ])
+    def test_kernel_matches_xla(self, dtype, shape, stacked):
+        from repro.kernels.paged_decode import page_copy
+        rng = np.random.default_rng(9)
+        if dtype == np.int8:
+            pool = rng.integers(-127, 128, shape).astype(dtype)
+        else:
+            pool = rng.normal(size=shape).astype(dtype)
+        src, dst = 2, 5
+        got = page_copy(jnp.asarray(pool), src, dst, stacked=stacked,
+                        interpret=True)
+        want = pool.copy()
+        if stacked:
+            want[:, dst] = want[:, src]
+        else:
+            want[dst] = want[src]
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_cache_page_copy_full_tree(self, granite):
+        """deploy.cache_page_copy duplicates the frame in EVERY paged
+        pool leaf and leaves the page table and batch-major leaves
+        untouched."""
+        cfg, params = granite
+        cache = T.init_cache(cfg, 2, 16, paged=True, page_size=4)
+        rng = np.random.default_rng(1)
+        cache = {k: (jax.tree.map(lambda l: jnp.asarray(
+            rng.normal(size=l.shape).astype(np.asarray(l).dtype)), v)
+            if k != "page_table" else v) for k, v in cache.items()}
+        pt = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+        cache["page_table"] = pt
+        out = deploy.cache_page_copy(cfg, cache, 1, 6)
+        np.testing.assert_array_equal(np.asarray(out["page_table"]),
+                                      np.asarray(pt))
+        for a, b in zip(jax.tree.leaves(out["period"]),
+                        jax.tree.leaves(cache["period"])):
+            a, b = np.asarray(a), np.asarray(b)
+            # pageable leaves are layer-stacked: pages axis is 1
+            np.testing.assert_array_equal(a[:, 6], b[:, 1])
+            mask = np.ones(a.shape[1], bool)
+            mask[6] = False
+            np.testing.assert_array_equal(a[:, mask], b[:, mask])
+
+    def test_int8_pools_copy_scales(self):
+        """int8 KV mode: the scale pools fork alongside the value pools
+        (a fork that dropped scales would dequantize the copy wrong)."""
+        cfg, params = cached_model("granite-8b", kv_cache_dtype="int8")
+        cache = T.init_cache(cfg, 1, 16, paged=True, page_size=4)
+        rng = np.random.default_rng(2)
+        cache = {k: (jax.tree.map(lambda l: jnp.asarray(
+            (rng.integers(-127, 128, l.shape)
+             if np.asarray(l).dtype == np.int8
+             else rng.uniform(0.01, 0.1, l.shape)).astype(
+                np.asarray(l).dtype)), v)
+            if k != "page_table" else v) for k, v in cache.items()}
+        out = deploy.cache_page_copy(cfg, cache, 0, 3)
+        for leaf in jax.tree.leaves(out["period"]):
+            leaf = np.asarray(leaf)
+            src = np.asarray(leaf)[:, 0]
+            np.testing.assert_array_equal(leaf[:, 3], src)
+
+
 class TestGatherPages:
     def test_roundtrip_layout(self):
         """gather_pages reconstructs exactly the contiguous layout for an

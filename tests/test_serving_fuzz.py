@@ -1,0 +1,584 @@
+"""Cross-mode differential serving fuzzer + prefix-sharing invariants.
+
+With four cache families x three serving modes x paging x prefix sharing
+in the tree, per-feature parity tests no longer cover the cross products.
+This file is the standing oracle: randomized request traces (empty,
+shared-prefix, page-aligned, long/chunked prompts; staggered arrivals;
+mid-decode recycling) replayed through the continuous contiguous engine,
+the paged engine, and the paged + share_prefix engine (plus a
+pool-starved share engine that must reclaim index-cached frames), all
+held to token-identical outputs plus the invariant bundle:
+
+  - no request dropped, duplicated, or reordered (exact token equality
+    against the contiguous replay, every rid present exactly once);
+  - occupancy never exceeds capacity;
+  - FIFO admission (first prefill windows in submit order);
+  - page accounting conserves: free + refcounted == n_pages after every
+    drain, with only prefix-index pins left alive;
+  - sharing is observable (the sweep must actually skip prefill work).
+
+Every assertion message carries the example's replay seed, so a failure
+reproduces with ``make_trace(seed)`` directly.
+
+The refcount/leak property sweep (``PageAllocator`` + ``PrefixIndex``
+under random share/fork/evict/recycle interleavings) and the
+fork-on-write isolation tests live here too -- they are the host-side
+half of the same contract.
+
+Run via ``make test-fuzz`` (fixed seed budget; FUZZ_EXAMPLES scales the
+sweep) or as part of the serving CI tier.
+"""
+
+import dataclasses
+import os
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs as configs
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+from repro.serving.scheduler import (PageAllocator, PrefixIndex, Scheduler,
+                                     prefix_keys)
+
+FUZZ_EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "4"))
+
+ARCHS = ["granite-8b",          # linear KV (fully pageable: sharing live)
+         "gemma2-2b",           # ring local KV + global KV mix
+         "falcon-mamba-7b",     # SSM state
+         "recurrentgemma-2b"]   # RG-LRU + ring
+
+# one fixed engine geometry for the whole sweep: compiles once, every
+# drawn trace replays over the warm executors
+PAGE, MAX_SEQ, CAP = 8, 32, 2
+ENGINE_KW = dict(prefill_bucket=4, prefill_chunk_width=8, capacity=CAP,
+                 max_seq=MAX_SEQ, chunk=3)
+
+
+def small_model(arch="granite-8b", seed=0, **over):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32, **over)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+_RIGS = None
+
+
+def get_rigs():
+    """(cfg, {name: executor}) -- the four standing replay targets,
+    built once and reused across every drawn example (the hypothesis
+    stub binds drawn args positionally, so the sweep fetches this
+    directly instead of through a fixture)."""
+    global _RIGS
+    if _RIGS is None:
+        cfg, params = small_model()
+        engines = {
+            "contiguous": Engine(params, cfg, **ENGINE_KW),
+            "paged": Engine(params, cfg, paged=True, page_size=PAGE,
+                            **ENGINE_KW),
+            "paged_share": Engine(params, cfg, paged=True, page_size=PAGE,
+                                  share_prefix=True, **ENGINE_KW),
+            # pool below capacity * pages_per_slot: admission blocks and
+            # the prefix index must RECLAIM cached frames under pressure
+            "paged_share_tight": Engine(params, cfg, paged=True,
+                                        page_size=PAGE, share_prefix=True,
+                                        cache_pages=6, **ENGINE_KW),
+        }
+        exs = {name: eng._executor(capacity=CAP, max_seq=MAX_SEQ)
+               for name, eng in engines.items()}
+        _RIGS = (cfg, exs)
+    return _RIGS
+
+
+def make_trace(seed: int, vocab: int):
+    """Randomized trace: a few base prefixes (whole pages) reused across
+    requests plus fresh/empty prompts, staggered integer arrivals, small
+    per-request max_new.  Lengths always fit the slot cache (the
+    oversized-reject path is engine-level, tested separately)."""
+    rnd = np.random.default_rng(seed)
+    bases = [rnd.integers(0, vocab, (int(rnd.integers(1, 4)) * PAGE,))
+             for _ in range(int(rnd.integers(1, 3)))]
+    n = int(rnd.integers(2, 7))
+    arrivals = np.sort(rnd.integers(0, 6, n))
+    trace = []
+    for i in range(n):
+        max_new = int(rnd.integers(1, 6))
+        r = rnd.random()
+        if r < 0.15:
+            prompt = np.zeros((0,), np.int64)            # empty prompt
+        elif r < 0.65:                                   # shared prefix
+            base = bases[int(rnd.integers(len(bases)))]
+            sfx = rnd.integers(0, vocab, (int(rnd.integers(0, 9)),))
+            prompt = np.concatenate([base, sfx])
+        else:                                            # fresh prompt
+            prompt = rnd.integers(0, vocab, (int(rnd.integers(1, 22)),))
+        prompt = prompt[:MAX_SEQ - max_new]              # fits the slot
+        trace.append({"prompt": prompt.astype(np.int32)[None],
+                      "max_new": max_new,
+                      "arrival": float(arrivals[i])})
+    return trace
+
+
+def replay(ex, trace, tag):
+    """One trace through a fresh Scheduler over a warm executor.
+    Returns (results, admission order, max occupancy entry)."""
+    sched = Scheduler(ex)
+    admit_order = []
+    orig = ex.prefill_step
+
+    def recording(seats):
+        for _, req, start in seats:
+            if start == req.prefill_skip and req.rid not in admit_order:
+                admit_order.append(req.rid)
+        return orig(seats)
+
+    ex.prefill_step = recording
+    try:
+        for r in trace:
+            sched.submit({"tokens": r["prompt"]},
+                         prompt_len=r["prompt"].shape[1],
+                         max_new=r["max_new"], arrival=r["arrival"])
+        now, guard = 0.0, 0
+        while sched.pending:
+            sched.tick(now)
+            now += 1.0
+            guard += 1
+            assert guard < 10_000, f"{tag}: replay did not terminate"
+    finally:
+        ex.prefill_step = orig
+    occ = max(sched.occupancy_trace, default=0)
+    return sched.results(), admit_order, occ
+
+
+def check_paged_end_state(ex, tag):
+    """After a full drain every page is free or index-pinned, and the
+    conservation invariant holds."""
+    alloc = ex.allocator
+    assert alloc.n_free + alloc.n_live == ex.n_pages, \
+        f"{tag}: page conservation broken " \
+        f"({alloc.n_free} free + {alloc.n_live} live != {ex.n_pages})"
+    pinned = len(ex.prefix) if ex.share else 0
+    assert alloc.n_live == pinned, \
+        f"{tag}: {alloc.n_live} frames live after drain but only " \
+        f"{pinned} index pins remain (leak)"
+
+
+class TestDifferentialFuzz:
+    @given(st.integers(0, 10 ** 9))
+    @settings(max_examples=FUZZ_EXAMPLES, deadline=None)
+    def test_random_traces_cross_mode(self, seed):
+        """The headline oracle: paged and paged+share_prefix replays are
+        token-identical to the contiguous replay on random shared-prefix
+        traces, with the invariant bundle holding per engine."""
+        cfg, exs = get_rigs()
+        trace = make_trace(seed, cfg.vocab)
+        tag = f"fuzz seed={seed}"
+        want, admit_c, _ = replay(exs["contiguous"], trace,
+                                  f"{tag} contiguous")
+        assert sorted(want) == list(range(len(trace))), \
+            f"{tag}: contiguous dropped/duplicated requests"
+        assert admit_c == sorted(admit_c), f"{tag}: FIFO admission broken"
+        for rid, r in enumerate(trace):
+            assert want[rid].shape == (r["max_new"],), \
+                f"{tag}: rid {rid} emitted {want[rid].shape[0]} " \
+                f"of {r['max_new']} tokens"
+        for name in ("paged", "paged_share", "paged_share_tight"):
+            ex = exs[name]
+            got, admit, occ = replay(ex, trace, f"{tag} {name}")
+            assert occ <= ex.capacity, \
+                f"{tag} {name}: occupancy {occ} > capacity {ex.capacity}"
+            assert admit == sorted(admit), \
+                f"{tag} {name}: FIFO admission broken ({admit})"
+            assert sorted(got) == sorted(want), \
+                f"{tag} {name}: request set mismatch"
+            for rid in want:
+                np.testing.assert_array_equal(
+                    got[rid], want[rid],
+                    err_msg=f"{tag} {name}: rid {rid} diverged from the "
+                            f"contiguous oracle")
+            check_paged_end_state(ex, f"{tag} {name}")
+
+    def test_sharing_was_exercised(self):
+        """The harness is not vacuous: a deterministic trace with a
+        repeated page-aligned prefix must hit the prefix index and skip
+        prefill work (asserted as a DELTA on the shared rig's cumulative
+        counters, so this passes standalone or after the sweep)."""
+        cfg, exs = get_rigs()
+        ex = exs["paged_share"]
+        rnd = np.random.default_rng(0)
+        base = rnd.integers(0, cfg.vocab, (2 * PAGE,))
+        trace = [{"prompt": np.concatenate(
+                      [base, rnd.integers(0, cfg.vocab, (sfx,))]
+                  ).astype(np.int32)[None],
+                  "max_new": 2, "arrival": float(2 * i)}
+                 for i, sfx in enumerate((3, 5, 1))]
+        skipped0, shared0 = ex.skipped_tokens, ex.shared_pages
+        replay(ex, trace, "sharing-exercised")
+        assert ex.skipped_tokens > skipped0 and ex.shared_pages > shared0, \
+            "a repeated page-aligned prefix never hit the prefix " \
+            "index -- sharing plumbing regressed"
+        check_paged_end_state(ex, "sharing-exercised")
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_families_cross_mode(self, arch):
+        """Every cache family through the same shared-prefix trace:
+        contiguous == paged == paged+share_prefix.  Families with
+        recurrent or ring-local state serve with sharing inert (their
+        prefix STATE cannot be skipped); the engine must get that right
+        silently rather than corrupt tokens."""
+        cfg, params = small_model(arch)
+        rng = np.random.default_rng(11)
+        base = rng.integers(0, cfg.vocab, (2 * PAGE,))
+        # the base-prefixed TAIL request admits only after the unrelated
+        # request's seat frees -- whose decode budget outlasts the
+        # donor's chunked prefill, so the donor has REGISTERED its
+        # prefix by then and the share engine genuinely shares (and,
+        # the prompt being page-aligned, forks its last shared page)
+        requests = [
+            (np.concatenate([base, rng.integers(0, cfg.vocab, (5,))]), 4),
+            (rng.integers(0, cfg.vocab, (3,)), 10),   # unrelated, long
+            (base.copy(), 4),                         # page-aligned exact
+        ]
+        engines = [
+            Engine(params, cfg, **ENGINE_KW),
+            Engine(params, cfg, paged=True, page_size=PAGE, **ENGINE_KW),
+            Engine(params, cfg, paged=True, page_size=PAGE,
+                   share_prefix=True, **ENGINE_KW),
+        ]
+        results = []
+        for eng in engines:
+            rids = [eng.submit({"tokens": p[None]}, max_new=mn)
+                    for p, mn in requests]
+            res = eng.drain()
+            results.append([res[r] for r in rids])
+        for i in range(len(requests)):
+            np.testing.assert_array_equal(
+                results[1][i], results[0][i],
+                err_msg=f"{arch}: paged diverged on request {i}")
+            np.testing.assert_array_equal(
+                results[2][i], results[0][i],
+                err_msg=f"{arch}: paged+share diverged on request {i}")
+        ex = engines[2]._sched.ex
+        if arch == "granite-8b":
+            assert ex.share and ex.skipped_tokens > 0
+        else:
+            assert not ex.share     # sharing inert, engine still correct
+
+    def test_int8_kv_share_parity(self):
+        """int8 KV pools under sharing: the scale pools share (and fork)
+        alongside the value pools, tokens identical to contiguous."""
+        cfg, params = small_model(kv_cache_dtype="int8")
+        rng = np.random.default_rng(29)
+        base = rng.integers(0, cfg.vocab, (2 * PAGE,))
+        prompts = [np.concatenate([base, rng.integers(0, cfg.vocab, (4,))]),
+                   base.copy()]                      # forks its last page
+        # capacity 1 serializes the requests, so the second one shares
+        # (and, being page-aligned, forks its last page)
+        base_kw = {**ENGINE_KW, "capacity": 1}
+        results, engines = [], []
+        for kw in (dict(), dict(paged=True, page_size=PAGE,
+                                share_prefix=True)):
+            eng = Engine(params, cfg, **base_kw, **kw)
+            rids = [eng.submit({"tokens": p[None]}, max_new=4)
+                    for p in prompts]
+            res = eng.drain()
+            results.append([res[r] for r in rids])
+            engines.append(eng)
+        for i in range(len(prompts)):
+            np.testing.assert_array_equal(
+                results[1][i], results[0][i],
+                err_msg=f"int8 share diverged on request {i}")
+        ex = engines[1]._sched.ex
+        assert ex.skipped_tokens > 0 and ex.forks == 1
+
+    def test_explicit_positions_never_share(self):
+        """Sharing keys on tokens; cached K bakes in RoPE positions, so
+        a prompt with an explicit "positions" row must neither share nor
+        register -- identical tokens at offset positions would otherwise
+        poison the index and corrupt later lookups."""
+        cfg, params = small_model()
+        rng = np.random.default_rng(31)
+        base = rng.integers(0, cfg.vocab, (2 * PAGE,)).astype(np.int32)
+        eng = Engine(params, cfg, paged=True, page_size=PAGE,
+                     share_prefix=True, **{**ENGINE_KW, "capacity": 1})
+        # same tokens, shifted positions: registers nothing
+        pos = (np.arange(2 * PAGE, dtype=np.int32) + 4)[None]
+        r0 = eng.submit({"tokens": base[None], "positions": pos},
+                        max_new=2)
+        # same tokens, default positions: must NOT hit anything either
+        r1 = eng.submit({"tokens": base[None]}, max_new=3)
+        res = eng.drain()
+        ex = eng._sched.ex
+        assert ex.skipped_tokens == 0 and len(ex.prefix) == 2
+        # (only r1 registered; r0's offset pages never entered the index)
+        oracle = Engine(params, cfg, **{**ENGINE_KW, "capacity": 1})
+        o0 = oracle.submit({"tokens": base[None], "positions": pos},
+                           max_new=2)
+        o1 = oracle.submit({"tokens": base[None]}, max_new=3)
+        want = oracle.drain()
+        np.testing.assert_array_equal(res[r0], want[o0])
+        np.testing.assert_array_equal(res[r1], want[o1])
+
+    def test_oversized_rejected_neighbors_complete(self):
+        """An oversized submit raises on every mode and never strands the
+        neighbors behind it."""
+        cfg, params = small_model()
+        for kw in (dict(), dict(paged=True, page_size=PAGE),
+                   dict(paged=True, page_size=PAGE, share_prefix=True)):
+            eng = Engine(params, cfg, **ENGINE_KW, **kw)
+            p = np.arange(6, dtype=np.int32)[None] % cfg.vocab
+            rid = eng.submit({"tokens": p}, max_new=3)
+            with pytest.raises(ValueError, match="cache length"):
+                eng.submit({"tokens": np.zeros((1, 30), np.int32)},
+                           max_new=8)
+            res = eng.drain()
+            assert res[rid].shape == (3,)
+
+    def test_share_prefix_requires_paged(self):
+        cfg, params = small_model()
+        with pytest.raises(ValueError, match="share_prefix"):
+            Engine(params, cfg, share_prefix=True)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator + PrefixIndex: refcount/leak property sweep
+# ---------------------------------------------------------------------------
+
+class TestRefcountInvariants:
+    @given(st.integers(4, 24), st.integers(0, 10 ** 6))
+    @settings(max_examples=25, deadline=None)
+    def test_share_fork_evict_recycle_interleavings(self, n_pages, seed):
+        """Random interleavings of admit / share / fork / release /
+        index-register / index-reclaim.  After every op:
+
+          - free + refcounted == n_pages (nothing leaked, nothing lost);
+          - every frame's refcount equals the number of page tables
+            mapping it plus its index pins -- so a frame reachable from
+            two tables always carries refcount >= 2;
+          - releasing a sharer never frees a frame a live table still
+            maps (the copy-on-write safety property)."""
+        rnd = random.Random(seed)
+        alloc = PageAllocator(n_pages)
+        index = PrefixIndex(alloc)
+        tables = {}                     # tid -> list of frames
+        indexed = {}                    # key -> frame (host mirror)
+        next_tid = 0
+
+        def conserve(tag):
+            assert alloc.n_free + alloc.n_live == n_pages, tag
+            want = {}
+            for frames in tables.values():
+                for f in frames:
+                    want[f] = want.get(f, 0) + 1
+            for f in indexed.values():
+                want[f] = want.get(f, 0) + 1
+            for f in range(n_pages):
+                assert alloc.refcount(f) == want.get(f, 0), \
+                    f"{tag}: frame {f} refcount {alloc.refcount(f)} != " \
+                    f"{want.get(f, 0)} owners"
+
+        for step in range(60):
+            op = rnd.random()
+            tag = f"seed={seed} step={step}"
+            if op < 0.30:                               # admit (maybe shared)
+                donor = (rnd.choice(list(tables)) if tables
+                         and rnd.random() < 0.5 else None)
+                shared = []
+                if donor is not None and tables[donor]:
+                    k = rnd.randint(1, len(tables[donor]))
+                    shared = tables[donor][:k]
+                fresh = alloc.alloc(rnd.randint(0, 3))
+                if fresh is None:
+                    continue
+                alloc.share(shared)
+                tables[next_tid] = list(shared) + fresh
+                next_tid += 1
+            elif op < 0.45 and tables:                  # fork one entry
+                tid = rnd.choice(list(tables))
+                if not tables[tid]:
+                    continue
+                i = rnd.randrange(len(tables[tid]))
+                got = alloc.alloc(1)
+                if got is None:
+                    continue
+                old = tables[tid][i]
+                tables[tid][i] = got[0]
+                alloc.free([old])
+                # the fork must not have freed a frame others still map
+                if any(old in fr for fr in tables.values()) \
+                        or old in indexed.values():
+                    assert alloc.refcount(old) >= 1, tag
+            elif op < 0.65 and tables:                  # release a table
+                tid = rnd.choice(list(tables))
+                freed = tables.pop(tid)
+                alloc.free(freed)
+                for f in freed:
+                    still = any(f in fr for fr in tables.values()) \
+                        or f in indexed.values()
+                    if still:
+                        assert alloc.refcount(f) >= 1, \
+                            f"{tag}: released sharer freed frame {f} " \
+                            f"another live owner maps"
+            elif op < 0.85 and tables:                  # register into index
+                tid = rnd.choice(list(tables))
+                for i, f in enumerate(tables[tid][:rnd.randint(0, 3)]):
+                    key = ("k", tid, i, rnd.randint(0, 4))
+                    if key not in indexed:
+                        index.register([key], [f])
+                        indexed[key] = f
+            else:                                       # reclaim LRU pins
+                want_free = rnd.randint(0, 3)
+                index.reclaim(want_free)
+                indexed = {k: f for k, f in indexed.items()
+                           if k in index._entries}
+            conserve(tag)
+
+        for tid in list(tables):
+            alloc.free(tables.pop(tid))
+        conserve(f"seed={seed} final-release")
+        index.flush()
+        indexed.clear()
+        conserve(f"seed={seed} flush")
+        assert alloc.n_free == n_pages
+
+    def test_share_of_free_page_raises(self):
+        alloc = PageAllocator(4)
+        with pytest.raises(ValueError, match="share of free"):
+            alloc.share([0])
+
+    def test_prefix_keys_alignment(self):
+        """Only FULL pages key; chains are exact (no collisions) and
+        prefix-consistent."""
+        a = prefix_keys(list(range(20)), 8)
+        b = prefix_keys(list(range(16)) + [99, 98], 8)
+        assert len(a) == 2 and len(b) == 2
+        assert a == b                       # same first 16 tokens
+        assert prefix_keys(list(range(7)), 8) == []
+        c = prefix_keys([1] + list(range(1, 20)), 8)
+        assert c[0] != a[0] and c[1] != a[1]
+
+    def test_reclaim_skips_frames_live_tables_map(self):
+        """Reclaiming an index entry whose frame a live table still maps
+        drops the pin but must not put the frame on the free list."""
+        alloc = PageAllocator(4)
+        index = PrefixIndex(alloc)
+        frames = alloc.alloc(2)
+        index.register([("a",), ("b",)], frames)
+        freed = index.reclaim(2)            # table still owns both
+        assert freed == 0 and alloc.n_free == 2
+        assert alloc.refcount(frames[0]) == 1
+        alloc.free(frames)
+        assert alloc.n_free == 4
+
+
+# ---------------------------------------------------------------------------
+# fork-on-write: bystander isolation
+# ---------------------------------------------------------------------------
+
+class TestForkOnWrite:
+    def test_mid_decode_fork_preserves_sharer(self):
+        """Two slots share physical frame 0 for their first page; slot 1
+        forks it mid-decode (serving.batch.fork_page).  The sharer's
+        subsequent decode logits are BIT-identical to a run without the
+        fork, and the forked copy starts bit-identical to the donor
+        frame (PR 3's bystander-row convention, extended to frames)."""
+        from repro.serving import batch as B
+        cfg, params = small_model()
+        b, ps, max_seq = 2, 4, 16
+        rng = np.random.default_rng(3)
+        toks = rng.integers(0, cfg.vocab, (b, ps)).astype(np.int32)
+        toks[1] = toks[0]                   # identical first page
+
+        def run(fork: bool):
+            state = B.init_slots(cfg, b, max_seq, paged=True, page_size=ps,
+                                 n_pages=8)
+            # slot 0: frames [0, 1, 2, ...]; slot 1 SHARES frame 0
+            pt = np.full((b, max_seq // ps), T.PAGE_SENTINEL, np.int32)
+            pt[0] = [0, 1, 2, 3]
+            pt[1] = [0, 4, 5, 6]
+            cache = {**state.cache, "page_table": jnp.asarray(pt)}
+            lengths = jnp.zeros((b,), jnp.int32)
+            # both rows append the SAME first page (identical writes to
+            # the shared frame), then decode independently
+            logits, cache, lengths = T.prefill_chunk(
+                params, cfg, {"tokens": jnp.asarray(toks)}, cache, lengths)
+            state = state._replace(cache=cache, lengths=lengths)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs = []
+            for step in range(3):
+                if fork and step == 1:
+                    state = B.fork_page(state, 1, 0, 0, 7, cfg=cfg)
+                logits, cache, lengths = T.decode_step(
+                    params, cfg, {"tokens": tok}, state.cache,
+                    state.lengths)
+                state = state._replace(cache=cache, lengths=lengths)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                outs.append(np.asarray(logits))
+            return outs, state
+
+        base, _ = run(fork=False)
+        forked, st_f = run(fork=True)
+        for a, b_ in zip(base, forked):
+            np.testing.assert_array_equal(a, b_)       # both rows, bitwise
+        pt = np.asarray(st_f.cache["page_table"])
+        assert pt[1, 0] == 7 and pt[0, 0] == 0         # only slot 1 remapped
+        k0 = jax.tree.leaves(st_f.cache["period"])[0]
+        np.testing.assert_array_equal(np.asarray(k0[:, 7]),
+                                      np.asarray(k0[:, 0]))
+
+    def test_full_share_fork_e2e(self):
+        """Engine-level: a request whose prompt is ENTIRELY a cached
+        prefix forks its last shared page, re-enters one token, and both
+        donor and beneficiary match their solo oracle runs while the
+        donor keeps decoding."""
+        cfg, params = small_model()
+        rng = np.random.default_rng(7)
+        prompt = rng.integers(0, cfg.vocab, (1, 2 * PAGE)).astype(np.int32)
+        eng = Engine(params, cfg, paged=True, page_size=PAGE,
+                     share_prefix=True, **ENGINE_KW)
+        r0 = eng.submit({"tokens": prompt}, max_new=6)
+        # donor finishes prefill (and registers) before the twin arrives
+        while eng._sched.requests[r0].status == "prefilling" \
+                or eng._sched.requests[r0].status == "queued":
+            eng.step()
+        r1 = eng.submit({"tokens": prompt.copy()}, max_new=4)
+        res = eng.drain()
+        ex = eng._sched.ex
+        assert ex.forks == 1 and ex.skipped_tokens == 2 * PAGE - 1
+        oracle = Engine(params, cfg, **ENGINE_KW)
+        a = oracle.submit({"tokens": prompt}, max_new=6)
+        b = oracle.submit({"tokens": prompt.copy()}, max_new=4)
+        want = oracle.drain()
+        np.testing.assert_array_equal(res[r0], want[a])
+        np.testing.assert_array_equal(res[r1], want[b])
+        check_paged_end_state(ex, "full-share fork e2e")
+
+    def test_reclaim_under_pressure_admits(self):
+        """A pool too small to hold new reservations plus stale index
+        pins: admission reclaims LRU cached frames instead of blocking
+        forever, and completes correctly."""
+        cfg, params = small_model()
+        rng = np.random.default_rng(13)
+        p1 = rng.integers(0, cfg.vocab, (1, 2 * PAGE)).astype(np.int32)
+        p2 = rng.integers(0, cfg.vocab, (1, 2 * PAGE)).astype(np.int32)
+        # pool of 4 pages: one 16+8 request needs 3; after its release
+        # 2 pages stay index-pinned, so the unrelated second request
+        # (needs 3) must reclaim
+        eng = Engine(params, cfg, paged=True, page_size=PAGE,
+                     share_prefix=True, cache_pages=4, **ENGINE_KW)
+        r1 = eng.submit({"tokens": p1}, max_new=4)
+        res1 = eng.drain()
+        ex = eng._sched.ex
+        assert len(ex.prefix) == 2 and ex.allocator.n_live == 2
+        r2 = eng.submit({"tokens": p2}, max_new=4)
+        res2 = eng.drain()
+        assert res1[r1].shape == (4,) and res2[r2].shape == (4,)
+        assert len(ex.prefix) < 2 + 2      # pins were reclaimed, not grown
+        check_paged_end_state(ex, "reclaim under pressure")
