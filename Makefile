@@ -5,9 +5,10 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 # own matrix entry with a 120s per-test ceiling)
 SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_serving_e2e.py tests/test_chunked_prefill.py \
-                 tests/test_paged_cache.py tests/test_serving_fuzz.py
+                 tests/test_paged_cache.py tests/test_serving_fuzz.py \
+                 tests/test_speculative.py
 
-.PHONY: test test-unit test-serving test-fuzz bench-smoke \
+.PHONY: test test-unit test-serving test-fuzz test-spec bench-smoke \
         bench-smoke-continuous bench-serving
 
 test:            ## tier-1 test suite
@@ -25,12 +26,15 @@ test-fuzz:       ## cross-mode differential serving fuzzer, bigger budget
 	FUZZ_EXAMPLES=8 $(PYTHON) -m pytest -q --durations=10 \
 	  tests/test_serving_fuzz.py
 
+test-spec:       ## speculative decoding suite (parity, EOS, host syncs)
+	$(PYTHON) -m pytest -q --durations=10 tests/test_speculative.py
+
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke
 
-bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared
+bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared + spec
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
-	  --prefill-heavy --paged --share-prefix
+	  --prefill-heavy --paged --share-prefix --speculative
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

@@ -46,6 +46,18 @@ is charged once (refcount > 1) and its prefill windows are skipped, so
 the shared run admits more seats concurrently and streams fewer prefill
 windows at equal cache memory.
 
+``--speculative`` replays a SINGLE-STREAM greedy trace (capacity 1 --
+the latency-bound regime speculation exists for) through the continuous
+engine with and without self-speculative decoding -- recorded as the
+``continuous_speculative`` section.  The verifier is the packed model
+over weights whose deep layers' residual contributions are damped,
+modeling the trained-model regime where a truncated-layer draft agrees
+with the full model most of the time (random init gives a useless ~0%
+draft agreement; see the section's ``draft_acceptance_rate`` for what
+was actually measured).  The draft is the engine's default 1-layer
+truncated self-draft; both runs must emit token-identical greedy
+output.
+
 All traces derive from ``--seed`` (default 0), which is recorded in the
 JSON -- so cross-PR deltas in BENCH_serving.json compare identical
 workloads instead of mixing trace noise with real regressions.
@@ -536,6 +548,133 @@ def run_shared(cfg, q, args) -> dict:
     }
 
 
+def _damp_deep_layers(params, keep: int, eps: float):
+    """Scale the residual-branch output projections (``attn.wo``,
+    ``mlp.wo``) of layers >= ``keep`` by ``eps``.
+
+    A randomly initialized model gives a truncated-layer draft nothing
+    to agree with (~0% acceptance): every layer's residual update is
+    full-magnitude noise, so dropping layers scrambles the argmax.  In
+    a trained model the early layers dominate next-token identity and
+    deep layers refine -- damping the deep residual outputs reproduces
+    that regime synthetically (bench-llama, pattern ``('attn',)``:
+    stack index == layer index), giving the 1-layer self-draft a
+    realistic ~80% agreement.  Only the *speedup* depends on this;
+    correctness never does -- emitted tokens are always the
+    verifier's, and the bench asserts spec/plain token equality."""
+    out = dict(params)
+    new_per = []
+    for t in params["period"]:
+        n = jax.tree.leaves(t)[0].shape[0]
+        sc = np.where(np.arange(n) >= keep, eps, 1.0).astype(np.float32)
+
+        def s(w):
+            return w * sc.reshape((n,) + (1,) * (w.ndim - 1))
+
+        t = dict(t)
+        t["attn"] = {**t["attn"], "wo": s(t["attn"]["wo"])}
+        t["mlp"] = {**t["mlp"], "wo": s(t["mlp"]["wo"])}
+        new_per.append(t)
+    out["period"] = tuple(new_per)
+    return out
+
+
+def run_speculative(cfg, params, args) -> dict:
+    """Single-stream greedy trace (capacity 1) through the continuous
+    engine with and without self-speculative decoding, same damped
+    packed weights, token-identical outputs asserted.  Capacity 1 is
+    the regime speculation targets: batching can't hide decode's
+    memory-bound weight stream, so committing several verified tokens
+    per tick is the only remaining single-stream latency lever."""
+    rng = np.random.default_rng(args.seed + 53)
+    if args.smoke:
+        n, chunk, k, keep = 3, 4, 3, 1
+        prompt_len, max_new, prefill_bucket, eps = 12, 24, 16, 0.05
+    else:
+        n, chunk, k, keep = 4, 4, 3, 1
+        prompt_len, max_new, prefill_bucket, eps = 24, 48, 32, 0.05
+    trace = [{
+        "arrival": 0.0,
+        "prompt": rng.integers(0, cfg.vocab, (1, prompt_len),
+                               dtype=np.int64).astype(np.int32),
+        "max_new": max_new,
+    } for _ in range(n)]
+    s_cap = prompt_len + max_new
+
+    damped = _damp_deep_layers(params, keep, eps)
+    packed = deploy.pack_params(
+        quantize_params(damped, None, HaloConfig(tile=128)))
+    kw = dict(prefill_bucket=prefill_bucket, decode_bucket=16,
+              capacity=1, chunk=chunk)
+    eng_n = Engine(packed, cfg, **kw)
+    ex_n = eng_n._executor(capacity=1, max_seq=s_cap)
+    eng_s = Engine(packed, cfg, speculative=True, draft_layers=keep,
+                   k=k, **kw)
+    ex_s = eng_s._executor(capacity=1, max_seq=s_cap)
+    assert ex_s.spec, "speculation gated off on a pure-attention config?"
+
+    def replay(ex):
+        """Capacity-1 drain of the whole trace; returns the wall,
+        per-request tokens, and this replay's spec counter deltas."""
+        t0_ticks, t0_slots, t0_toks = (
+            (ex.spec_ticks, ex.spec_slots, ex.spec_tokens)
+            if getattr(ex, "spec", False) else (0, 0, 0))
+        sched = Scheduler(ex)
+        _submit_trace(sched, trace, with_arrivals=False)
+        t0 = time.perf_counter()
+        while sched.pending:
+            sched.tick()
+        wall = time.perf_counter() - t0
+        toks = {rid: list(r.tokens) for rid, r in sched.requests.items()}
+        if getattr(ex, "spec", False):
+            dticks = ex.spec_ticks - t0_ticks
+            dslots = ex.spec_slots - t0_slots
+            dtoks = ex.spec_tokens - t0_toks
+        else:
+            dticks = dslots = dtoks = 0
+        return wall, toks, (dticks, dslots, dtoks)
+
+    print(f"[speculative] {n} x {max_new}-token single-stream greedy "
+          f"requests, capacity 1, draft_layers {keep}/{cfg.n_layers}, "
+          f"k {k} (deep layers damped x{eps})")
+    total = n * max_new
+    _, toks_n, _ = replay(ex_n)                 # warm compiles + parity
+    _, toks_s, _ = replay(ex_s)
+    assert toks_n == toks_s, \
+        "speculative greedy output diverged from the plain engine"
+    n_wall, _, _ = min((replay(ex_n) for _ in range(args.repeats)),
+                       key=lambda t: t[0])
+    s_wall, _, (dticks, dslots, dtoks) = min(
+        (replay(ex_s) for _ in range(args.repeats)), key=lambda t: t[0])
+    n_tps, s_tps = total / n_wall, total / s_wall
+    accept = (dtoks - dslots) / (dslots * k) if dslots else 0.0
+    per_tick = dtoks / dslots if dslots else 0.0
+    print(f"  plain      {n_wall:6.3f}s  {n_tps:8.1f} tok/s")
+    print(f"  speculative{s_wall:6.3f}s  {s_tps:8.1f} tok/s  "
+          f"(acceptance {accept:.2f}, {per_tick:.2f} tok/tick)  "
+          f"-> {s_tps / n_tps:.2f}x")
+    return {
+        "seed": args.seed,
+        "n_requests": n,
+        "capacity": 1,
+        "chunk": chunk,
+        "k": k,
+        "draft_layers": keep,
+        "n_layers": cfg.n_layers,
+        "deep_layer_damping": eps,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "total_new_tokens": total,
+        "greedy_outputs_identical": True,
+        "plain": {"wall_s": n_wall, "decode_tokens_per_s": n_tps},
+        "speculative": {"wall_s": s_wall, "decode_tokens_per_s": s_tps,
+                        "spec_ticks": dticks,
+                        "mean_tokens_per_tick": per_tick,
+                        "draft_acceptance_rate": accept},
+        "speculative_speedup_vs_plain": s_tps / n_tps,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -556,6 +695,11 @@ def main() -> None:
                          "paged cache with copy-on-write prefix sharing "
                          "on a half-capacity pool -> continuous_shared "
                          "section")
+    ap.add_argument("--speculative", action="store_true",
+                    help="also replay a capacity-1 greedy single-stream "
+                         "trace with and without self-speculative "
+                         "decoding (damped deep layers) -> "
+                         "continuous_speculative section")
     ap.add_argument("--seed", type=int, default=0,
                     help="root seed for every synthetic trace (recorded "
                          "in the JSON so cross-PR deltas replay the same "
@@ -608,6 +752,9 @@ def main() -> None:
             report["continuous_paged"] = run_paged(cfg, q, args)
         if args.share_prefix:
             report["continuous_shared"] = run_shared(cfg, q, args)
+        if args.speculative:
+            report["continuous_speculative"] = run_speculative(
+                cfg, params, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

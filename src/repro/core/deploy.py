@@ -404,6 +404,43 @@ def cache_rows_scatter_dense(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
     return out
 
 
+def truncate_params(params: Any, cfg, n_layers: int) -> Tuple[Any, Any]:
+    """Slice a truncated-layer draft model out of a full param tree.
+
+    Returns ``(draft_params, draft_cfg)`` where the draft runs the FIRST
+    ``n_layers`` blocks of the full model and shares every weight with it
+    (slices view the stacked period leaves; nothing is re-packed or
+    copied, so a resident engine pays no extra weight HBM for its
+    drafter).  Works on any leaf type the period stacks hold -- dense
+    arrays, ``HaloPacked``, ``DeployQuantWeight`` -- because all of them
+    are pytrees whose array leaves carry the layer stack on axis 0 and
+    whose static ``shape`` metadata is per-slice (or only consumed via
+    its trailing (K, N) dims).
+
+    The self-speculative drafter in serving/engine.py is the consumer:
+    the draft's early-layer pass approximates the full model's next-token
+    argmax well on trained weights (logit-lens regime), and any
+    disagreement only costs acceptance rate, never correctness."""
+    if not 1 <= n_layers < cfg.n_layers:
+        raise ValueError(
+            f"draft n_layers must be in [1, {cfg.n_layers - 1}], "
+            f"got {n_layers}")
+    pat = len(cfg.block_pattern)
+    dp, leftover = divmod(n_layers, pat)
+    out = {k: v for k, v in params.items()
+           if k not in ("period", "remainder")}
+    out["period"] = tuple(jax.tree.map(lambda x: x[:dp], stack)
+                          for stack in params["period"])
+    if dp < cfg.n_periods:
+        rem = tuple(jax.tree.map(lambda x: x[dp], params["period"][j])
+                    for j in range(leftover))
+    else:
+        rem = tuple(params["remainder"][:leftover])
+    out["remainder"] = rem
+    draft_cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    return out, draft_cfg
+
+
 def deploy_params(qparams: Any) -> Any:
     """HaloQuantized/StackedHalo leaves -> ``DeployQuantWeight``.
 

@@ -953,7 +953,8 @@ def _prefill_once(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
                   cache, lengths: jnp.ndarray,
                   active: Optional[jnp.ndarray] = None,
-                  write_floor: Optional[jnp.ndarray] = None):
+                  write_floor: Optional[jnp.ndarray] = None,
+                  all_logits: bool = False):
     """Incremental prefill: append a W-token prompt window into an
     EXISTING cache at each row's current length (the cache-append
     primitive under chunked prefill and k-way admission -- see
@@ -973,7 +974,10 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     refcount-shared prefix frames against writes (see ``block_decode``).
 
     Returns (logits (B, V) at each row's last valid window position,
-    new_cache, new_lengths).  Splitting a prompt into windows and feeding
+    new_cache, new_lengths).  With ``all_logits=True`` the logits are
+    returned at every window position instead, shaped (B, W, V) --
+    positions at or beyond ``chunk_lengths`` carry junk values the caller
+    must mask (the speculative verify path consumes this).  Splitting a prompt into windows and feeding
     them through ``prefill_chunk`` yields the same cache/logits as one
     ``prefill`` call over the whole prompt (modulo fp summation order:
     window attention is an offset-masked softmax over the cache rather
@@ -1026,9 +1030,12 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
                              valid, page_table=page_table,
                              write_floor=write_floor)
         new_rem.append(nc)
-    idx = jnp.clip(cl - 1, 0, w - 1)[:, None, None]
-    x_last = jnp.take_along_axis(x, idx, axis=1)          # (B, 1, d)
-    logits = _logits(params, cfg, x_last)[:, 0]
+    if all_logits:
+        logits = _logits(params, cfg, x)                  # (B, W, V)
+    else:
+        idx = jnp.clip(cl - 1, 0, w - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)      # (B, 1, d)
+        logits = _logits(params, cfg, x_last)[:, 0]
     new_cache = {"period": new_period, "remainder": tuple(new_rem)}
     if page_table is not None:
         new_cache["page_table"] = page_table

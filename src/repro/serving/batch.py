@@ -328,3 +328,109 @@ def decode_chunk(params, state: SlotState, active: jnp.ndarray,
     (st, _, _), (toks, emitted) = jax.lax.scan(
         body, (state, active, remaining), xs=None, length=n_steps)
     return st, toks, emitted
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decode (draft -> verify -> commit, one jit)
+# ---------------------------------------------------------------------------
+
+def spec_chunk(params, draft_params, state: SlotState,
+               draft_state: SlotState, active: jnp.ndarray,
+               remaining: jnp.ndarray, eos_ids: jnp.ndarray,
+               write_floor: Optional[jnp.ndarray] = None, *,
+               cfg: ModelConfig, draft_cfg: ModelConfig, sampler, k: int
+               ) -> Tuple[SlotState, SlotState, jnp.ndarray, jnp.ndarray]:
+    """One speculative tick: every live slot drafts ``k`` tokens, the full
+    model verifies all k+1 positions in ONE ``T.prefill_chunk`` call, and
+    each slot commits its accepted run -- between 1 and k+1 tokens.
+
+    Emitted tokens are ALWAYS the verifier's own choices.  The draft's
+    greedy proposals d_1..d_k only decide how many verifier positions are
+    usable this tick: position i+1's logits are conditioned on d_1..d_i,
+    so they equal the sequential model's logits exactly while the
+    proposals match the verifier tokens (``d_i == v_{i-1}``), and become
+    counterfactual at the first mismatch.  Each v_i is sampled with the
+    SAME per-slot PRNG subkey the sequential ``decode_chunk`` would use
+    at that step (the split chain is precomputed for all k+1 steps and
+    the slot key advanced by exactly the number of tokens committed), so
+    the emitted stream is token-identical to the non-speculative path --
+    greedy or sampled -- and draft quality moves ONLY throughput.
+
+    The verifier cache keeps all ``min(k+1, remaining)`` appended window
+    positions; entries past the committed length are dead weight the
+    length mask hides until the next tick overwrites them.  That is only
+    sound for length-masked layouts (global attention / windowless
+    local), which is why the engine gates speculation on the same
+    ``T.paged_kind`` predicate as prefix sharing -- ring buffers and
+    SSM/RG-LRU states mutate destructively and cannot roll back.  The
+    draft cache (always contiguous) rolls back the same way: its scan
+    wrote k entries, its length advances by the committed count.
+
+    Shapes mirror ``decode_chunk`` with ``n_steps = k + 1``: returns
+    (new_state, new_draft_state, toks (k+1, B), emitted (k+1, B))."""
+    assert k >= 1, "spec_chunk requires k >= 1 (k=0 is plain decode)"
+    b = state.tok.shape[0]
+    rows = jnp.arange(b)
+    active = active.astype(bool)
+
+    # --- draft: k greedy steps on the truncated model ---------------------
+    def draft_body(carry, _):
+        dcache, dlen, tok = carry
+        logits, dcache, dlen = T.decode_step(
+            draft_params, draft_cfg, decode_inputs(tok, draft_cfg),
+            dcache, dlen, active=active)
+        nt = jnp.argmax(mask_vocab(logits, draft_cfg), -1).astype(jnp.int32)
+        return (dcache, dlen, jnp.where(active, nt, tok)), nt
+
+    (dcache, _, _), props = jax.lax.scan(
+        draft_body, (draft_state.cache, draft_state.lengths, state.tok),
+        xs=None, length=k)                                  # props (k, B)
+
+    # --- verify: all k+1 positions in one fused append --------------------
+    win_tok = jnp.concatenate([state.tok[:, None], props.T], axis=1)
+    window = ({"embeds": jax.vmap(lambda t: pseudo_embed(t, cfg),
+                                  in_axes=1, out_axes=1)(win_tok)}
+              if cfg.embeds_input else {"tokens": win_tok})
+    cl = jnp.clip(remaining, 1, k + 1)
+    window["chunk_lengths"] = cl
+    logits, cache, _ = T.prefill_chunk(params, cfg, window, state.cache,
+                                       state.lengths, active=active,
+                                       write_floor=write_floor,
+                                       all_logits=True)     # (B, k+1, V)
+
+    # --- sample every position with the sequential path's key chain -------
+    def key_body(keys, _):
+        split = jax.vmap(jax.random.split)(keys)            # (B, 2, 2)
+        return split[:, 0], (split[:, 0], split[:, 1])
+
+    _, (key_after, subkeys) = jax.lax.scan(
+        key_body, state.keys, xs=None, length=k + 1)
+    v = jax.vmap(lambda l, sk: sample_rows(l, cfg, sampler, sk),
+                 in_axes=(1, 0))(logits, subkeys)           # (k+1, B)
+
+    # --- acceptance: longest prefix of proposals matching verifier --------
+    match = (props == v[:k]).astype(jnp.int32)              # (k, B)
+    n_acc = jnp.cumprod(match, axis=0).sum(0) if k else jnp.zeros(
+        (b,), jnp.int32)
+    m = jnp.minimum(n_acc + 1, cl)
+    is_eos = (eos_ids[None, :] >= 0) & (v == eos_ids[None, :])
+    m = jnp.where(is_eos.any(0),
+                  jnp.minimum(m, jnp.argmax(is_eos, axis=0) + 1), m)
+    m = jnp.where(active, jnp.maximum(m, 1), 0)
+
+    # --- commit m tokens per slot; roll both caches back to length+m ------
+    mi = jnp.clip(m - 1, 0, k)
+    last = v[mi, rows]
+    new_state = SlotState(
+        tok=jnp.where(active, last, state.tok),
+        lengths=state.lengths + m,
+        keys=jnp.where(active[:, None], key_after[mi, rows], state.keys),
+        cache=cache)
+    new_draft = SlotState(
+        tok=jnp.where(active, last, draft_state.tok),
+        lengths=draft_state.lengths + m,
+        keys=draft_state.keys,
+        cache=dcache)
+    emitted = jnp.arange(k + 1, dtype=jnp.int32)[:, None] < m[None, :]
+    toks = jnp.where(emitted, v, state.tok[None, :])
+    return new_state, new_draft, toks, emitted

@@ -42,6 +42,18 @@ normally with sharing inert.  Token outputs are unchanged -- the
 differential fuzzer (tests/test_serving_fuzz.py) holds all modes to the
 contiguous oracle.
 
+``Engine(..., speculative=True, draft=..., k=...)`` turns on
+self-speculative decoding on the continuous path: a cheap draft model --
+by default the first ``draft_layers`` blocks sliced out of the SAME
+weight tree (zero extra weight memory), or an explicit low-bit re-pack --
+proposes ``k`` tokens per live slot per tick and the full model verifies
+all k+1 positions in one fused call, committing 1..k+1 tokens per slot
+per tick (serving/batch.spec_chunk).  Emitted tokens are token-identical
+to the non-speculative path, greedy or sampled; draft quality only moves
+throughput.  Architectures with ring/recurrent cache state serve
+normally with speculation inert (same gate as share_prefix), as does
+``k=0``.  See docs/serving.md.
+
 Prompt lengths are right-padded to ``prefill_bucket`` multiples so prefill
 compilations are bounded by the bucket count.  The continuous path admits
 prompts of ANY length that fits the slot cache: prompts are appended to a
@@ -56,7 +68,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -65,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core import deploy
 from ..models import transformer as T
 from ..utils import next_pow2, round_up
 from . import batch as B
@@ -212,6 +224,47 @@ class _DeviceExecutor:
             functools.partial(B.decode_chunk, cfg=cfg, sampler=eng.sampler,
                               n_steps=self.chunk),
             donate_argnums=donate)
+        # self-speculative decode: gated on the SAME predicate as prefix
+        # sharing -- rejected verify-window entries (and the draft's own
+        # over-eager appends) roll back by LENGTH accounting only, which
+        # is sound for length-masked cache layouts but not for ring
+        # local-KV or SSM/RG-LRU state, whose writes are destructive.
+        # Gated engines serve normally with speculation inert.
+        self.spec = bool(eng.speculative) and eng.spec_k >= 1 and all(
+            T.paged_kind(cfg, kind)
+            for kind in tuple(cfg.block_pattern)
+            + tuple(cfg.remainder_pattern))
+        if self.spec:
+            self.draft_params, self.draft_cfg = eng.draft_serve_params()
+            dcfg = self.draft_cfg
+            self.spec = all(
+                T.paged_kind(dcfg, kind)
+                for kind in tuple(dcfg.block_pattern)
+                + tuple(dcfg.remainder_pattern))
+        if self.spec:
+            # the draft's KV cache is ALWAYS contiguous (it is private to
+            # this executor: nothing shares it, so paging buys nothing)
+            self.draft_state = B.init_slots(dcfg, self.capacity,
+                                            self.max_seq)
+            spec_donate = () if jax.default_backend() == "cpu" else (2, 3)
+            self._spec_chunk = jax.jit(
+                functools.partial(B.spec_chunk, cfg=cfg, draft_cfg=dcfg,
+                                  sampler=eng.sampler, k=eng.spec_k),
+                donate_argnums=spec_donate)
+            self._draft_append = jax.jit(
+                functools.partial(B.prefill_append, cfg=dcfg,
+                                  sampler=eng.sampler),
+                static_argnames=("fresh", "max_seq"),
+                donate_argnums=donate)
+            self._draft_evict = jax.jit(
+                functools.partial(B.evict_slot, cfg=dcfg))
+            # acceptance diagnostics (host-side, from the already-synced
+            # ``emitted``): committed tokens per slot-tick =
+            # spec_tokens / spec_slots in [1, k+1]; draft acceptance rate
+            # = (spec_tokens - spec_slots) / (spec_slots * k)
+            self.spec_ticks = 0
+            self.spec_slots = 0
+            self.spec_tokens = 0
 
     def prefill_width(self, remaining: int) -> int:
         """Window width for a seat with ``remaining`` prompt tokens left:
@@ -323,6 +376,18 @@ class _DeviceExecutor:
             jnp.asarray(chunk_lens), jnp.asarray(total), jnp.asarray(seat),
             jnp.asarray(rids), jnp.asarray(first), jnp.asarray(floors),
             fresh=fresh, max_seq=self.max_seq)
+        if self.spec:
+            # mirror the window into the draft cache (its drafts must
+            # condition on the prompt too).  Same call shape, draft
+            # weights, contiguous rows, no floors; the sampled tok0 /
+            # key updates land in draft slot state nobody reads
+            # (spec_chunk drafts from the VERIFIER's token and PRNG).
+            # No host sync: the result stays on device.
+            self.draft_state, _, _ = self._draft_append(
+                self.draft_params, self.draft_state, jnp.asarray(slots),
+                window, jnp.asarray(chunk_lens), jnp.asarray(total),
+                jnp.asarray(seat), jnp.asarray(rids), jnp.asarray(first),
+                None, fresh=fresh, max_seq=self.max_seq)
         tok0, done = np.asarray(tok0), np.asarray(done)   # host sync
         self.append_log.append((width, len(group)))
         self.append_calls += 1
@@ -333,6 +398,25 @@ class _DeviceExecutor:
     def run_chunk(self, active: np.ndarray, remaining: np.ndarray,
                   eos_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         floor = jnp.asarray(self._floors) if self.paged else None
+        if self.spec:
+            # draft scan + fused verify + acceptance + commit + rollback,
+            # all inside ONE jit call -- the draft->verify round-trip
+            # never bounces through the host, preserving the
+            # one-host-sync-per-tick contract below
+            (self.state, self.draft_state, toks, emitted) = \
+                self._spec_chunk(
+                    self.params, self.draft_params, self.state,
+                    self.draft_state, jnp.asarray(active),
+                    jnp.asarray(remaining, dtype=jnp.int32),
+                    jnp.asarray(eos_ids, dtype=jnp.int32), floor)
+            toks = np.asarray(toks)          # the one host sync per chunk
+            emitted = np.asarray(emitted)
+            alive = int(np.asarray(active).sum())
+            if alive:
+                self.spec_ticks += 1
+                self.spec_slots += alive
+                self.spec_tokens += int(emitted.sum())
+            return toks, emitted
         self.state, toks, emitted = self._chunk(
             self.params, self.state, jnp.asarray(active),
             jnp.asarray(remaining, dtype=jnp.int32),
@@ -424,6 +508,16 @@ class _DeviceExecutor:
         self._slot_frames[slot] = row_frames
         self._floors[slot] = len(kept) * ps
         req.prefill_skip = skip
+        if self.spec and skip:
+            # the shared prefix's KV was never computed for the DRAFT
+            # cache (sharing skips exactly that prefill); seed the draft
+            # row's length so its appends stay position-aligned with the
+            # verifier.  The draft attends zeros over the skipped span --
+            # that can only cost acceptance rate, never correctness
+            # (emitted tokens are always the verifier's).
+            self.draft_state = self.draft_state._replace(
+                lengths=self.draft_state.lengths.at[slot].set(
+                    np.int32(skip)))
         if self.share:
             n_full = req.prompt_len // ps
             self._slot_reg[slot] = (keys[:n_full], row_frames[:n_full])
@@ -443,6 +537,9 @@ class _DeviceExecutor:
             if self.share:
                 self._slot_reg.pop(slot, None)
         self.state = self._evict(self.state, np.int32(slot))
+        if self.spec:
+            self.draft_state = self._draft_evict(self.draft_state,
+                                                 np.int32(slot))
 
 
 class Engine:
@@ -451,12 +548,15 @@ class Engine:
                  prefill_bucket: int = 64, decode_bucket: int = 16,
                  capacity: int = 8, chunk: int = 8,
                  max_seq: Optional[int] = None,
-                 max_prompt_len: Optional[int] = None,
                  prefill_chunk_width: Optional[int] = None,
                  admit_k: int = 4,
                  paged: bool = False, page_size: int = 16,
                  cache_pages: Optional[int] = None,
-                 share_prefix: bool = False):
+                 share_prefix: bool = False,
+                 speculative: bool = False,
+                 draft: Any = None,
+                 draft_layers: Optional[int] = None,
+                 k: int = 4):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
@@ -487,10 +587,36 @@ class Engine:
             raise ValueError(
                 "share_prefix=True requires paged=True (prefix sharing "
                 "maps page-table entries; contiguous rows have none)")
-        self._warned_max_prompt_len = False
-        self.max_prompt_len = max_prompt_len
-        if max_prompt_len is not None:
-            self._warn_max_prompt_len()
+        # self-speculative decoding (continuous path only): a cheap draft
+        # model -- by default the FIRST draft_layers blocks of the same
+        # weight tree (core/deploy.truncate_params; zero extra weight
+        # HBM), or any caller-supplied tree such as an aggressive low-bit
+        # HALO re-pack -- proposes ``k`` tokens per live slot per tick and
+        # the full model verifies all k+1 positions in one fused call.
+        # Emitted tokens are token-identical to the non-speculative path
+        # (see serving/batch.spec_chunk); draft quality only moves
+        # throughput.  k=0 disables speculation bit-identically, and
+        # architectures with ring/recurrent cache state (which cannot
+        # roll back rejected entries) serve normally with speculation
+        # inert -- the same gate as share_prefix.
+        self.speculative = bool(speculative)
+        self.spec_k = int(k)
+        if self.spec_k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        if draft is not None and draft_layers is not None:
+            raise ValueError(
+                "pass either draft (an explicit param tree / (params, "
+                "cfg) pair) or draft_layers (truncated self-draft), "
+                "not both")
+        if draft_layers is not None and not (
+                1 <= int(draft_layers) < cfg.n_layers):
+            raise ValueError(
+                f"draft_layers must be in [1, {cfg.n_layers - 1}], "
+                f"got {draft_layers}")
+        self.draft = draft
+        self.draft_layers = (int(draft_layers)
+                             if draft_layers is not None else None)
+        self._draft_resolved: Optional[Tuple[Any, ModelConfig]] = None
         self._prefill = jax.jit(
             lambda params, batch, max_seq: T.prefill(
                 B.predecode(params, cfg), cfg, batch, max_seq),
@@ -507,20 +633,6 @@ class Engine:
         self._resolved_params = None
         self._sched: Optional[Scheduler] = None
         self._executors: Dict[Tuple[int, int], _DeviceExecutor] = {}
-
-    def _warn_max_prompt_len(self) -> None:
-        """Deprecation notice for ``max_prompt_len``, AT MOST ONCE per
-        Engine (regression: it used to re-fire on later calls), with the
-        stacklevel pointing at the user's call site."""
-        if self._warned_max_prompt_len:
-            return
-        self._warned_max_prompt_len = True
-        warnings.warn(
-            "max_prompt_len is deprecated and no longer rejects long "
-            "prompts: any prompt with prompt_len + max_new <= max_seq "
-            "is served via chunked prefill (see docs/serving.md); cap "
-            "prompt length at submission time if you need a policy "
-            "limit", DeprecationWarning, stacklevel=3)
 
     # ------------------------------------------------------------------
     # prefill (bucketed)
@@ -599,6 +711,38 @@ class Engine:
             else:
                 self._resolved_params = self.params
         return self._resolved_params
+
+    def draft_serve_params(self) -> Tuple[Any, ModelConfig]:
+        """Backend-resolved draft weights + config, computed once per
+        engine (the speculative executors' second resident param set).
+
+        Default (no ``draft``): the first ``draft_layers`` blocks (half
+        the stack if unset) are SLICED out of the verifier's resolved
+        tree -- the slices are views, so the self-draft costs no extra
+        weight memory.  An explicit ``draft`` (a param tree sharing the
+        engine's config, e.g. an aggressive low-bit ``pack_params``
+        re-pack, or a ``(params, cfg)`` pair) is resolved exactly like
+        ``serve_params`` resolves the verifier."""
+        if self._draft_resolved is None:
+            cfg = self.cfg
+            if self.draft is None:
+                m = (self.draft_layers if self.draft_layers is not None
+                     else max(1, cfg.n_layers // 2))
+                self._draft_resolved = deploy.truncate_params(
+                    self.serve_params(), cfg, m)
+            else:
+                dparams, dcfg = (self.draft if isinstance(self.draft, tuple)
+                                 else (self.draft, cfg))
+                from ..kernels import ops as kops
+                is_packed = lambda x: isinstance(x, kops.HaloPacked)  # noqa: E731
+                has_packed = any(
+                    is_packed(l)
+                    for l in jax.tree.leaves(dparams, is_leaf=is_packed))
+                if has_packed and kops.default_interpret():
+                    dparams = jax.jit(functools.partial(
+                        B.predecode, cfg=dcfg))(dparams)
+                self._draft_resolved = (dparams, dcfg)
+        return self._draft_resolved
 
     # each cached executor holds a full capacity x max_seq slot cache on
     # device; keep only the most recent few (capped LRU) so generate()

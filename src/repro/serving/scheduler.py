@@ -467,6 +467,17 @@ class Scheduler:
         return pf_busy
 
     def _decode_chunk(self, finished: List[int], pf_busy: int = 0) -> None:
+        """One executor decode tick over the RUNNING slots.
+
+        Tokens-per-tick-per-slot is VARIABLE: the executor returns
+        ``(toks, emitted)`` shaped (n_steps, capacity) where n_steps is
+        whatever the tick ran -- ``chunk`` sequential decode steps on the
+        plain path, ``k + 1`` verify positions on the speculative path --
+        and ``emitted[t, s]`` marks the steps that really produced a
+        token (a speculative slot commits anywhere from 1 to k+1 per
+        tick, and EOS/budget death mid-run truncates the tail on
+        device).  The host accounting below only trusts ``emitted``; it
+        never assumes a fixed per-slot rate."""
         cap = self.ex.capacity
         active = np.zeros((cap,), bool)
         remaining = np.zeros((cap,), np.int32)
@@ -486,6 +497,23 @@ class Scheduler:
         # slots, so the sum stays <= capacity)
         self.occupancy_trace.extend(int(n) + pf_busy
                                     for n in emitted.sum(axis=1))
+        # over-emission guard: the device clamps every slot's run to its
+        # remaining budget (and truncates at EOS), so a tick emitting
+        # MORE than ``remaining`` for any slot is an executor bug -- fail
+        # loudly here rather than silently over-appending tokens a page
+        # reservation never covered
+        counts = emitted.sum(axis=0)
+        over = active & (counts > remaining)
+        if over.any():
+            s = int(np.nonzero(over)[0][0])
+            raise RuntimeError(
+                f"executor emitted {int(counts[s])} tokens for slot {s} "
+                f"(rid {self.slots[s]}) with only {int(remaining[s])} "
+                f"remaining")
+        if bool(emitted[:, ~active].any()):
+            s = int(np.nonzero(emitted.any(axis=0) & ~active)[0][0])
+            raise RuntimeError(
+                f"executor emitted tokens for inactive slot {s}")
         for t in range(toks.shape[0]):
             for s in np.nonzero(emitted[t])[0]:
                 rid = self.slots[s]

@@ -391,38 +391,24 @@ class TestPromptAdmissionPolicy:
             oracle.generate({"tokens": jnp.asarray(p)}, max_new=4,
                             mode="batch")[0])
 
-    def test_max_prompt_len_deprecated_and_inert(self, granite):
-        """max_prompt_len warns and no longer rejects: the over-"bucket"
-        prompt serves through the chunked path."""
+    def test_max_prompt_len_removed(self, granite):
+        """The max_prompt_len deprecation shim (warned since PR 3) is
+        gone: the kwarg is now an ordinary TypeError, no Engine warns,
+        and over-"bucket" prompts still serve through the chunked path."""
         cfg, params = granite
-        with pytest.warns(DeprecationWarning, match="chunked prefill"):
-            eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16,
-                         capacity=1, max_seq=32)
-        rid = eng.submit({"tokens": jnp.zeros((20,), jnp.int32)}, max_new=2)
-        res = eng.drain()
-        assert res[rid].shape == (2,)
-
-    def test_max_prompt_len_warns_exactly_once(self, granite):
-        """Regression: the deprecation warning must fire exactly once per
-        Engine, not on every submit/generate call."""
-        cfg, params = granite
+        with pytest.raises(TypeError, match="max_prompt_len"):
+            Engine(params, cfg, prefill_bucket=8, max_prompt_len=16,
+                   capacity=1, max_seq=32)
         with warnings.catch_warnings(record=True) as rec:
             warnings.simplefilter("always")
-            eng = Engine(params, cfg, prefill_bucket=8, max_prompt_len=16,
-                         capacity=1, max_seq=32)
-            for _ in range(3):
-                eng.submit({"tokens": jnp.zeros((4,), jnp.int32)},
-                           max_new=2)
-            eng.drain()
-            eng.generate({"tokens": jnp.zeros((1, 4), jnp.int32)},
-                         max_new=2)
-        dep = [w for w in rec
-               if issubclass(w.category, DeprecationWarning)
-               and "max_prompt_len" in str(w.message)]
-        assert len(dep) == 1, \
-            f"expected exactly one deprecation warning, got {len(dep)}"
-        # stacklevel points at the caller, not engine internals
-        assert dep[0].filename == __file__
+            eng = Engine(params, cfg, prefill_bucket=8, capacity=1,
+                         max_seq=32)
+            rid = eng.submit({"tokens": jnp.zeros((20,), jnp.int32)},
+                             max_new=2)
+            res = eng.drain()
+        assert res[rid].shape == (2,)
+        assert not [w for w in rec
+                    if issubclass(w.category, DeprecationWarning)]
 
     def test_empty_prompt_generate_path(self, granite):
         """End-to-end empty prompt through generate(): a (B, 0) token

@@ -6,7 +6,9 @@ This file is the standing oracle: randomized request traces (empty,
 shared-prefix, page-aligned, long/chunked prompts; staggered arrivals;
 mid-decode recycling) replayed through the continuous contiguous engine,
 the paged engine, and the paged + share_prefix engine (plus a
-pool-starved share engine that must reclaim index-cached frames), all
+pool-starved share engine that must reclaim index-cached frames, and
+two self-speculative engines -- contiguous and paged+share -- whose
+draft/verify/commit loop must never change a single token), all
 held to token-identical outputs plus the invariant bundle:
 
   - no request dropped, duplicated, or reordered (exact token equality
@@ -90,6 +92,15 @@ def get_rigs():
             "paged_share_tight": Engine(params, cfg, paged=True,
                                         page_size=PAGE, share_prefix=True,
                                         cache_pages=6, **ENGINE_KW),
+            # self-speculative modes: a truncated-layer draft proposes 3
+            # tokens per tick, the full model verifies -- emitted tokens
+            # must stay EXACTLY the contiguous oracle's (acceptance only
+            # moves tokens-per-tick, never content)
+            "spec": Engine(params, cfg, speculative=True, k=3,
+                           **ENGINE_KW),
+            "paged_share_spec": Engine(params, cfg, paged=True,
+                                       page_size=PAGE, share_prefix=True,
+                                       speculative=True, k=3, **ENGINE_KW),
         }
         exs = {name: eng._executor(capacity=CAP, max_seq=MAX_SEQ)
                for name, eng in engines.items()}
@@ -189,7 +200,8 @@ class TestDifferentialFuzz:
             assert want[rid].shape == (r["max_new"],), \
                 f"{tag}: rid {rid} emitted {want[rid].shape[0]} " \
                 f"of {r['max_new']} tokens"
-        for name in ("paged", "paged_share", "paged_share_tight"):
+        for name in ("paged", "paged_share", "paged_share_tight",
+                     "spec", "paged_share_spec"):
             ex = exs[name]
             got, admit, occ = replay(ex, trace, f"{tag} {name}")
             assert occ <= ex.capacity, \
@@ -203,7 +215,13 @@ class TestDifferentialFuzz:
                     got[rid], want[rid],
                     err_msg=f"{tag} {name}: rid {rid} diverged from the "
                             f"contiguous oracle")
-            check_paged_end_state(ex, f"{tag} {name}")
+            if ex.paged:
+                check_paged_end_state(ex, f"{tag} {name}")
+            if name.endswith("spec"):
+                # the sweep must exercise speculation for real: every
+                # slot-tick commits at least one verifier token
+                assert ex.spec and ex.spec_tokens >= ex.spec_slots > 0, \
+                    f"{tag} {name}: speculative path never engaged"
 
     def test_sharing_was_exercised(self):
         """The harness is not vacuous: a deterministic trace with a
