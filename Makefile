@@ -8,8 +8,8 @@ SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_paged_cache.py tests/test_serving_fuzz.py \
                  tests/test_speculative.py
 
-.PHONY: test test-unit test-serving test-fuzz test-spec bench-smoke \
-        bench-smoke-continuous bench-serving
+.PHONY: test test-unit test-serving test-fuzz test-spec test-sharded \
+        bench-smoke bench-smoke-continuous bench-serving bench-smoke-sharded
 
 test:            ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -29,12 +29,21 @@ test-fuzz:       ## cross-mode differential serving fuzzer, bigger budget
 test-spec:       ## speculative decoding suite (parity, EOS, host syncs)
 	$(PYTHON) -m pytest -q --durations=10 tests/test_speculative.py
 
+test-sharded:    ## tensor-parallel parity + fuzzer on a forced 4-device CPU mesh
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	  $(PYTHON) -m pytest -q --durations=10 \
+	  tests/test_sharded_serving.py tests/test_serving_fuzz.py
+
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke
 
 bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared + spec
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
 	  --prefill-heavy --paged --share-prefix --speculative
+
+bench-smoke-sharded:  ## sharded continuous section (forces a 4-device CPU mesh)
+	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
+	  --sharded
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

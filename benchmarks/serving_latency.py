@@ -80,6 +80,11 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+if "--sharded" in sys.argv and "XLA_FLAGS" not in os.environ:
+    # the sharded section needs a real multi-device runtime; the flag
+    # must land before jax initializes, hence this pre-import peek
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
 import jax                     # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
@@ -675,6 +680,85 @@ def run_speculative(cfg, params, args) -> dict:
     }
 
 
+def run_sharded(cfg, q, args) -> dict:
+    """The same continuous trace through the single-device engine and a
+    tensor-parallel engine over a (1, N) device mesh, token parity
+    asserted request-by-request.  Reports both throughputs, the mesh
+    shape, and the collectives GSPMD placed inside ONE decode-chunk jit
+    (counted from the compiled HLO) -- all of them run inside the tick's
+    single device call, so the host-sync budget is unchanged."""
+    from repro.analysis.hlo import collective_stats
+    from repro.launch.mesh import make_mesh_compat
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print("[sharded] skipped: single-device runtime "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return {"skipped": f"needs >= 2 devices, have {n_dev}"}
+    mesh = make_mesh_compat((1, n_dev), ("data", "model"))
+
+    rng = np.random.default_rng(args.seed + 71)
+    if args.smoke:
+        n, capacity, chunk = 4, 2, 4
+        prompt_lens, max_new_range, mean_gap = (8, 20), (4, 10), 0.02
+        prefill_bucket = 16
+    else:
+        n, capacity, chunk = 12, 6, 8
+        prompt_lens, max_new_range, mean_gap = (12, 40), (8, 48), 0.05
+        prefill_bucket = 32
+    trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
+    s_cap = max(prompt_lens) + max_new_range[1]
+
+    kw = dict(prefill_bucket=prefill_bucket, decode_bucket=16,
+              capacity=capacity, chunk=chunk)
+    packed = deploy.pack_params(q)
+    eng_1 = Engine(packed, cfg, **kw)
+    ex_1 = eng_1._executor(capacity=capacity, max_seq=s_cap)
+    eng_m = Engine(packed, cfg, mesh=mesh, **kw)
+    ex_m = eng_m._executor(capacity=capacity, max_seq=s_cap)
+
+    def replay(ex):
+        sched = Scheduler(ex)
+        _submit_trace(sched, trace, with_arrivals=False)
+        t0 = time.perf_counter()
+        while sched.pending:
+            sched.tick()
+        wall = time.perf_counter() - t0
+        toks = {rid: list(r.tokens) for rid, r in sched.requests.items()}
+        return wall, toks
+
+    print(f"[sharded] {n} requests, capacity {capacity}, chunk {chunk}, "
+          f"mesh {dict(mesh.shape)}")
+    _, toks_1 = replay(ex_1)                     # warm compiles + parity
+    _, toks_m = replay(ex_m)
+    assert toks_1 == toks_m, \
+        "sharded serving diverged from the single-device engine"
+    total = sum(len(t) for t in toks_1.values())
+    w1, _ = min((replay(ex_1) for _ in range(args.repeats)),
+                key=lambda t: t[0])
+    wm, _ = min((replay(ex_m) for _ in range(args.repeats)),
+                key=lambda t: t[0])
+    tps_1, tps_m = total / w1, total / wm
+    counts = collective_stats(ex_m.decode_hlo()).count_by_op
+    per_tick = {op: c for op, c in counts.items() if c}
+    print(f"  single-dev {w1:6.3f}s  {tps_1:8.1f} tok/s")
+    print(f"  sharded    {wm:6.3f}s  {tps_m:8.1f} tok/s  "
+          f"(collectives/tick {per_tick})")
+    return {
+        "seed": args.seed,
+        "n_requests": n,
+        "capacity": capacity,
+        "chunk": chunk,
+        "mesh_shape": dict(mesh.shape),
+        "n_devices": n_dev,
+        "total_new_tokens": total,
+        "tokens_identical": True,
+        "single_device": {"wall_s": w1, "decode_tokens_per_s": tps_1},
+        "sharded": {"wall_s": wm, "decode_tokens_per_s": tps_m,
+                    "decode_chunk_collectives": per_tick},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -700,6 +784,12 @@ def main() -> None:
                          "trace with and without self-speculative "
                          "decoding (damped deep layers) -> "
                          "continuous_speculative section")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also replay the continuous trace through a "
+                         "tensor-parallel engine on a (1, N) device mesh "
+                         "(forces a 4-device host-CPU runtime when no "
+                         "XLA_FLAGS are set) -> continuous_sharded "
+                         "section")
     ap.add_argument("--seed", type=int, default=0,
                     help="root seed for every synthetic trace (recorded "
                          "in the JSON so cross-PR deltas replay the same "
@@ -755,6 +845,8 @@ def main() -> None:
         if args.speculative:
             report["continuous_speculative"] = run_speculative(
                 cfg, params, args)
+        if args.sharded:
+            report["continuous_sharded"] = run_sharded(cfg, q, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

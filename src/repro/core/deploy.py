@@ -125,7 +125,9 @@ def _packable(hq: HaloQuantized) -> bool:
     return (hq.tile == TILE and hq.shape[0] >= TILE and hq.shape[1] >= TILE)
 
 
-def pack_params(qparams: Any, scheduled: bool = True) -> Any:
+def pack_params(qparams: Any, scheduled: bool = True, *,
+                specs: Any = None, mesh: Any = None,
+                rules: Any = None) -> Any:
     """HaloQuantized/StackedHalo leaves -> kernel-ready ``HaloPacked``.
 
     Done ONCE at model load: packs 4-bit codebook indices, precomputes the
@@ -137,6 +139,11 @@ def pack_params(qparams: Any, scheduled: bool = True) -> Any:
     Leaves quantized with a non-kernel tile (tile != 128) or smaller than
     one tile fall back to dense bf16 -- they are the rare small matrices
     where the 4-bit stream buys nothing.
+
+    Passing ``mesh`` (plus the matching ``model_specs`` tree as ``specs``)
+    lays the packed leaves out tensor-parallel at pack time via
+    ``shard_params`` -- the multi-device engines never hold a replicated
+    copy of the 4-bit stream.
     """
     from ..kernels.ops import pack_halo, stack_packed
     from .apply import StackedHalo
@@ -153,7 +160,65 @@ def pack_params(qparams: Any, scheduled: bool = True) -> Any:
             return leaf.dequantize().astype(jnp.bfloat16)
         return leaf
 
-    return jax.tree.map(pack, qparams, is_leaf=_is_quantized)
+    packed = jax.tree.map(pack, qparams, is_leaf=_is_quantized)
+    if mesh is not None:
+        if specs is None:
+            raise ValueError(
+                "pack_params(mesh=...) needs the model_specs tree as "
+                "specs= to resolve each leaf's logical axes")
+        packed = shard_params(packed, specs, mesh, rules)
+    return packed
+
+
+def shard_params(params: Any, specs: Any, mesh, rules=None) -> Any:
+    """Place a served weight tree on a device mesh by its logical axes.
+
+    ``specs`` is the matching ``models.transformer.model_specs`` tree
+    (ParamSpec leaves).  Dense leaves shard directly on their spec axes;
+    ``HaloPacked`` / ``DeployQuantWeight`` leaves shard their packed
+    4-bit index stream on the weight's own (K, N) axes via
+    ``deploy_spec_of`` -- tensor-parallel sharding of a packed weight
+    shards its stream identically -- while the small side tensors
+    (schedules, outlier chunks, the kernel scale layout whose (kt*nt)
+    fusion has no per-axis mapping) replicate.  A dense leaf whose shape
+    no longer matches its spec also replicates: correct, just not
+    distributed."""
+    from ..dist import sharding as sh
+    from ..kernels import ops as kops
+
+    def _put(x, axes):
+        return sh.shard_array(jnp.asarray(x), axes, mesh, rules)
+
+    def _replicate(x):
+        x = jnp.asarray(x)
+        return _put(x, (None,) * x.ndim)
+
+    def place(spec, leaf):
+        if isinstance(leaf, kops.HaloPacked):
+            d = deploy_spec_of(spec)
+            return dataclasses.replace(
+                leaf,
+                idx_packed=_put(leaf.idx_packed, d.idx_packed.logical_axes),
+                scale=_replicate(leaf.scale),
+                order_kt=_replicate(leaf.order_kt),
+                order_nt=_replicate(leaf.order_nt),
+                order_first=_replicate(leaf.order_first),
+                order_last=_replicate(leaf.order_last),
+                chunks=(None if leaf.chunks is None
+                        else jax.tree.map(_replicate, leaf.chunks)))
+        if isinstance(leaf, DeployQuantWeight):
+            d = deploy_spec_of(spec)
+            return dataclasses.replace(
+                leaf,
+                idx_packed=_put(leaf.idx_packed, d.idx_packed.logical_axes),
+                scale=_put(leaf.scale, d.scale.logical_axes))
+        x = jnp.asarray(leaf)
+        axes = (spec.logical_axes if x.shape == tuple(spec.shape)
+                else (None,) * x.ndim)
+        return _put(x, axes)
+
+    return jax.tree.map(place, specs, params,
+                        is_leaf=lambda s: isinstance(s, ParamSpec))
 
 
 # ---------------------------------------------------------------------------

@@ -155,7 +155,26 @@ def shard_activation(x, axes: Sequence[Optional[str]]):
     if mesh is None:
         return x
     spec = logical_to_spec(axes, x.shape, mesh, _CTX.rules)
+    if all(entry is None for entry in spec):
+        # an all-None spec pins the value fully replicated -- a no-op
+        # layout-wise, but the forced constraint can steer the SPMD
+        # partitioner into worse (and on host-CPU meshes, occasionally
+        # miscompiled) partitionings of neighboring scatter ops.  Leave
+        # GSPMD free instead; it is what every call site did before the
+        # constraint existed.
+        return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_array(x, axes: Sequence[Optional[str]], mesh: Mesh,
+                rules: Optional[Dict[str, Any]] = None):
+    """Place one array on ``mesh`` per its logical axes (device_put).
+
+    The eager companion to ``shard_activation``: used at engine
+    construction to lay out weight leaves and KV page pools once, before
+    any jitted call runs."""
+    return jax.device_put(x, logical_to_sharding(axes, x.shape, mesh,
+                                                 rules))
 
 
 # ---------------------------------------------------------------------------

@@ -200,10 +200,19 @@ def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
 
     interpret=None resolves per backend: Pallas/Mosaic on TPU, the XLA
     lowering of the packed layout elsewhere.  interpret=True forces the
-    Pallas interpreter (validation oracle for the kernel itself)."""
+    Pallas interpreter (validation oracle for the kernel itself).
+
+    Under an active device mesh (dist.sharding.use_rules) the XLA
+    lowering is used on every backend: a pallas_call is opaque to GSPMD
+    and cannot span devices, while the XLA graph partitions along the
+    sharded N/K dims like any other matmul.  Per-device Pallas tiles via
+    shard_map are the TPU follow-up."""
     out_dtype = out_dtype or x.dtype
     if interpret is None:
         if default_interpret():
+            return _halo_matmul_xla(x, packed, out_dtype)
+        from ..dist import sharding as _sh
+        if _sh.active_mesh() is not None:
             return _halo_matmul_xla(x, packed, out_dtype)
         interpret = False
     k, n = packed.shape

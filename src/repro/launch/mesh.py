@@ -31,12 +31,34 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_elastic_mesh(n_devices: Optional[int] = None, model_parallel: int = 16):
     """Largest viable (data, model) mesh for the available device count --
-    the elastic-scaling path after losing hosts (dist.fault)."""
+    the elastic-scaling path after losing hosts (dist.fault).
+
+    Fewer devices than ``model_parallel`` fall back to a pure-TP
+    ``(1, avail)`` mesh (the tiny-mesh / test regime).  A device count of
+    zero, a non-positive ``model_parallel``, or a ``model_parallel`` that
+    can never tile a power-of-two device count all raise instead of
+    silently building a mesh of a different shape than asked for."""
     from ..dist.fault import viable_device_counts
 
     avail = n_devices if n_devices is not None else len(jax.devices())
+    if avail < 1:
+        raise ValueError(
+            f"make_elastic_mesh needs at least one device, got {avail} "
+            f"(after host loss, re-enumerate with jax.devices() before "
+            f"rebuilding the mesh)")
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel}")
     usable = viable_device_counts(avail, model_parallel)
     if not usable:
+        if avail >= model_parallel:
+            # enough devices, yet no viable count: model_parallel cannot
+            # tile any power-of-two device count <= avail.  A silent
+            # (1, avail) here would ignore the requested TP degree.
+            raise ValueError(
+                f"model_parallel={model_parallel} cannot tile any viable "
+                f"device count <= {avail}; pick a power-of-two "
+                f"model_parallel that divides a power of two <= {avail}")
         # tiny meshes (tests): fall back to (1, avail)
         return make_mesh_compat((1, avail), ("data", "model"))
     n = usable[0]

@@ -498,6 +498,11 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
                        cfg.rope_theta).reshape(b, h, dh)
         k = apply_rope(k.reshape(b, 1, hkv, dh), lengths[:, None],
                        cfg.rope_theta).reshape(b, hkv, dh)
+    # head-parallel decode: q follows the q-head shards, k/v follow the
+    # KV pool's "kv" placement so the cache scatter stays local
+    q = shard_activation(q, ("batch", "act_heads", None))
+    k = shard_activation(k, ("batch", "kv", None))
+    v = shard_activation(v, ("batch", "kv", None))
 
     if page_table is not None and paged_kind(cfg, kind):
         # paged KV: scatter the token into the slot's physical frame,
@@ -535,6 +540,7 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
             out = paged_decode_attention(q, kc, vc, page_table,
                                          lengths + 1, window=window,
                                          attn_softcap=cfg.attn_softcap)
+        out = shard_activation(out, ("batch", "act_heads", None))
         out = dense(out.reshape(b, h * dh), ap["wo"]) \
             + (ap.get("bo", 0) if cfg.use_bias else 0)
         x = x + out.astype(x.dtype)
@@ -587,6 +593,7 @@ def block_decode(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     else:
         out = decode_attention(q, kd, vd, new_len, window=window,
                                attn_softcap=cfg.attn_softcap)
+    out = shard_activation(out, ("batch", "act_heads", None))
     out = dense(out.reshape(b, h * dh), ap["wo"]) \
         + (ap.get("bo", 0) if cfg.use_bias else 0)
     x = x + out.astype(x.dtype)
@@ -627,6 +634,9 @@ def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     if cfg.pos_emb == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "act_seq", "act_heads", None))
+    k = shard_activation(k, ("batch", "act_seq", "kv", None))
+    v = shard_activation(v, ("batch", "act_seq", "kv", None))
 
     if page_table is not None and paged_kind(cfg, kind):
         # paged KV: scatter the whole window into the seats' physical
@@ -667,6 +677,7 @@ def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         window = cfg.local_window if kind == "attn_local" else None
         out = append_attention(q, kd, vd, positions, window=window,
                                attn_softcap=cfg.attn_softcap)
+        out = shard_activation(out, ("batch", "act_seq", "act_heads", None))
         out = dense(out.reshape(b, w, h * dh), ap["wo"]) \
             + (ap.get("bo", 0) if cfg.use_bias else 0)
         return x + out.astype(x.dtype), new_cache
@@ -739,6 +750,7 @@ def _append_attn(p, cfg: ModelConfig, kind: str, x: jnp.ndarray,
             (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), valid.T))
         out = outs.swapaxes(0, 1)
 
+    out = shard_activation(out, ("batch", "act_seq", "act_heads", None))
     out = dense(out.reshape(b, w, h * dh), ap["wo"]) \
         + (ap.get("bo", 0) if cfg.use_bias else 0)
     return x + out.astype(x.dtype), new_cache

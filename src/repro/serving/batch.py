@@ -63,6 +63,33 @@ def init_slots(cfg: ModelConfig, capacity: int, max_seq: int,
                            page_size=page_size, n_pages=n_pages))
 
 
+def slots_logical_axes(cfg: ModelConfig, paged: bool = False) -> SlotState:
+    """Logical axes per SlotState leaf (mirrors ``init_slots`` structure).
+
+    Host-scheduler-owned per-slot vectors (last token, lengths, PRNG
+    streams) and the paged page table carry the ``"batch"`` axis; cache
+    leaves follow ``cache_logical_axes`` -- paged pools lead with
+    ``"pages"`` (no rule: replicated frame axis) and shard their KV-head
+    dim on ``"kv"``, so a TP mesh splits every pool by heads while the
+    page-table indirection stays whole on each device."""
+    return SlotState(tok=("batch",), lengths=("batch",),
+                     keys=("batch", None),
+                     cache=T.cache_logical_axes(cfg, paged=paged))
+
+
+def shard_slots(state: SlotState, cfg: ModelConfig, mesh, rules=None,
+                paged: bool = False) -> SlotState:
+    """Lay the slot state out on ``mesh`` by its logical axes.
+
+    Done once at executor construction; the jitted append/decode updates
+    then keep every leaf on its placement (their outputs inherit the
+    constrained shardings), so no per-tick resharding happens."""
+    from ..dist import sharding as sh
+    axes = slots_logical_axes(cfg, paged=paged)
+    return jax.tree.map(
+        lambda x, ax: sh.shard_array(x, ax, mesh, rules), state, axes)
+
+
 def set_page_row(state: SlotState, slot, row: jnp.ndarray,
                  length=0) -> SlotState:
     """Install a slot's page-table row ((P,) int32 physical frame ids,

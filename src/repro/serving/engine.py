@@ -77,6 +77,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import deploy
+from ..dist import sharding as sh
 from ..models import transformer as T
 from ..utils import next_pow2, round_up
 from . import batch as B
@@ -133,6 +134,22 @@ def _decode_loop(params, tok0: jnp.ndarray, cache, lengths: jnp.ndarray,
     return jnp.concatenate([tok0[:, None], toks.swapaxes(0, 1)], axis=1)
 
 
+def _with_rules(fn, mesh, rules):
+    """Wrap a jitted callable so it traces under ``use_rules(mesh,
+    rules)`` -- the ambient context is read at TRACE time, which is when
+    the model's ``shard_activation`` constraints decide whether to fire.
+    Identity when no mesh is given (zero overhead on the 1-device path)."""
+    if mesh is None:
+        return fn
+
+    @functools.wraps(fn)
+    def call(*args, **kwargs):
+        with sh.use_rules(mesh, rules):
+            return fn(*args, **kwargs)
+
+    return call
+
+
 class _DeviceExecutor:
     """Engine-backed scheduler executor (the device half of the contract
     in serving/scheduler.py).
@@ -151,6 +168,11 @@ class _DeviceExecutor:
                  chunk: int):
         cfg = eng.cfg
         self.eng = eng
+        # every jitted entry point traces under the engine's (mesh,
+        # rules) context so activation constraints fire; _with_rules is
+        # the identity when the engine has no mesh
+        wrap = functools.partial(_with_rules, mesh=eng.mesh,
+                                 rules=eng.rules)
         self.capacity = int(capacity)
         self.chunk = max(int(chunk), 1)
         self.max_seq = eng._round_bucket(int(max_seq))
@@ -197,15 +219,22 @@ class _DeviceExecutor:
             # donate the slot state: without it every admission's row
             # update would copy the whole state -- pools included
             donate = () if jax.default_backend() == "cpu" else (0,)
-            self._set_pages = jax.jit(B.set_page_row,
-                                      donate_argnums=donate)
-            self._copy_frame = jax.jit(
+            self._set_pages = wrap(jax.jit(B.set_page_row,
+                                           donate_argnums=donate))
+            self._copy_frame = wrap(jax.jit(
                 functools.partial(B.copy_frame, cfg=cfg),
-                donate_argnums=donate)
+                donate_argnums=donate))
         self.state = B.init_slots(cfg, self.capacity, self.max_seq,
                                   paged=self.paged,
                                   page_size=self.page_size,
                                   n_pages=getattr(self, "n_pages", None))
+        if eng.mesh is not None:
+            # lay the slot state out once: page pools shard on their KV
+            # head dim ("kv"), page tables and per-slot vectors
+            # replicate; the jitted updates then keep every leaf on its
+            # placement (the shard_activation constraints pin them)
+            self.state = B.shard_slots(self.state, cfg, eng.mesh,
+                                       eng.rules, paged=self.paged)
         # (width, n_seats) per fused append call -- k-way admission and
         # chunk-streaming diagnostics (asserted on in tests); bounded so
         # a long-running server's host memory tracks in-flight work.
@@ -216,14 +245,17 @@ class _DeviceExecutor:
         # slot state donated into append/chunk (in-place on TPU; CPU has
         # no donation support and would warn on every call)
         donate = () if jax.default_backend() == "cpu" else (1,)
-        self._append = jax.jit(
+        self._append = wrap(jax.jit(
             functools.partial(B.prefill_append, cfg=cfg, sampler=eng.sampler),
-            static_argnames=("fresh", "max_seq"), donate_argnums=donate)
-        self._evict = jax.jit(functools.partial(B.evict_slot, cfg=cfg))
-        self._chunk = jax.jit(
+            static_argnames=("fresh", "max_seq"), donate_argnums=donate))
+        self._evict = wrap(jax.jit(functools.partial(B.evict_slot, cfg=cfg)))
+        # keep the raw jit handle: decode_hlo() lowers it for the
+        # bench's per-tick collective count (the wrapper hides .lower)
+        self._chunk_jit = jax.jit(
             functools.partial(B.decode_chunk, cfg=cfg, sampler=eng.sampler,
                               n_steps=self.chunk),
             donate_argnums=donate)
+        self._chunk = wrap(self._chunk_jit)
         # self-speculative decode: gated on the SAME predicate as prefix
         # sharing -- rejected verify-window entries (and the draft's own
         # over-eager appends) roll back by LENGTH accounting only, which
@@ -246,18 +278,21 @@ class _DeviceExecutor:
             # this executor: nothing shares it, so paging buys nothing)
             self.draft_state = B.init_slots(dcfg, self.capacity,
                                             self.max_seq)
+            if eng.mesh is not None:
+                self.draft_state = B.shard_slots(self.draft_state, dcfg,
+                                                 eng.mesh, eng.rules)
             spec_donate = () if jax.default_backend() == "cpu" else (2, 3)
-            self._spec_chunk = jax.jit(
+            self._spec_chunk = wrap(jax.jit(
                 functools.partial(B.spec_chunk, cfg=cfg, draft_cfg=dcfg,
                                   sampler=eng.sampler, k=eng.spec_k),
-                donate_argnums=spec_donate)
-            self._draft_append = jax.jit(
+                donate_argnums=spec_donate))
+            self._draft_append = wrap(jax.jit(
                 functools.partial(B.prefill_append, cfg=dcfg,
                                   sampler=eng.sampler),
                 static_argnames=("fresh", "max_seq"),
-                donate_argnums=donate)
-            self._draft_evict = jax.jit(
-                functools.partial(B.evict_slot, cfg=dcfg))
+                donate_argnums=donate))
+            self._draft_evict = wrap(jax.jit(
+                functools.partial(B.evict_slot, cfg=dcfg)))
             # acceptance diagnostics (host-side, from the already-synced
             # ``emitted``): committed tokens per slot-tick =
             # spec_tokens / spec_slots in [1, k+1]; draft acceptance rate
@@ -424,6 +459,20 @@ class _DeviceExecutor:
         # the one host sync per chunk
         return np.asarray(toks), np.asarray(emitted)
 
+    def decode_hlo(self) -> str:
+        """Compiled HLO of one decode chunk (the per-tick jit target),
+        lowered against this executor's live state.  The sharded bench
+        counts the collectives GSPMD placed inside the scan from this
+        text (analysis/hlo.collective_stats) -- they all sit in the jit
+        body, so the per-tick host-sync count is unchanged by the mesh."""
+        floor = jnp.asarray(self._floors) if self.paged else None
+        args = (self.params, self.state,
+                jnp.zeros((self.capacity,), bool),
+                jnp.zeros((self.capacity,), jnp.int32),
+                jnp.full((self.capacity,), -1, jnp.int32), floor)
+        with sh.use_rules(self.eng.mesh, self.eng.rules):
+            return self._chunk_jit.lower(*args).compile().as_text()
+
     def reserve(self, slot: int, req: Request) -> bool:
         """Paged admission: reserve the request's whole page budget --
         ceil((prompt_len + max_new) / page_size) frames -- and install
@@ -556,7 +605,9 @@ class Engine:
                  speculative: bool = False,
                  draft: Any = None,
                  draft_layers: Optional[int] = None,
-                 k: int = 4):
+                 k: int = 4,
+                 mesh: Any = None,
+                 rules: Optional[Dict[str, Any]] = None):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
@@ -617,6 +668,34 @@ class Engine:
         self.draft_layers = (int(draft_layers)
                              if draft_layers is not None else None)
         self._draft_resolved: Optional[Tuple[Any, ModelConfig]] = None
+        # tensor-parallel sharded serving: weight leaves and KV page
+        # pools are laid out on a (data, model) device mesh by the
+        # logical-axis rules (dist/sharding.py), while the host
+        # scheduler, PageAllocator and PrefixIndex stay global -- page
+        # tables and per-slot vectors replicate, pools shard on their
+        # head ("kv") dim, and GSPMD places the collectives inside the
+        # jitted decode scan, so the one-host-sync-per-tick contract
+        # survives unchanged.  Default rules are the weight-resident
+        # decode set (launch/inputs.arch_rules(cfg, kind="decode")) with
+        # the slot batch replicated: the continuous slot batch is ONE
+        # global batch owned by the host scheduler; data-parallel
+        # serving is a separate engine replica, not a mesh axis here.
+        self.mesh = mesh
+        if mesh is not None and rules is None:
+            from ..launch.inputs import arch_rules
+            rules = dict(arch_rules(cfg, kind="decode"))
+            rules["batch"] = None
+        self.rules = rules
+        if mesh is not None and draft is not None:
+            # loud refusal: an explicit draft tree has no ParamSpec tree
+            # of its own to resolve logical axes against (its config may
+            # differ arbitrarily from the verifier's); the truncated
+            # self-draft (draft_layers=) shares the verifier's sharded
+            # leaves and composes fine.
+            raise ValueError(
+                "Engine(mesh=...) cannot place an explicit draft tree; "
+                "use draft_layers= (the truncated self-draft slices the "
+                "already-sharded verifier leaves) or drop the mesh")
         self._prefill = jax.jit(
             lambda params, batch, max_seq: T.prefill(
                 B.predecode(params, cfg), cfg, batch, max_seq),
@@ -710,6 +789,13 @@ class Engine:
                     B.predecode, cfg=self.cfg))(self.params)
             else:
                 self._resolved_params = self.params
+            if self.mesh is not None:
+                # lay the resolved tree out on the mesh once, by each
+                # leaf's logical axes (packed leaves shard idx_packed;
+                # HaloPacked's fused (kt*nt, TILE) scale replicates)
+                self._resolved_params = deploy.shard_params(
+                    self._resolved_params, T.model_specs(self.cfg),
+                    self.mesh, self.rules)
         return self._resolved_params
 
     def draft_serve_params(self) -> Tuple[Any, ModelConfig]:
@@ -730,6 +816,15 @@ class Engine:
                      else max(1, cfg.n_layers // 2))
                 self._draft_resolved = deploy.truncate_params(
                     self.serve_params(), cfg, m)
+                if self.mesh is not None:
+                    # slicing a sharded stack yields a derived layout;
+                    # re-place explicitly so the draft matches what its
+                    # own spec tree would prescribe
+                    dparams, dcfg = self._draft_resolved
+                    dparams = deploy.shard_params(
+                        dparams, T.model_specs(dcfg), self.mesh,
+                        self.rules)
+                    self._draft_resolved = (dparams, dcfg)
             else:
                 dparams, dcfg = (self.draft if isinstance(self.draft, tuple)
                                  else (self.draft, cfg))

@@ -48,12 +48,20 @@ def just(value) -> _Strategy:
     return _Strategy(lambda rnd: value)
 
 
-def given(*strategies_args):
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rnd: [
+        elements.draw(rnd)
+        for _ in range(rnd.randint(min_size, max_size))])
+
+
+def given(*strategies_args, **strategies_kwargs):
     """Expand the test into a seeded loop over drawn examples.
 
-    The strategies bind to the *last* positional parameters of the test
-    function; remaining leading parameters (self, pytest fixtures) keep
-    flowing from pytest, which sees a trimmed ``__signature__``.
+    Positional strategies bind to the *last* positional parameters of
+    the test function; keyword strategies bind by name.  Remaining
+    leading parameters (self, pytest fixtures) keep flowing from pytest,
+    which sees a trimmed ``__signature__``.
     """
 
     def decorate(fn):
@@ -61,6 +69,7 @@ def given(*strategies_args):
         params = list(sig.parameters.values())
         n = len(strategies_args)
         lead = params[:-n] if n else params
+        lead = [p for p in lead if p.name not in strategies_kwargs]
 
         def wrapper(*args, **kwargs):
             examples = getattr(wrapper, "_max_examples",
@@ -68,7 +77,9 @@ def given(*strategies_args):
             rnd = random.Random(0x5EED)
             for _ in range(examples):
                 drawn = [s.draw(rnd) for s in strategies_args]
-                fn(*args, *drawn, **kwargs)
+                drawn_kw = {name: s.draw(rnd)
+                            for name, s in strategies_kwargs.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
 
         wrapper.__name__ = fn.__name__
         wrapper.__qualname__ = fn.__qualname__
@@ -97,7 +108,8 @@ def install() -> None:
     mod.given = given
     mod.settings = settings
     strategies = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "booleans", "just"):
+    for name in ("integers", "floats", "sampled_from", "booleans", "just",
+                 "lists"):
         setattr(strategies, name, globals()[name])
     mod.strategies = strategies
     sys.modules["hypothesis"] = mod

@@ -8,7 +8,10 @@ mid-decode recycling) replayed through the continuous contiguous engine,
 the paged engine, and the paged + share_prefix engine (plus a
 pool-starved share engine that must reclaim index-cached frames, and
 two self-speculative engines -- contiguous and paged+share -- whose
-draft/verify/commit loop must never change a single token), all
+draft/verify/commit loop must never change a single token, and, when
+the runtime exposes >= 2 devices, tensor-parallel ``sharded`` /
+``paged_sharded`` rigs over a (1, N) mesh -- run via
+``make test-sharded``), all
 held to token-identical outputs plus the invariant bundle:
 
   - no request dropped, duplicated, or reordered (exact token equality
@@ -102,6 +105,20 @@ def get_rigs():
                                        page_size=PAGE, share_prefix=True,
                                        speculative=True, k=3, **ENGINE_KW),
         }
+        if jax.device_count() >= 2:
+            # tensor-parallel rigs (only under a real multi-device
+            # runtime, e.g. make test-sharded's forced 4-device host
+            # CPU): every invariant above must hold with the weights and
+            # KV pools sharded over the (1, N) mesh -- token identity
+            # against the same contiguous oracle included
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((1, jax.device_count()),
+                                    ("data", "model"))
+            engines["sharded"] = Engine(params, cfg, mesh=mesh,
+                                        **ENGINE_KW)
+            engines["paged_sharded"] = Engine(params, cfg, paged=True,
+                                              page_size=PAGE, mesh=mesh,
+                                              **ENGINE_KW)
         exs = {name: eng._executor(capacity=CAP, max_seq=MAX_SEQ)
                for name, eng in engines.items()}
         _RIGS = (cfg, exs)
@@ -200,8 +217,7 @@ class TestDifferentialFuzz:
             assert want[rid].shape == (r["max_new"],), \
                 f"{tag}: rid {rid} emitted {want[rid].shape[0]} " \
                 f"of {r['max_new']} tokens"
-        for name in ("paged", "paged_share", "paged_share_tight",
-                     "spec", "paged_share_spec"):
+        for name in (n for n in exs if n != "contiguous"):
             ex = exs[name]
             got, admit, occ = replay(ex, trace, f"{tag} {name}")
             assert occ <= ex.capacity, \

@@ -5,11 +5,14 @@ import os
 import subprocess
 import sys
 import textwrap
+import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as sh
@@ -46,6 +49,72 @@ class TestRules:
         specs = {"w": ParamSpec((8, 16), ("embed", "mlp"))}
         shards = sh.params_shardings(specs, mesh)
         assert shards["w"] is not None
+
+
+# logical axis names that DEFAULT_RULES maps to mesh axes, plus unmapped
+# names and bare None dims -- the property sweep draws tuples of these
+_AXIS_NAMES = st.sampled_from(
+    ["embed", "mlp", "heads", "kv", "vocab", "experts", "batch",
+     "act_mlp", "act_heads", "layers", "kv_seq", "not_a_rule", None])
+
+
+class TestRuleProperties:
+    """The two GSPMD invariants of ``logical_to_spec``, swept over random
+    (axes, shape, mesh-size) combinations.  ``logical_to_spec`` only
+    reads ``mesh.shape``, so a stub namespace stands in for a real Mesh
+    -- multi-axis meshes get property-tested on a 1-device runtime."""
+
+    @given(axes=st.lists(_AXIS_NAMES, min_size=1, max_size=5),
+           dims=st.lists(st.integers(1, 8), min_size=5, max_size=5),
+           data=st.integers(1, 4), model=st.sampled_from([1, 2, 4, 8]))
+    @settings(max_examples=200, deadline=None)
+    def test_mesh_axis_consumed_at_most_once(self, axes, dims, data,
+                                             model):
+        mesh = types.SimpleNamespace(shape={"data": data, "model": model})
+        shape = tuple(d * 4 for d in dims[:len(axes)])
+        spec = sh.logical_to_spec(tuple(axes), shape, mesh)
+        names = []
+        for entry in spec:
+            if entry is None:
+                continue
+            names.extend(entry if isinstance(entry, tuple) else (entry,))
+        assert len(names) == len(set(names)), \
+            f"mesh axis consumed twice: {spec} for axes={axes}"
+        assert all(n in mesh.shape for n in names)
+
+    @given(axes=st.lists(_AXIS_NAMES, min_size=1, max_size=5),
+           dims=st.lists(st.integers(1, 33), min_size=5, max_size=5),
+           model=st.sampled_from([2, 4, 8]))
+    @settings(max_examples=200, deadline=None)
+    def test_non_divisible_dims_replicate(self, axes, dims, model):
+        mesh = types.SimpleNamespace(shape={"model": model})
+        shape = tuple(dims[:len(axes)])
+        spec = sh.logical_to_spec(tuple(axes), shape, mesh)
+        for name, dim, entry in zip(axes, shape, spec):
+            if entry is None:
+                continue
+            picked = entry if isinstance(entry, tuple) else (entry,)
+            span = 1
+            for ax in picked:
+                span *= mesh.shape[ax]
+            assert dim % span == 0, \
+                f"dim {dim} sharded {span}-way: {spec} for axes={axes}"
+
+    def test_spec_matches_manual_resolution(self):
+        # pinned example: first logical axis wins the contested axis,
+        # the non-divisible dim replicates
+        mesh = types.SimpleNamespace(shape={"data": 2, "model": 4})
+        spec = sh.logical_to_spec(("mlp", "heads", "batch"), (8, 6, 4),
+                                  mesh)
+        assert tuple(spec) == ("model", None, "data")
+
+    def test_no_mesh_noop_is_exact(self):
+        # `is`-identity, not just equality: the single-device serving
+        # path must never pay a copy or a trace-level constraint
+        for shape in ((1,), (2, 3), (2, 3, 4)):
+            x = jnp.ones(shape)
+            assert sh.shard_activation(x, ("batch",) + (None,) *
+                                       (len(shape) - 1)) is x
 
 
 MULTIDEV_SCRIPT = textwrap.dedent("""
@@ -122,6 +191,36 @@ class TestMeshBuilders:
         from repro.launch.mesh import make_elastic_mesh
         mesh = make_elastic_mesh(1, model_parallel=16)
         assert int(np.prod(list(mesh.shape.values()))) == 1
+
+    def test_elastic_mesh_zero_devices_raises(self):
+        # regression: used to silently build a (1, 0) mesh after total
+        # host loss instead of telling the caller to re-enumerate
+        from repro.launch.mesh import make_elastic_mesh
+        with pytest.raises(ValueError, match="at least one device"):
+            make_elastic_mesh(0)
+        with pytest.raises(ValueError, match="at least one device"):
+            make_elastic_mesh(-2, model_parallel=4)
+
+    def test_elastic_mesh_bad_model_parallel_raises(self):
+        from repro.launch.mesh import make_elastic_mesh
+        with pytest.raises(ValueError, match="model_parallel must be"):
+            make_elastic_mesh(8, model_parallel=0)
+        with pytest.raises(ValueError, match="model_parallel must be"):
+            make_elastic_mesh(8, model_parallel=-1)
+
+    def test_elastic_mesh_nonviable_divisor_raises(self):
+        # regression: mp=3 with 8 devices used to silently fall back to
+        # a (1, 8) pure-TP mesh, ignoring the requested TP degree
+        from repro.launch.mesh import make_elastic_mesh
+        with pytest.raises(ValueError, match="cannot tile"):
+            make_elastic_mesh(8, model_parallel=3)
+
+    def test_elastic_mesh_tiny_fallback_still_works(self):
+        # fewer devices than model_parallel is the test regime, not an
+        # error: fall back to a (1, avail) mesh
+        from repro.launch.mesh import make_elastic_mesh
+        mesh = make_elastic_mesh(1, model_parallel=4)
+        assert dict(mesh.shape) == {"data": 1, "model": 1}
 
     def test_production_mesh_shapes_via_subprocess(self):
         src = os.path.abspath(
