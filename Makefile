@@ -6,10 +6,11 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_serving_e2e.py tests/test_chunked_prefill.py \
                  tests/test_paged_cache.py tests/test_serving_fuzz.py \
-                 tests/test_speculative.py
+                 tests/test_speculative.py tests/test_autotune.py
 
 .PHONY: test test-unit test-serving test-fuzz test-spec test-sharded \
-        bench-smoke bench-smoke-continuous bench-serving bench-smoke-sharded
+        bench-smoke bench-smoke-continuous bench-serving \
+        bench-smoke-sharded bench-smoke-autotune
 
 test:            ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -44,6 +45,9 @@ bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared + spec
 bench-smoke-sharded:  ## sharded continuous section (forces a 4-device CPU mesh)
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
 	  --sharded
+
+bench-smoke-autotune:  ## tiny-budget autotuner search + before/after replay
+	$(PYTHON) benchmarks/serving_latency.py --smoke --mode autotune
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

@@ -759,14 +759,153 @@ def run_sharded(cfg, q, args) -> dict:
     }
 
 
+def run_autotune(cfg, q, args) -> dict:
+    """Hardware-in-the-loop autotune of the serving knobs, reported as the
+    ``autotuned`` section: the tuner searches the EngineKnobs space (model
+    pruned, then measured on its own seeded probe trace through the real
+    submit/drain path), persists a versioned TunedConfig artifact, and the
+    artifact is then RELOADED and replayed against the default config on
+    the standard continuous trace (seed + 7) -- produce and consume, with
+    token identity asserted and a never-regress fallback to the default
+    knobs if the final trace disagrees with the probe."""
+    from repro.serving.autotune import (ProbeSpec, SearchSpace, autotune,
+                                        host_info)
+    from repro.serving.tuning import EngineKnobs, TunedConfig
+
+    rng = np.random.default_rng(args.seed + 7)   # the standard trace
+    if args.smoke:
+        n, capacity = 6, 3
+        prompt_lens, max_new_range, mean_gap = (8, 20), (4, 12), 0.02
+        prefill_bucket = 16
+        space, probe, n_probe = SearchSpace.smoke(), ProbeSpec.smoke(), 3
+    else:
+        n, capacity = 16, 8
+        prompt_lens, max_new_range, mean_gap = (12, 40), (8, 64), 0.07
+        prefill_bucket = 32
+        space, probe, n_probe = SearchSpace(), ProbeSpec(), 4
+    trace = _make_trace(rng, cfg, n, prompt_lens, max_new_range, mean_gap)
+    s_cap = max(prompt_lens) + max_new_range[1]
+
+    packed = deploy.pack_params(q)
+    print(f"[autotune] searching the knob space (capacity {capacity}, "
+          f"probe seed {probe.seed}) ...")
+    tc = autotune(packed, cfg, capacity=capacity, max_seq=s_cap,
+                  prefill_bucket=prefill_bucket, space=space, probe=probe,
+                  n_probe=n_probe, verbose=True)
+    # the probe-trace guarantee the tuner enforces by construction
+    assert tc.probe["speedup_vs_default"] >= 1.0, \
+        "autotuner returned a config slower than defaults on its probe"
+    path = tc.save(args.tuned_out)
+    print(f"[autotune] winner {tc.probe['winner']} "
+          f"({tc.probe['speedup_vs_default']:.2f}x on the probe) "
+          f"-> {os.path.abspath(path)}")
+
+    # consume the artifact: reload from disk and serve the standard trace
+    tc2 = TunedConfig.load(path)
+    assert tc2.knobs == tc.knobs, "TunedConfig did not round-trip"
+    eng_d = Engine(packed, cfg, prefill_bucket=prefill_bucket,
+                   decode_bucket=16, capacity=capacity, max_seq=s_cap)
+    eng_t = Engine.from_tuned(packed, cfg, path, decode_bucket=16)
+
+    def replay(eng):
+        t0 = time.perf_counter()
+        rids = [eng.submit({"tokens": r["prompt"][0]},
+                           max_new=r["max_new"]) for r in trace]
+        done = eng.drain()
+        wall = time.perf_counter() - t0
+        toks = [np.asarray(done[r]).tolist() for r in rids]
+        eng.pop_finished()
+        return wall, toks
+
+    _, toks_d = replay(eng_d)                   # warm compiles + parity
+    _, toks_t = replay(eng_t)
+    assert toks_d == toks_t, \
+        "autotuned engine diverged from the default-config engine"
+    w_d, _ = min((replay(eng_d) for _ in range(args.repeats)),
+                 key=lambda t: t[0])
+    w_t, _ = min((replay(eng_t) for _ in range(args.repeats)),
+                 key=lambda t: t[0])
+    total = sum(len(t) for t in toks_d)
+    d_tps, t_tps = total / w_d, total / w_t
+
+    # never-regress guard: measured noise on the final trace cannot make
+    # the shipped config slower than defaults -- fall back and re-save
+    fallback = t_tps < d_tps
+    if fallback:
+        print("[autotune] tuned config slower on the final trace; "
+              "falling back to the default knobs")
+        tc.knobs = EngineKnobs()
+        tc.probe["final_trace_fallback"] = True
+        tc.save(path)
+        w_t, t_tps = w_d, d_tps
+    assert t_tps >= d_tps
+
+    print(f"  default    {w_d:6.3f}s  {d_tps:8.1f} tok/s")
+    print(f"  autotuned  {w_t:6.3f}s  {t_tps:8.1f} tok/s  "
+          f"-> {t_tps / d_tps:.2f}x  "
+          f"(modeled {tc.dvfs['totals']['mean_freq_headroom']:.2f}x clock "
+          f"headroom, {tc.dvfs['totals']['dvfs_transitions']} DVFS "
+          f"transitions)")
+    dv = tc.dvfs
+    return {
+        "seed": args.seed,
+        "n_requests": n,
+        "capacity": capacity,
+        "prompt_lens": list(prompt_lens),
+        "max_new_range": list(max_new_range),
+        "tuned_config_path": os.path.relpath(
+            path, os.path.join(os.path.dirname(__file__), "..")),
+        "tuned_config_version": tc.version,
+        "knobs": tc.knobs.to_dict(),
+        "fallback_to_default": fallback,
+        "tokens_identical": True,
+        "total_new_tokens": total,
+        "default": {"wall_s": w_d, "decode_tokens_per_s": d_tps},
+        "autotuned": {"wall_s": w_t, "decode_tokens_per_s": t_tps},
+        "autotuned_speedup_vs_default": t_tps / d_tps,
+        "probe": {k: tc.probe[k] for k in
+                  ("protocol", "trace", "n_candidates", "n_measured",
+                   "winner", "default", "measured_tokens_per_s",
+                   "speedup_vs_default", "class_counts")},
+        "dvfs": {
+            "domain": dv["domain"],
+            "nominal_freq_ghz": dv["nominal_freq_ghz"],
+            "totals": dv["totals"],
+            "layers": [{
+                "layer": l["layer"],
+                "n_tiles": l["n_tiles"],
+                "counts": l["counts"],
+                "dvfs_transitions": l["dvfs_transitions"],
+                "achievable_freq_ghz": l.get("achievable_freq_ghz"),
+                "freq_headroom": l.get("freq_headroom"),
+                "modeled_energy_j_per_token":
+                    l.get("modeled_energy_j_per_token"),
+            } for l in dv["layers"]],
+        },
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--mode", choices=("all", "paths", "continuous"),
+    ap.add_argument("--mode",
+                    choices=("all", "paths", "continuous", "autotune"),
                     default="all")
+    ap.add_argument("--autotune", action="store_true",
+                    help="also run the hardware-in-the-loop autotuner "
+                         "(model-pruned knob search measured on a seeded "
+                         "probe trace), persist the TunedConfig artifact, "
+                         "and replay the standard continuous trace "
+                         "default-vs-tuned -> autotuned section")
+    ap.add_argument("--tuned-out",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "experiments",
+                                         "tuned_serving.json"),
+                    help="path for the versioned TunedConfig artifact "
+                         "written by --autotune / --mode autotune")
     ap.add_argument("--prefill-heavy", action="store_true",
                     help="also replay the long-prompt (chunked-prefill) "
                          "trace -> continuous_prefill_heavy section")
@@ -815,10 +954,13 @@ def main() -> None:
                 report = json.load(f)
         except (OSError, ValueError):
             report = {}
+    from repro.serving.autotune import host_info
     report.update({
         "bench": "serving_latency",
         "config": cfg.name,
         "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "host": host_info(),
         "batch": args.batch,
         "prompt_len": args.prompt,
         "max_new": args.max_new,
@@ -847,6 +989,10 @@ def main() -> None:
                 cfg, params, args)
         if args.sharded:
             report["continuous_sharded"] = run_sharded(cfg, q, args)
+
+    if args.mode == "autotune" or (args.autotune
+                                   and args.mode in ("all", "continuous")):
+        report["autotuned"] = run_autotune(cfg, q, args)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

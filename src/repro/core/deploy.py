@@ -17,7 +17,7 @@ noted in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -504,6 +504,110 @@ def truncate_params(params: Any, cfg, n_layers: int) -> Tuple[Any, Any]:
     out["remainder"] = rem
     draft_cfg = dataclasses.replace(cfg, n_layers=n_layers)
     return out, draft_cfg
+
+
+def packed_tile_classes(packed) -> np.ndarray:
+    """Per-tile frequency class, read off a packed 4-bit index stream.
+
+    Returns int8 ``(..., kt*nt)`` of ``codebooks.TILE_CLASS_*`` ids, leading
+    dims mirroring the leaf's stack dims.  A tile is F3 iff every index it
+    stores lies in the contiguous F3 sub-range of the shared 16-entry table
+    (``codebooks.f3_index_range``); zero-padded tiles quantize to the F3
+    "0" entry and so admit the fastest clock -- correct, those MACs
+    multiply by zero.  The packed stream is the deployment ground truth:
+    ``HaloQuantized.classes`` is not retained by ``pack_params``, so DVFS
+    planning reads classes back from what the kernel actually executes.
+
+    Note the read-back is conservative-in-reverse: an F2-*labeled* tile
+    whose assignment happened to use only F3-range indices reads back as
+    F3.  That is the right answer for DVFS (the executed index stream is
+    what bounds the critical path), so labeled-F3 implies read-back-F3 but
+    not conversely."""
+    from .codebooks import TILE_CLASS_F2, TILE_CLASS_F3, f3_index_range
+
+    idx = np.asarray(jax.device_get(packed.idx_packed))
+    full = np.stack([idx & 0xF, idx >> 4], axis=-1).reshape(
+        idx.shape[:-1] + (2 * idx.shape[-1],))
+    kp, npk = full.shape[-2], full.shape[-1]
+    kt, nt = kp // TILE, npk // TILE
+    lead = full.shape[:-2]
+    tiles = full.reshape(lead + (kt, TILE, nt, TILE))
+    f3_lo, f3_hi = f3_index_range()
+    is_f3 = ((tiles.min(axis=(-3, -1)) >= f3_lo)
+             & (tiles.max(axis=(-3, -1)) <= f3_hi))
+    cls = np.where(is_f3, TILE_CLASS_F3, TILE_CLASS_F2).astype(np.int8)
+    return cls.reshape(lead + (kt * nt,))
+
+
+def layer_class_composition(params: Any, cfg) -> List[Dict[str, Any]]:
+    """Per-layer weight-class composition of a packed serving tree.
+
+    Walks the period/remainder layer layout (the same slicing as
+    ``truncate_params``) and reads each ``HaloPacked`` leaf's tile classes
+    off its packed index stream.  Returns one record per transformer layer,
+    plus a trailing ``layer=None`` record for packed non-block leaves (the
+    unembed head), each::
+
+      {"layer": int | None, "pattern": str | None,
+       "leaves": [{"name", "shape", "classes": np.int8 (tiles,)}],
+       "counts": {"F3": int, "F2": int, ...}, "n_tiles": int}
+
+    Dense (unpacked) leaves carry no class schedule and do not appear.
+    Trees without the period/remainder layout return ``[]``.  This is the
+    feed for the serving autotuner's DVFS schedule and cost models
+    (serving/autotune.py)."""
+    from ..kernels.ops import HaloPacked
+    from .codebooks import CLASS_NAMES
+
+    def is_packed(x):
+        return isinstance(x, HaloPacked)
+
+    def packed_items(tree):
+        flat = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=is_packed)[0]
+        return [(jax.tree_util.keystr(path), leaf)
+                for path, leaf in flat if is_packed(leaf)]
+
+    def record(layer, pattern, leaves):
+        counts: Dict[str, int] = {}
+        recs = []
+        for name, shape, cls in leaves:
+            cls = np.asarray(cls).reshape(-1)
+            ids, cnt = np.unique(cls, return_counts=True)
+            for i, c in zip(ids.tolist(), cnt.tolist()):
+                nm = CLASS_NAMES[int(i)]
+                counts[nm] = counts.get(nm, 0) + int(c)
+            recs.append({"name": name, "shape": tuple(shape), "classes": cls})
+        return {"layer": layer, "pattern": pattern, "leaves": recs,
+                "counts": counts,
+                "n_tiles": int(sum(r["classes"].size for r in recs))}
+
+    if not isinstance(params, dict) or "period" not in params:
+        return []
+    pat = len(cfg.block_pattern)
+    period = params.get("period", ())
+    remainder = params.get("remainder", ())
+    period_cls = [[(name, leaf.shape, packed_tile_classes(leaf))
+                   for name, leaf in packed_items(stack)]
+                  for stack in period]
+    out = []
+    for layer in range(cfg.n_layers):
+        dp_i, j = divmod(layer, pat)
+        if dp_i < cfg.n_periods:
+            leaves = [(name, shape, cls[dp_i])
+                      for name, shape, cls in period_cls[j]]
+        else:
+            leaves = [(name, leaf.shape, packed_tile_classes(leaf))
+                      for name, leaf in packed_items(
+                          remainder[layer - cfg.n_periods * pat])]
+        out.append(record(layer, cfg.block_pattern[j], leaves))
+    head = {k: v for k, v in params.items()
+            if k not in ("period", "remainder")}
+    head_leaves = [(name, leaf.shape, packed_tile_classes(leaf))
+                   for name, leaf in packed_items(head)]
+    if head_leaves:
+        out.append(record(None, None, head_leaves))
+    return out
 
 
 def deploy_params(qparams: Any) -> Any:

@@ -108,3 +108,39 @@ def schedule_transitions(class_per_tile: Sequence[int]) -> Dict[str, object]:
         "counts": counts,
         "num_transitions": max(int(classes.size) - 1, 0),
     }
+
+
+def plan_for_classes(class_per_tile: Sequence[int],
+                     domain: DvfsDomain = SYSTOLIC_DOMAIN) -> Dict[str, object]:
+    """Full DVFS plan for one class-grouped tile schedule.
+
+    Extends ``schedule_transitions`` with the operating point each class
+    group runs at (``fastest_point_for_delay`` of the class critical path),
+    the tile-weighted achievable frequency, and the headroom over the
+    domain's slowest point -- the clock a hardware-agnostic deployment of
+    the same weights would be stuck at.  This is the paper's claim made
+    concrete per layer: low critical-path-delay classes buy higher clocks
+    for only (num classes - 1) transitions.
+    """
+    from . import mac_model
+
+    sched = schedule_transitions(class_per_tile)
+    nominal = min(domain.points, key=lambda p: p.freq_ghz)
+    points: Dict[str, OperatingPoint] = {}
+    total = int(np.asarray(class_per_tile, np.int32).size)
+    f_sum = e_sum = 0.0
+    for cls_id, count in zip(sched["classes"].tolist(),
+                             sched["counts"].tolist()):
+        name = mac_model.ID_TO_CLASS[int(cls_id)]
+        crit_ns = 1.0 / mac_model.CLASS_FREQ_GHZ[name]
+        pt = domain.fastest_point_for_delay(crit_ns)
+        points[name] = pt
+        f_sum += count * pt.freq_ghz
+        e_sum += count * pt.energy_scale(domain.v_nominal)
+    out = dict(sched)
+    out["points"] = points
+    out["nominal_freq_ghz"] = nominal.freq_ghz
+    out["achievable_freq_ghz"] = (f_sum / total) if total else nominal.freq_ghz
+    out["freq_headroom"] = out["achievable_freq_ghz"] / nominal.freq_ghz
+    out["energy_scale"] = (e_sum / total) if total else 1.0
+    return out

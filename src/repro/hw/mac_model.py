@@ -149,8 +149,13 @@ def energy_lut(params: MacTimingParams = DEFAULT_PARAMS) -> np.ndarray:
     return np.array([params.energy_pj(int(w)) for w in WEIGHT_VALUES], np.float32)
 
 
+@functools.lru_cache(maxsize=None)
 def achievable_freq_ghz(params: MacTimingParams = DEFAULT_PARAMS) -> np.ndarray:
-    """(256,) max clock (GHz) per weight value == 1/delay.  Paper Fig. 4."""
+    """(256,) max clock (GHz) per weight value == 1/delay.  Paper Fig. 4.
+
+    Cached like the delay/energy LUTs (keyed on the frozen params): the
+    serving autotuner prices every candidate config through these sweeps,
+    so the 256-entry CSD recode must not be recomputed per candidate."""
     return (1.0 / delay_lut(params)).astype(np.float32)
 
 

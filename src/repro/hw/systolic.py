@@ -122,6 +122,42 @@ def halo_scheme(f3_frac: float, f2_frac: float,
                       mac_energy_pj=mac_e, sparse_frac=sparse_frac)
 
 
+def scheme_from_class_counts(counts: Mapping[str, int],
+                             sparse_frac: float = 0.0045,
+                             name: str = "halo-packed") -> SchemeSpec:
+    """SchemeSpec from *measured* per-class tile counts.
+
+    ``halo_scheme`` takes nominal fractions; this consumes the composition
+    read back off a packed weight's own 4-bit index stream
+    (core/deploy.layer_class_composition) -- the deployment ground truth the
+    serving autotuner prices candidates and per-layer DVFS schedules
+    against.  Handles any F1 residue (tiles that cannot prove a shorter
+    critical path run at the nominal clock with full-range MAC energy).
+    """
+    total = float(sum(int(v) for v in counts.values()))
+    if total <= 0:
+        # no classed tiles at all: the hardware-agnostic deployment
+        return SchemeSpec(name, {"F1": 1.0},
+                          weight_bits=4.0 + 16.0 / (128 * 128),
+                          mac_energy_pj=mean_mac_energy(
+                              mac_model.frequency_classes()["F1"]),
+                          sparse_frac=sparse_frac)
+    fr = {k: int(v) / total for k, v in counts.items() if int(v) > 0}
+    classes = mac_model.frequency_classes()
+    # same codebook-usage priors as halo_scheme: log-quantized gaussian
+    e_by = {
+        "F3": mean_mac_energy(classes["F3"],
+                              weights=np.array([1, 2, 4, 6, 8, 6, 4, 2, 1])),
+        "F2": mean_mac_energy(classes["F2"], weights=np.array(
+            [1, 1, 2, 3, 5, 8, 11, 14, 16, 14, 11, 8, 5, 3, 2, 1],
+            np.float64)),
+        "F1": mean_mac_energy(classes["F1"]),
+    }
+    mac_e = sum(f * e_by[c] for c, f in fr.items())
+    return SchemeSpec(name, fr, weight_bits=4.0 + 16.0 / (128 * 128),
+                      mac_energy_pj=mac_e, sparse_frac=sparse_frac)
+
+
 @dataclasses.dataclass
 class SimResult:
     time_s: float

@@ -48,6 +48,11 @@ class HaloPacked:
     chunks: Optional[sk.SparseChunks]
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True),
                                                default=(0, 0))
+    # autotuned Pallas block-M override (static: it steers the kernel grid,
+    # never the math; None = the kernel's 128 default).  Set tree-wide via
+    # ``with_block_m`` -- serving engines thread EngineKnobs.block_m here.
+    block_m: Optional[int] = dataclasses.field(metadata=dict(static=True),
+                                               default=None)
 
     @property
     def padded_shape(self) -> Tuple[int, int]:
@@ -194,9 +199,14 @@ def _halo_matmul_xla(x: jnp.ndarray, packed: HaloPacked,
 
 
 def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
-                bm: int = 128, interpret: Optional[bool] = None,
+                bm: Optional[int] = None, interpret: Optional[bool] = None,
                 out_dtype=None) -> jnp.ndarray:
     """x (..., K) @ W_halo -> (..., N); dense codebook kernel + SpMV kernel.
+
+    bm=None reads the block-M off ``packed.block_m`` (the autotuner's
+    tree-wide override, see ``with_block_m``), falling back to 128; an
+    explicit bm always wins.  Block size never changes the math, only the
+    Pallas grid -- the XLA lowering ignores it entirely.
 
     interpret=None resolves per backend: Pallas/Mosaic on TPU, the XLA
     lowering of the packed layout elsewhere.  interpret=True forces the
@@ -208,6 +218,8 @@ def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
     sharded N/K dims like any other matmul.  Per-device Pallas tiles via
     shard_map are the TPU follow-up."""
     out_dtype = out_dtype or x.dtype
+    if bm is None:
+        bm = packed.block_m if packed.block_m is not None else 128
     if interpret is None:
         if default_interpret():
             return _halo_matmul_xla(x, packed, out_dtype)
@@ -234,6 +246,30 @@ def halo_matmul(x: jnp.ndarray, packed: HaloPacked,
                                    out_dtype=jnp.float32,
                                    interpret=interpret)
     return out[:, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def with_block_m(params, block_m: Optional[int]):
+    """Copy of a param tree with every HaloPacked leaf's static ``block_m``
+    override set (None restores the kernel's 128 default).
+
+    The override only re-tiles the Pallas grid; numerics are bit-identical
+    across block sizes, so autotuned trees stay token-identical to the
+    default-config oracle.  Static-field churn does force one recompile per
+    distinct value -- engines apply this once at ``serve_params`` time."""
+    if block_m is not None:
+        block_m = int(block_m)
+        if block_m < 8 or block_m % 8:
+            raise ValueError(
+                f"block_m must be a multiple of 8 (the f32 sublane tile), "
+                f"got {block_m}")
+
+    def is_packed(x):
+        return isinstance(x, HaloPacked)
+
+    return jax.tree.map(
+        lambda leaf: (dataclasses.replace(leaf, block_m=block_m)
+                      if is_packed(leaf) else leaf),
+        params, is_leaf=is_packed)
 
 
 def quantize_activations_int8(x: jnp.ndarray

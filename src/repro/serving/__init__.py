@@ -1,7 +1,19 @@
-"""Serving: bucketed-prefill engine, packed HALO fast path, and the
-continuous-batching scheduler (see docs/serving.md)."""
+"""Serving: bucketed-prefill engine, packed HALO fast path, the
+continuous-batching scheduler, and the hardware-in-the-loop autotuner
+(see docs/serving.md)."""
 
 from .engine import Engine, SamplerConfig, serve_step
 from .scheduler import Request, Scheduler
+from .tuning import EngineKnobs, TunedConfig
 
-__all__ = ["Engine", "SamplerConfig", "serve_step", "Request", "Scheduler"]
+__all__ = ["Engine", "SamplerConfig", "serve_step", "Request", "Scheduler",
+           "EngineKnobs", "TunedConfig", "autotune"]
+
+
+def __getattr__(name):
+    # the autotuner imports benchmarking-ish deps (time, itertools) and the
+    # engine; keep it lazy so `import repro.serving` stays light
+    if name == "autotune":
+        from . import autotune as _autotune
+        return _autotune
+    raise AttributeError(name)

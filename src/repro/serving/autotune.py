@@ -1,0 +1,532 @@
+"""Hardware-in-the-loop autotuner + per-layer DVFS planner for the engine.
+
+Closing the loop the paper leaves open: the `hw/` models (Booth-Wallace MAC
+timing LUTs, DVFS operating points, the systolic-array roofline) price
+serving configurations, and the serving stack *measures* them.
+
+Search.  The engine/kernel knob space (``EngineKnobs``: decode ``chunk``,
+``admit_k``, paged ``page_size``, ``prefill_chunk_width``, speculative
+``spec_k``, Pallas ``block_m``) is enumerated from a ``SearchSpace`` grid,
+strict-validated against the engine geometry, and pruned by an analytic
+cost model built on the hw/ stack: ``systolic.simulate_layers`` over the
+packed tree's *measured* weight-class composition
+(``deploy.layer_class_composition`` reads classes back off the 4-bit index
+streams), plus host-side terms for the engine's one-sync-per-tick contract,
+fused-admission dispatches and paged-gather indirection.  Only the
+model-plausible top-N candidates are timed: each probe replays a short
+seeded trace through the real ``Engine.submit``/``drain`` path (warm-up
+replay, then best-of-repeats wall clock).  The default knobs are always
+probed too and win ties, so the tuned config never regresses on the probe;
+every candidate's emitted tokens must match the first candidate's exactly
+(knobs schedule work, they must never change tokens) or the tuner raises.
+
+DVFS.  Per layer, the packed index stream gives each matmul's true tile
+class mix; ``dvfs.plan_for_classes`` turns that into the executed
+class-grouped schedule (transitions = distinct classes - 1 per matmul),
+the fastest safe operating points, and the frequency headroom over the
+hardware-agnostic F1 clock, while ``systolic.simulate_matmul`` prices a
+decode token's modeled time/energy per layer -- reported next to measured
+tokens/s in the ``TunedConfig`` artifact and BENCH_serving.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import deploy
+from ..hw import dvfs as hw_dvfs
+from ..hw import systolic
+from ..utils import next_pow2, round_up
+from .engine import Engine, SamplerConfig
+from .tuning import EngineKnobs, TunedConfig
+
+
+class AutotuneError(RuntimeError):
+    """A candidate config changed emitted tokens (scheduling knobs must be
+    semantics-free) or the probe protocol was violated."""
+
+
+def host_info() -> Dict[str, Any]:
+    """Host/context fingerprint stored in artifacts and bench reports."""
+    import platform
+
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": len(devs),
+        "devices": sorted({d.device_kind for d in devs}),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python_version": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# search space
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Grid of knob values the tuner may combine.
+
+    Empty axes pin the base value.  ``page_size`` only varies for paged
+    candidates; ``spec_k`` values each add a speculative candidate arm on
+    top of the non-speculative grid.  ``block_m`` is Pallas-only: the
+    CPU/XLA lowering carries it inert, so the default space leaves it
+    unset off-TPU."""
+
+    chunk: Tuple[int, ...] = (4, 8, 16)
+    admit_k: Tuple[int, ...] = (2, 4)
+    paged: Tuple[bool, ...] = (False, True)
+    page_size: Tuple[int, ...] = (8, 16)
+    prefill_chunk_width: Tuple[Optional[int], ...] = (None, 32)
+    block_m: Tuple[Optional[int], ...] = (None,)
+    spec_k: Tuple[int, ...] = ()
+
+    @classmethod
+    def smoke(cls) -> "SearchSpace":
+        """Tiny CI-budget space: a handful of candidates, still crossing
+        the paged/contiguous and tick-length axes."""
+        return cls(chunk=(4, 8), admit_k=(2,), paged=(False, True),
+                   page_size=(8,), prefill_chunk_width=(None,),
+                   block_m=(None,), spec_k=())
+
+    def candidates(self, base: EngineKnobs) -> List[EngineKnobs]:
+        """Expand the grid around ``base`` (always included)."""
+        def axis(vals, fallback):
+            return tuple(vals) if vals else (fallback,)
+
+        out = {base}
+        spec_arms = [(False, base.spec_k)] + [
+            (True, int(k)) for k in self.spec_k]
+        for chunk, admit_k, paged, width, bm, (spec, sk) in itertools.product(
+                axis(self.chunk, base.chunk),
+                axis(self.admit_k, base.admit_k),
+                axis(self.paged, base.paged),
+                axis(self.prefill_chunk_width, base.prefill_chunk_width),
+                axis(self.block_m, base.block_m),
+                spec_arms):
+            for page_size in (axis(self.page_size, base.page_size)
+                              if paged else (base.page_size,)):
+                out.add(dataclasses.replace(
+                    base, chunk=chunk, admit_k=admit_k, paged=paged,
+                    page_size=page_size, prefill_chunk_width=width,
+                    block_m=bm, speculative=spec, spec_k=sk))
+        return sorted(out, key=_knob_key)
+
+
+def _knob_key(kn: EngineKnobs) -> Tuple:
+    return (kn.chunk, kn.admit_k, kn.paged, kn.page_size,
+            kn.prefill_chunk_width or 0, kn.speculative, kn.spec_k,
+            kn.block_m or 0)
+
+
+def knob_label(kn: EngineKnobs) -> str:
+    parts = [f"chunk={kn.chunk}", f"admit_k={kn.admit_k}"]
+    parts.append(f"paged(ps={kn.page_size})" if kn.paged else "contig")
+    if kn.prefill_chunk_width is not None:
+        parts.append(f"width={kn.prefill_chunk_width}")
+    if kn.speculative:
+        parts.append(f"spec_k={kn.spec_k}")
+    if kn.block_m is not None:
+        parts.append(f"bm={kn.block_m}")
+    return ",".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# probe traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """Probe-trace protocol: short seeded requests replayed through the
+    real Engine.submit/step/drain path, all arriving at t=0 (the tuner
+    measures steady-state engine throughput, not arrival shaping)."""
+
+    n_requests: int = 6
+    prompt_len: Tuple[int, int] = (4, 20)
+    max_new: Tuple[int, int] = (4, 16)
+    seed: int = 0
+    repeats: int = 2
+
+    @classmethod
+    def smoke(cls) -> "ProbeSpec":
+        return cls(n_requests=4, prompt_len=(4, 12), max_new=(4, 8),
+                   repeats=1)
+
+
+def make_probe_trace(spec: ProbeSpec, vocab: int
+                     ) -> List[Tuple[np.ndarray, int]]:
+    """Seeded [(prompt tokens, max_new)] -- deterministic per spec.seed."""
+    rng = np.random.default_rng(spec.seed)
+    trace = []
+    for _ in range(spec.n_requests):
+        s = int(rng.integers(spec.prompt_len[0], spec.prompt_len[1] + 1))
+        mn = int(rng.integers(spec.max_new[0], spec.max_new[1] + 1))
+        toks = rng.integers(0, vocab, size=s, dtype=np.int64)
+        trace.append((toks, mn))
+    return trace
+
+
+def _trace_stats(trace: Sequence[Tuple[np.ndarray, int]]) -> Dict[str, int]:
+    return {
+        "n_requests": len(trace),
+        "total_prompt": int(sum(len(t) for t, _ in trace)),
+        "total_new": int(sum(mn for _, mn in trace)),
+        "longest": int(max(len(t) + mn for t, mn in trace)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model (the pruning stage)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HostModel:
+    """Host-side serving costs coupling the systolic roofline to the
+    engine's tick structure.  Coarse by design: the model only has to rank
+    candidates well enough that the measured probe sees the right top-N.
+
+    sync_s: scheduler tick + device->host token readback (one per tick).
+    admit_s: per fused admission / prefill-append dispatch.
+    page_gather_tokens: paged-decode indirection (frame-DMA setup), in
+      token-equivalents per page -- smaller pages pay it more often.
+    spec_accept: assumed draft acceptance rate for speculative arms.
+    """
+
+    sync_s: float = 3e-4
+    admit_s: float = 2e-4
+    page_gather_tokens: float = 2.0
+    spec_accept: float = 0.5
+
+
+def modeled_tokens_per_s(knobs: EngineKnobs, *, cfg: ModelConfig,
+                         capacity: int, prefill_bucket: int,
+                         comp_counts: Dict[str, int],
+                         stats: Dict[str, int],
+                         host: HostModel = HostModel(),
+                         domain: hw_dvfs.DvfsDomain = hw_dvfs.SYSTOLIC_DOMAIN,
+                         ) -> Dict[str, float]:
+    """Roofline + MAC-timing estimate of probe-trace tokens/s for a knob
+    setting; used to prune the grid before anything is measured."""
+    scheme = systolic.scheme_from_class_counts(comp_counts)
+    live = max(min(capacity, stats["n_requests"]), 1)
+
+    # one decode step over the live batch, priced by the systolic sim over
+    # the model's real layer shapes and measured class mix
+    shapes = systolic.decoder_layer_shapes(
+        cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.padded_vocab,
+        seq=1, batch=live, gated=cfg.gated_mlp)
+    step = systolic.simulate_layers(shapes, scheme)
+    bm_eff = min(knobs.block_m or 128, max(8, next_pow2(live)))
+    pad_rows = -(-live // bm_eff) * bm_eff
+    t_compute = step.compute_time_s * (pad_rows / live)
+    t_step = max(t_compute, step.memory_time_s) + step.spmv_time_s
+    if knobs.paged:
+        t_step *= 1.0 + host.page_gather_tokens / knobs.page_size
+
+    tok_per_step = 1.0
+    if knobs.speculative and knobs.spec_k > 0:
+        # half-stack self-draft per drafted token + full-model verify of
+        # the k+1 window; acceptance folds expected commits per step
+        t_step *= 1.0 + 0.5 * knobs.spec_k
+        tok_per_step = 1.0 + host.spec_accept * knobs.spec_k
+
+    steps = stats["total_new"] / (live * tok_per_step)
+    ticks = max(steps / knobs.chunk, 1.0)
+    decode_s = steps * t_step + ticks * host.sync_s
+
+    # prefill: fused k-way admission then chunk_width-token windows
+    width = knobs.prefill_chunk_width
+    if width is None:
+        width = max(4 * prefill_bucket, 64)
+    width = round_up(max(int(width), 1), max(prefill_bucket, 1))
+    pre_shapes = systolic.decoder_layer_shapes(
+        cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.padded_vocab,
+        seq=width, batch=1, gated=cfg.gated_mlp)
+    t_window = systolic.simulate_layers(pre_shapes, scheme).time_s
+    admits = -(-stats["n_requests"] // max(min(knobs.admit_k, capacity), 1))
+    # every prompt pays ceil(len/width) windows; the first rides admission
+    extra_windows = max(stats["total_prompt"] / width - stats["n_requests"],
+                        0.0)
+    prefill_s = (admits + extra_windows) * (t_window + host.admit_s)
+
+    total_s = decode_s + prefill_s
+    return {
+        "tokens_per_s": stats["total_new"] / total_s,
+        "decode_s": decode_s,
+        "prefill_s": prefill_s,
+        "t_step_s": t_step,
+    }
+
+
+# ---------------------------------------------------------------------------
+# hardware-in-the-loop measurement
+# ---------------------------------------------------------------------------
+
+
+def measure_knobs(params, cfg: ModelConfig, knobs: EngineKnobs, *,
+                  capacity: int, max_seq: int, prefill_bucket: int,
+                  trace: Sequence[Tuple[np.ndarray, int]],
+                  repeats: int = 2,
+                  sampler: SamplerConfig = SamplerConfig()) -> Dict[str, Any]:
+    """Measured tokens/s for one knob setting on the probe trace.
+
+    Builds a real engine and replays the trace through submit/drain: one
+    warm-up replay compiles every shape, then ``repeats`` timed replays
+    keep the best wall clock.  Returns the emitted tokens too so the tuner
+    can assert token-identity across candidates."""
+    eng = Engine(params, cfg, sampler=sampler, capacity=capacity,
+                 max_seq=max_seq, prefill_bucket=prefill_bucket,
+                 decode_bucket=16,
+                 tuned=TunedConfig(knobs=knobs))
+
+    def replay():
+        t0 = time.perf_counter()
+        rids = [eng.submit({"tokens": toks}, max_new=mn)
+                for toks, mn in trace]
+        done = eng.drain()
+        dt = time.perf_counter() - t0
+        out = [np.asarray(done[r]).tolist() for r in rids]
+        eng.pop_finished()              # drop bookkeeping between replays
+        return dt, out
+
+    replay()                                  # warm: compile once
+    best, tokens = float("inf"), None
+    for _ in range(max(int(repeats), 1)):
+        dt, toks = replay()
+        if dt < best:
+            best = dt
+        tokens = toks
+    total_new = sum(len(t) for t in tokens)
+    return {"wall_s": best, "tokens_per_s": total_new / best,
+            "total_new": total_new, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------------
+# per-layer DVFS schedule
+# ---------------------------------------------------------------------------
+
+
+def dvfs_layer_report(params, cfg: ModelConfig,
+                      domain: hw_dvfs.DvfsDomain = hw_dvfs.SYSTOLIC_DOMAIN,
+                      tile: int = 128) -> Dict[str, Any]:
+    """Per-layer DVFS schedule from the packed weight-class composition.
+
+    For every layer (and the packed unembed head, ``layer=null``): the
+    executed class-grouped schedule's transition count (summed over the
+    layer's matmuls -- each matmul pays distinct-classes-1), the fastest
+    safe operating points and tile-weighted achievable frequency/headroom
+    (``dvfs.plan_for_classes``), and the modeled decode-token time/energy
+    (``systolic.simulate_matmul`` at m=1 over the measured mix).  Totals
+    compare against an F1 deployment of the same shapes -- the clock a
+    hardware-agnostic 4-bit deployment would be stuck at."""
+    comp = deploy.layer_class_composition(params, cfg)
+    layers = []
+    tot_e = tot_t = tot_e_f1 = tot_t_f1 = 0.0
+    tot_trans = 0
+    f_weighted = tiles_total = 0
+    f1_scheme = systolic.scheme_from_class_counts({"F1": 1})
+    for rec in comp:
+        if not rec["leaves"]:
+            layers.append({"layer": rec["layer"], "pattern": rec["pattern"],
+                           "n_tiles": 0, "counts": {}, "dvfs_transitions": 0})
+            continue
+        all_cls = np.concatenate([l["classes"] for l in rec["leaves"]])
+        plan = hw_dvfs.plan_for_classes(all_cls, domain=domain)
+        transitions = sum(
+            max(int(np.unique(l["classes"]).size) - 1, 0)
+            for l in rec["leaves"])
+        e = t = e_f1 = t_f1 = 0.0
+        for l in rec["leaves"]:
+            k, n = l["shape"]
+            ids, cnt = np.unique(l["classes"], return_counts=True)
+            counts = {hw_dvfs_name(i): int(c)
+                      for i, c in zip(ids.tolist(), cnt.tolist())}
+            scheme = systolic.scheme_from_class_counts(counts)
+            r = systolic.simulate_matmul(1, k, n, scheme, tile=tile,
+                                         domain=domain)
+            rf1 = systolic.simulate_matmul(1, k, n, f1_scheme, tile=tile,
+                                           domain=domain)
+            e, t = e + r.energy_j, t + r.time_s
+            e_f1, t_f1 = e_f1 + rf1.energy_j, t_f1 + rf1.time_s
+        layers.append({
+            "layer": rec["layer"], "pattern": rec["pattern"],
+            "n_tiles": rec["n_tiles"], "counts": rec["counts"],
+            "dvfs_transitions": transitions,
+            "points": {nm: {"voltage_v": p.voltage_v, "freq_ghz": p.freq_ghz}
+                       for nm, p in plan["points"].items()},
+            "achievable_freq_ghz": round(plan["achievable_freq_ghz"], 4),
+            "freq_headroom": round(plan["freq_headroom"], 4),
+            "modeled_time_s_per_token": t,
+            "modeled_energy_j_per_token": e,
+        })
+        tot_e, tot_t = tot_e + e, tot_t + t
+        tot_e_f1, tot_t_f1 = tot_e_f1 + e_f1, tot_t_f1 + t_f1
+        tot_trans += transitions
+        f_weighted += plan["achievable_freq_ghz"] * rec["n_tiles"]
+        tiles_total += rec["n_tiles"]
+    nominal = min(domain.points, key=lambda p: p.freq_ghz).freq_ghz
+    mean_f = (f_weighted / tiles_total) if tiles_total else nominal
+    return {
+        "domain": domain.name,
+        "nominal_freq_ghz": nominal,
+        "layers": layers,
+        "totals": {
+            "n_tiles": int(tiles_total),
+            "dvfs_transitions": int(tot_trans),
+            "mean_achievable_freq_ghz": round(mean_f, 4),
+            "mean_freq_headroom": round(mean_f / nominal, 4),
+            "modeled_energy_j_per_token": tot_e,
+            "modeled_time_s_per_token": tot_t,
+            "modeled_speedup_vs_f1": (tot_t_f1 / tot_t) if tot_t else 1.0,
+            "modeled_energy_ratio_vs_f1": (tot_e / tot_e_f1) if tot_e_f1
+            else 1.0,
+        },
+    }
+
+
+def hw_dvfs_name(cls_id: int) -> str:
+    from ..hw import mac_model
+    return mac_model.ID_TO_CLASS[int(cls_id)]
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+
+def autotune(params, cfg: ModelConfig, *,
+             capacity: int = 4,
+             max_seq: Optional[int] = None,
+             prefill_bucket: int = 8,
+             space: Optional[SearchSpace] = None,
+             probe: Optional[ProbeSpec] = None,
+             n_probe: int = 4,
+             base: Optional[EngineKnobs] = None,
+             sampler: SamplerConfig = SamplerConfig(),
+             host: HostModel = HostModel(),
+             domain: hw_dvfs.DvfsDomain = hw_dvfs.SYSTOLIC_DOMAIN,
+             verbose: bool = False) -> TunedConfig:
+    """Tune the serving knobs against measured tokens/s; emit TunedConfig.
+
+    ``params`` is the packed serving tree (``deploy.pack_params`` output).
+    Model-implausible candidates are pruned before measurement; the default
+    knobs are always measured and win ties, so the result never regresses
+    on the probe trace.  Raises ``AutotuneError`` if any candidate changes
+    emitted tokens."""
+    space = space or SearchSpace()
+    probe = probe or ProbeSpec()
+    trace = make_probe_trace(probe, cfg.vocab)
+    stats = _trace_stats(trace)
+    if max_seq is None:
+        max_seq = round_up(stats["longest"], max(prefill_bucket, 1))
+    # clamp the defaults to this engine geometry (e.g. admit_k > a small
+    # capacity) so "never regress vs defaults" compares against the knobs
+    # the engine would actually run with
+    base = (base or EngineKnobs()).validated(
+        capacity=capacity, max_seq=round_up(max_seq, max(prefill_bucket, 1)),
+        prefill_bucket=prefill_bucket, strict=False)
+
+    comp = deploy.layer_class_composition(params, cfg)
+    comp_counts: Dict[str, int] = {}
+    for rec in comp:
+        for nm, c in rec["counts"].items():
+            comp_counts[nm] = comp_counts.get(nm, 0) + c
+
+    # --- enumerate + strict-validate + model-prune --------------------
+    rounded_seq = round_up(max_seq, max(prefill_bucket, 1))
+    table = []
+    for kn in space.candidates(base):
+        try:
+            kn.validated(capacity=capacity, max_seq=rounded_seq,
+                         prefill_bucket=prefill_bucket, strict=True)
+        except ValueError as e:
+            table.append({"knobs": kn.to_dict(), "label": knob_label(kn),
+                          "invalid": str(e)})
+            continue
+        m = modeled_tokens_per_s(
+            kn, cfg=cfg, capacity=capacity, prefill_bucket=prefill_bucket,
+            comp_counts=comp_counts, stats=stats, host=host, domain=domain)
+        table.append({"knobs": kn.to_dict(), "label": knob_label(kn),
+                      "modeled_tokens_per_s": m["tokens_per_s"],
+                      "modeled": m, "candidate": kn})
+    valid = [r for r in table if "candidate" in r]
+    valid.sort(key=lambda r: -r["modeled_tokens_per_s"])
+    keep = valid[:max(int(n_probe), 1)]
+    if not any(r["candidate"] == base for r in keep):
+        base_row = next((r for r in valid if r["candidate"] == base), None)
+        if base_row is None:
+            raise AutotuneError(
+                "base knobs failed strict validation for this engine "
+                "geometry; pass a compatible base= to autotune()")
+        keep.append(base_row)
+
+    # --- measure the survivors through the real engine ----------------
+    oracle_tokens = None
+    for row in keep:
+        meas = measure_knobs(
+            params, cfg, row["candidate"], capacity=capacity,
+            max_seq=max_seq, prefill_bucket=prefill_bucket, trace=trace,
+            repeats=probe.repeats, sampler=sampler)
+        if oracle_tokens is None:
+            oracle_tokens = meas["tokens"]
+        elif meas["tokens"] != oracle_tokens:
+            raise AutotuneError(
+                f"candidate {row['label']} changed emitted tokens -- "
+                f"tuning knobs must be semantics-free")
+        row["measured_tokens_per_s"] = meas["tokens_per_s"]
+        row["measured_wall_s"] = meas["wall_s"]
+        if verbose:
+            print(f"[autotune] {row['label']:48s} "
+                  f"modeled {row['modeled_tokens_per_s']:8.1f} "
+                  f"measured {meas['tokens_per_s']:8.1f} tok/s")
+
+    base_row = next(r for r in keep if r["candidate"] == base)
+    best_row = max(keep, key=lambda r: r["measured_tokens_per_s"])
+    if best_row["measured_tokens_per_s"] <= base_row["measured_tokens_per_s"]:
+        best_row = base_row                   # never regress vs defaults
+
+    for row in table:                         # JSON-safe telemetry
+        row.pop("candidate", None)
+
+    return TunedConfig(
+        knobs=EngineKnobs.from_dict(best_row["knobs"]),
+        model=cfg.name,
+        backend=jax.default_backend(),
+        capacity=int(capacity),
+        max_seq=int(max_seq),
+        prefill_bucket=int(prefill_bucket),
+        seed=probe.seed,
+        probe={
+            "protocol": dataclasses.asdict(probe),
+            "trace": stats,
+            "n_candidates": len(table),
+            "n_measured": len(keep),
+            "winner": best_row["label"],
+            "default": {
+                "label": base_row["label"],
+                "measured_tokens_per_s": base_row["measured_tokens_per_s"],
+            },
+            "measured_tokens_per_s": best_row["measured_tokens_per_s"],
+            "speedup_vs_default": (best_row["measured_tokens_per_s"]
+                                   / base_row["measured_tokens_per_s"]),
+            "candidates": table,
+            "class_counts": comp_counts,
+        },
+        dvfs=dvfs_layer_report(params, cfg, domain=domain),
+        meta=host_info(),
+    )

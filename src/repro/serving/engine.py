@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -83,6 +84,7 @@ from ..utils import next_pow2, round_up
 from . import batch as B
 from .scheduler import (PageAllocator, PrefixIndex, Request, Scheduler,
                         pages_needed, prefix_keys)
+from .tuning import EngineKnobs, TunedConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -595,40 +597,60 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig,
                  sampler: SamplerConfig = SamplerConfig(),
                  prefill_bucket: int = 64, decode_bucket: int = 16,
-                 capacity: int = 8, chunk: int = 8,
+                 capacity: int = 8, chunk: Optional[int] = None,
                  max_seq: Optional[int] = None,
                  prefill_chunk_width: Optional[int] = None,
-                 admit_k: int = 4,
-                 paged: bool = False, page_size: int = 16,
+                 admit_k: Optional[int] = None,
+                 paged: bool = False, page_size: Optional[int] = None,
                  cache_pages: Optional[int] = None,
                  share_prefix: bool = False,
                  speculative: bool = False,
                  draft: Any = None,
                  draft_layers: Optional[int] = None,
-                 k: int = 4,
+                 k: Optional[int] = None,
                  mesh: Any = None,
-                 rules: Optional[Dict[str, Any]] = None):
+                 rules: Optional[Dict[str, Any]] = None,
+                 tuned: Any = None):
         self.params = params
         self.cfg = cfg
         self.sampler = sampler
         self.prefill_bucket = max(int(prefill_bucket), 1)
         self.decode_bucket = max(int(decode_bucket), 1)
-        # continuous-batching knobs: slot count, decode steps per host
+        # continuous-batching knobs live in one validated dataclass
+        # (serving/tuning.EngineKnobs): slot count, decode steps per host
         # sync, slot cache length (None: sized from the first submit),
         # widest prompt window per fused prefill-append call (None: 4
-        # buckets, floored at 64), seats per fused admission call
+        # buckets, floored at 64), seats per fused admission call, paged
+        # page size, speculative draft depth, Pallas block-M.  The kwargs
+        # above are a thin compatibility layer: ``tuned`` (a TunedConfig
+        # artifact from serving/autotune.py, or a path to its JSON) seeds
+        # the knobs, and any explicitly-passed kwarg overrides it.  A
+        # False ``paged``/``speculative`` kwarg is the unset default and
+        # defers to the artifact; build from a default TunedConfig to
+        # force either off.
+        if isinstance(tuned, (str, os.PathLike)):
+            tuned = TunedConfig.load(tuned)
+        self.tuned: Optional[TunedConfig] = tuned
+        self.knobs = EngineKnobs.resolve(
+            tuned,
+            chunk=chunk, admit_k=admit_k,
+            paged=True if paged else None,
+            page_size=page_size,
+            prefill_chunk_width=prefill_chunk_width,
+            speculative=True if speculative else None,
+            spec_k=k)
         self.capacity = max(int(capacity), 1)
-        self.chunk = max(int(chunk), 1)
+        self.chunk = self.knobs.chunk
         self.max_seq = max_seq
-        self.prefill_chunk_width = prefill_chunk_width
-        self.admit_k = max(int(admit_k), 1)
+        self.prefill_chunk_width = self.knobs.prefill_chunk_width
+        self.admit_k = self.knobs.admit_k
         # paged KV cache (continuous path only): slots share one page
         # pool of ``cache_pages`` frames (default capacity * max_seq /
         # page_size, i.e. the contiguous layout's memory) and admission
         # reserves pages for prompt_len + max_new -- so capacity slots
         # can exceed what contiguous rows of equal memory could hold
-        self.paged = bool(paged)
-        self.page_size = max(int(page_size), 1)
+        self.paged = self.knobs.paged
+        self.page_size = self.knobs.page_size
         self.cache_pages = cache_pages
         # copy-on-write prefix sharing across requests (paged only):
         # page-aligned prompt prefixes already resident in the pool are
@@ -650,10 +672,8 @@ class Engine:
         # architectures with ring/recurrent cache state (which cannot
         # roll back rejected entries) serve normally with speculation
         # inert -- the same gate as share_prefix.
-        self.speculative = bool(speculative)
-        self.spec_k = int(k)
-        if self.spec_k < 0:
-            raise ValueError(f"k must be >= 0, got {k}")
+        self.speculative = self.knobs.speculative
+        self.spec_k = self.knobs.spec_k
         if draft is not None and draft_layers is not None:
             raise ValueError(
                 "pass either draft (an explicit param tree / (params, "
@@ -712,6 +732,24 @@ class Engine:
         self._resolved_params = None
         self._sched: Optional[Scheduler] = None
         self._executors: Dict[Tuple[int, int], _DeviceExecutor] = {}
+
+    @classmethod
+    def from_tuned(cls, params, cfg: ModelConfig, tuned, **kw) -> "Engine":
+        """Engine from an autotuner artifact (TunedConfig or JSON path).
+
+        The artifact's engine geometry (capacity / max_seq /
+        prefill_bucket, recorded at tune time) seeds the corresponding
+        kwargs; anything passed explicitly still wins, and the knobs
+        themselves resolve exactly as ``Engine(tuned=...)``."""
+        if isinstance(tuned, (str, os.PathLike)):
+            tuned = TunedConfig.load(tuned)
+        if tuned.capacity is not None:
+            kw.setdefault("capacity", tuned.capacity)
+        if tuned.max_seq is not None:
+            kw.setdefault("max_seq", tuned.max_seq)
+        if tuned.prefill_bucket is not None:
+            kw.setdefault("prefill_bucket", tuned.prefill_bucket)
+        return cls(params, cfg, tuned=tuned, **kw)
 
     # ------------------------------------------------------------------
     # prefill (bucketed)
@@ -789,6 +827,12 @@ class Engine:
                     B.predecode, cfg=self.cfg))(self.params)
             else:
                 self._resolved_params = self.params
+                if has_packed and self.knobs.block_m is not None:
+                    # autotuned Pallas block-M, threaded once tree-wide
+                    # (bit-identical math; predecoded CPU trees have no
+                    # packed leaves left to tag)
+                    self._resolved_params = kops.with_block_m(
+                        self._resolved_params, self.knobs.block_m)
             if self.mesh is not None:
                 # lay the resolved tree out on the mesh once, by each
                 # leaf's logical axes (packed leaves shard idx_packed;

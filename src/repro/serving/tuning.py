@@ -1,0 +1,181 @@
+"""Engine tuning knobs + the versioned TunedConfig artifact.
+
+``EngineKnobs`` consolidates every continuous-serving tuning parameter that
+used to live as scattered ``Engine.__init__`` kwargs (``chunk``, ``admit_k``,
+``page_size``, ``prefill_chunk_width``, speculative ``k``) plus the Pallas
+kernel block-M override, behind one frozen, validated dataclass.  The engine
+kwargs survive as a thin compatibility layer: an explicit kwarg always wins
+over a knob coming from a ``TunedConfig``.
+
+``TunedConfig`` is the artifact the hardware-in-the-loop autotuner
+(serving/autotune.py) emits: the winning knobs plus the probe telemetry, the
+per-layer DVFS schedule derived from the packed weight-class composition,
+and enough host/context metadata to keep bench trajectories comparable.  It
+round-trips through JSON (``save``/``load``) and is versioned so stale
+artifacts fail loudly instead of mis-tuning a future engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+from ..utils import round_up
+
+TUNED_CONFIG_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineKnobs:
+    """Every continuous-serving tuning knob in one place.
+
+    chunk: decode steps fused per host sync (tick length).
+    admit_k: seats per fused admission/prefill-append call (the executor
+      still clamps to its own capacity, preserving the historical kwarg
+      behavior -- ``validated(strict=True)`` raises instead).
+    paged / page_size: paged KV cache and its frame length in tokens.
+    prefill_chunk_width: widest prompt window per fused prefill-append call
+      (None: the engine's auto default, 4 buckets floored at 64).
+    speculative / spec_k: self-speculative decoding and its draft depth.
+    block_m: Pallas ``halo_matmul`` block-M override threaded to every
+      packed weight leaf (None: the kernel's 128 default).  Numerics are
+      bit-identical across block sizes; on the CPU/XLA lowering the value
+      is carried but inert.
+    """
+
+    chunk: int = 8
+    admit_k: int = 4
+    paged: bool = False
+    page_size: int = 16
+    prefill_chunk_width: Optional[int] = None
+    speculative: bool = False
+    spec_k: int = 4
+    block_m: Optional[int] = None
+
+    def __post_init__(self):
+        if int(self.chunk) < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if int(self.admit_k) < 1:
+            raise ValueError(f"admit_k must be >= 1, got {self.admit_k}")
+        if int(self.page_size) < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.prefill_chunk_width is not None and int(
+                self.prefill_chunk_width) < 1:
+            raise ValueError(
+                f"prefill_chunk_width must be >= 1 or None, got "
+                f"{self.prefill_chunk_width}")
+        if int(self.spec_k) < 0:
+            raise ValueError(f"k must be >= 0, got {self.spec_k}")
+        if self.block_m is not None and (
+                int(self.block_m) < 8 or int(self.block_m) % 8):
+            raise ValueError(
+                f"block_m must be a multiple of 8 (the f32 sublane tile), "
+                f"got {self.block_m}")
+
+    @classmethod
+    def resolve(cls, tuned: Optional["TunedConfig"] = None,
+                **overrides: Any) -> "EngineKnobs":
+        """Knob resolution for the engine kwargs compatibility layer.
+
+        Starts from ``tuned.knobs`` (or the defaults) and applies every
+        override that is not None -- so an explicit ``Engine(...)`` kwarg
+        always beats the artifact, and omitted kwargs defer to it."""
+        base = tuned.knobs if tuned is not None else cls()
+        kw = {k: v for k, v in overrides.items() if v is not None}
+        bad = set(kw) - {f.name for f in dataclasses.fields(cls)}
+        if bad:
+            raise TypeError(f"unknown knob override(s): {sorted(bad)}")
+        return dataclasses.replace(base, **kw) if kw else base
+
+    def validated(self, capacity: Optional[int] = None,
+                  max_seq: Optional[int] = None,
+                  prefill_bucket: int = 1,
+                  strict: bool = True) -> "EngineKnobs":
+        """Context validation against the engine geometry.
+
+        strict=True (TunedConfig artifacts, autotuner candidates): raise on
+        ``admit_k > capacity`` or a ``page_size`` that does not divide the
+        bucket-rounded ``max_seq``.  strict=False mirrors the historical
+        kwarg behavior -- ``admit_k`` clamps to capacity and the page check
+        is left to the paged executor."""
+        out = self
+        if capacity is not None and out.admit_k > int(capacity):
+            if strict:
+                raise ValueError(
+                    f"admit_k={out.admit_k} exceeds capacity={capacity}")
+            out = dataclasses.replace(out, admit_k=int(capacity))
+        if out.paged and max_seq is not None:
+            rounded = round_up(int(max_seq), max(int(prefill_bucket), 1))
+            if strict and rounded % out.page_size:
+                raise ValueError(
+                    f"page_size={out.page_size} does not divide the "
+                    f"bucket-rounded max_seq={rounded}")
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineKnobs":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in dict(d).items() if k in known})
+
+
+@dataclasses.dataclass
+class TunedConfig:
+    """Versioned autotuner artifact: winning knobs + how they were found.
+
+    probe: search telemetry -- candidate table with modeled and measured
+      tokens/s, the probe-trace protocol, pruning stats.
+    dvfs: per-layer DVFS schedule derived from the packed weight-class
+      composition (transitions, achievable-frequency headroom, modeled
+      time/energy per token) -- see serving/autotune.dvfs_layer_report.
+    meta: host/context info (jax version, backend, devices) so artifacts
+      and bench trajectories stay comparable across machines.
+    """
+
+    knobs: EngineKnobs = dataclasses.field(default_factory=EngineKnobs)
+    version: int = TUNED_CONFIG_VERSION
+    model: str = ""
+    backend: str = ""
+    capacity: Optional[int] = None
+    max_seq: Optional[int] = None
+    prefill_bucket: Optional[int] = None
+    seed: Optional[int] = None
+    probe: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    dvfs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["knobs"] = self.knobs.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TunedConfig":
+        d = dict(d)
+        version = int(d.get("version", -1))
+        if not 1 <= version <= TUNED_CONFIG_VERSION:
+            raise ValueError(
+                f"unsupported TunedConfig version {version} (this build "
+                f"reads <= {TUNED_CONFIG_VERSION}); re-run the autotuner")
+        d["knobs"] = EngineKnobs.from_dict(d.get("knobs", {}))
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def save(self, path) -> str:
+        path = os.fspath(path)
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "TunedConfig":
+        with open(os.fspath(path)) as f:
+            return cls.from_dict(json.load(f))

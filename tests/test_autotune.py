@@ -1,0 +1,282 @@
+"""Autotuner stack: EngineKnobs consolidation/compat, the TunedConfig
+artifact, packed-stream class read-back, the per-layer DVFS report, and a
+tiny hardware-in-the-loop search with token parity against the default
+engine."""
+
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.core import codebooks, deploy
+from repro.core.apply import quantize_params
+from repro.core.quantize import HaloConfig, halo_quantize_tensor
+from repro.kernels import ops
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+from repro.serving.tuning import (EngineKnobs, TunedConfig,
+                                  TUNED_CONFIG_VERSION)
+
+
+def small_model(arch="granite-8b", seed=0):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=1)
+def packed_model():
+    # the smoke config's matrices are below one 128-tile (pack_params
+    # falls back to dense bf16), so widen it until every block leaf packs
+    cfg = dataclasses.replace(configs.get_smoke_config("granite-8b"),
+                              dtype=jnp.float32, d_model=256, d_ff=384,
+                              head_dim=64, vocab=512, vocab_pad_multiple=64)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+    q = quantize_params(params, None, HaloConfig(tile=128))
+    return cfg, deploy.pack_params(q)
+
+
+class TestEngineKnobs:
+    def test_defaults_match_legacy_engine(self):
+        k = EngineKnobs()
+        assert (k.chunk, k.admit_k, k.paged, k.page_size) == (8, 4, False, 16)
+        assert not k.speculative and k.spec_k == 4
+        assert k.prefill_chunk_width is None and k.block_m is None
+
+    @pytest.mark.parametrize("bad", [
+        dict(chunk=0), dict(admit_k=0), dict(page_size=0),
+        dict(prefill_chunk_width=0), dict(spec_k=-1),
+        dict(block_m=12), dict(block_m=4),
+    ])
+    def test_validation_raises(self, bad):
+        with pytest.raises(ValueError):
+            EngineKnobs(**bad)
+
+    def test_resolve_precedence(self):
+        tuned = TunedConfig(knobs=EngineKnobs(chunk=16, admit_k=2))
+        # kwarg > tuned > default
+        k = EngineKnobs.resolve(tuned, chunk=4)
+        assert k.chunk == 4 and k.admit_k == 2
+        assert EngineKnobs.resolve(tuned).chunk == 16
+        assert EngineKnobs.resolve(None).chunk == 8
+
+    def test_resolve_rejects_unknown(self):
+        with pytest.raises(TypeError):
+            EngineKnobs.resolve(None, nope=3)
+
+    def test_validated_strict_and_clamped(self):
+        k = EngineKnobs(admit_k=9)
+        with pytest.raises(ValueError, match="admit_k"):
+            k.validated(capacity=4, max_seq=64, prefill_bucket=16)
+        assert k.validated(4, 64, 16, strict=False).admit_k == 4
+        bad = EngineKnobs(paged=True, page_size=24)
+        with pytest.raises(ValueError, match="page_size"):
+            bad.validated(capacity=4, max_seq=64, prefill_bucket=16)
+
+    def test_engine_kwargs_still_win(self):
+        cfg, packed = packed_model()
+        tuned = TunedConfig(knobs=EngineKnobs(chunk=16))
+        eng = Engine(packed, cfg, tuned=tuned, chunk=2)
+        assert eng.chunk == 2                  # explicit kwarg beats tuned
+        eng2 = Engine(packed, cfg, tuned=tuned)
+        assert eng2.chunk == 16                # tuned beats default
+        assert Engine(packed, cfg).chunk == 8  # legacy default intact
+
+
+class TestTunedConfig:
+    def test_round_trip(self, tmp_path):
+        tc = TunedConfig(knobs=EngineKnobs(chunk=16, paged=True,
+                                           page_size=8),
+                         model="granite-smoke", capacity=4, max_seq=64,
+                         prefill_bucket=16, seed=3,
+                         probe={"winner": "x"}, dvfs={"totals": {}})
+        p = tc.save(tmp_path / "tuned.json")
+        tc2 = TunedConfig.load(p)
+        assert tc2.knobs == tc.knobs
+        assert tc2.version == TUNED_CONFIG_VERSION
+        assert (tc2.model, tc2.capacity, tc2.seed) == ("granite-smoke", 4, 3)
+        assert tc2.probe["winner"] == "x"
+
+    def test_version_rejected(self, tmp_path):
+        tc = TunedConfig(knobs=EngineKnobs())
+        p = tc.save(tmp_path / "tuned.json")
+        blob = json.loads(open(p).read())
+        blob["version"] = TUNED_CONFIG_VERSION + 1
+        open(p, "w").write(json.dumps(blob))
+        with pytest.raises(ValueError, match="version"):
+            TunedConfig.load(p)
+
+    def test_unknown_knob_keys_ignored(self):
+        # forward-compat: a newer artifact with extra knob fields loads
+        d = TunedConfig(knobs=EngineKnobs()).to_dict()
+        d["knobs"]["future_knob"] = 7
+        assert TunedConfig.from_dict(d).knobs == EngineKnobs()
+
+
+class TestPackedClassReadback:
+    def test_matches_quantized_index_stream(self, rng):
+        w = jnp.asarray(rng.normal(0, 0.05, (256, 384)).astype(np.float32))
+        g2 = jnp.asarray((rng.normal(size=(256, 384)) ** 2)
+                         .astype(np.float32))
+        hq = halo_quantize_tensor(w, g2, HaloConfig(tile=128))
+        rb = deploy.packed_tile_classes(ops.pack_halo(hq))
+        assert rb.shape == (hq.n_tiles,)
+        lo, hi = codebooks.f3_index_range()
+        idx = np.asarray(hq.idx)               # (n_tiles, t, t) ground truth
+        for t in range(hq.n_tiles):
+            in_f3 = idx[t].min() >= lo and idx[t].max() <= hi
+            expect = (codebooks.TILE_CLASS_F3 if in_f3
+                      else codebooks.TILE_CLASS_F2)
+            assert rb[t] == expect
+
+    def test_labeled_f3_implies_readback_f3(self, rng):
+        # the conservative-in-reverse direction DVFS planning relies on:
+        # an F3-labeled tile only stores F3-range indices, so it must read
+        # back F3 (the converse is allowed to differ)
+        w = jnp.asarray(rng.normal(0, 0.05, (256, 256)).astype(np.float32))
+        g2 = np.ones((256, 256), np.float32)
+        g2[:128, :128] = 1e-12                 # drive tile 0 to F3
+        hq = halo_quantize_tensor(w, jnp.asarray(g2), HaloConfig(tile=128))
+        gt = np.asarray(hq.classes)
+        rb = deploy.packed_tile_classes(ops.pack_halo(hq))
+        f3 = codebooks.TILE_CLASS_F3
+        assert (gt == f3).any()
+        assert (rb[gt == f3] == f3).all()
+
+    def test_padded_shape(self, rng):
+        w = jnp.asarray(rng.normal(0, 0.05, (300, 260)).astype(np.float32))
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=128))
+        rb = deploy.packed_tile_classes(ops.pack_halo(hq))
+        assert rb.shape == (3 * 3,)            # ceil(300/128) * ceil(260/128)
+        assert set(np.unique(rb)) <= {codebooks.TILE_CLASS_F2,
+                                      codebooks.TILE_CLASS_F3}
+
+
+class TestLayerComposition:
+    def test_structure(self):
+        cfg, packed = packed_model()
+        comp = deploy.layer_class_composition(packed, cfg)
+        layer_recs = [r for r in comp if r["layer"] is not None]
+        assert [r["layer"] for r in layer_recs] == list(range(cfg.n_layers))
+        for r in layer_recs:
+            assert r["pattern"] in cfg.block_pattern
+            assert r["n_tiles"] == sum(r["counts"].values()) > 0
+            for leaf in r["leaves"]:
+                assert leaf["classes"].dtype == np.int8
+            assert r["n_tiles"] == sum(l["classes"].size
+                                       for l in r["leaves"])
+
+    def test_non_packed_tree_is_empty(self):
+        assert deploy.layer_class_composition({"w": np.zeros(3)},
+                                              object()) == []
+
+
+class TestBlockM:
+    def test_with_block_m_sets_and_validates(self):
+        cfg, packed = packed_model()
+        tree = ops.with_block_m(packed, 32)
+        pred = lambda x: isinstance(x, ops.HaloPacked)
+        leaves = [l for l in jax.tree.leaves(tree, is_leaf=pred)
+                  if pred(l)]
+        assert leaves and all(l.block_m == 32 for l in leaves)
+        with pytest.raises(ValueError):
+            ops.with_block_m(packed, 12)
+
+    def test_matmul_parity_across_block_m(self, rng):
+        w = jnp.asarray(rng.normal(0, 0.05, (256, 256)).astype(np.float32))
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=128))
+        packed = ops.pack_halo(hq)
+        x = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
+        base = ops.halo_matmul(x, packed, interpret=True,
+                               out_dtype=jnp.float32)
+        for bm in (8, 32, 128):
+            tuned = dataclasses.replace(packed, block_m=bm)
+            out = ops.halo_matmul(x, tuned, interpret=True,
+                                  out_dtype=jnp.float32)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                       rtol=1e-5, atol=1e-5)
+        # explicit bm kwarg overrides the embedded default
+        out = ops.halo_matmul(x, dataclasses.replace(packed, block_m=8),
+                              bm=128, interpret=True, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _trace(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab, (int(rng.integers(4, 12)),))
+             .astype(np.int32), int(rng.integers(2, 6))) for _ in range(n)]
+
+
+def _serve(eng, trace):
+    rids = [eng.submit({"tokens": toks}, max_new=mn) for toks, mn in trace]
+    done = eng.drain()
+    out = [np.asarray(done[r]).tolist() for r in rids]
+    eng.pop_finished()
+    return out
+
+
+class TestAutotuneLoop:
+    def test_search_produces_consumable_artifact(self, tmp_path):
+        from repro.serving.autotune import ProbeSpec, SearchSpace, autotune
+
+        cfg, packed = packed_model()
+        space = SearchSpace(chunk=(4, 8), admit_k=(2,), paged=(False,),
+                            page_size=(8,), prefill_chunk_width=(None,))
+        tc = autotune(packed, cfg, capacity=2, max_seq=32,
+                      prefill_bucket=16, space=space,
+                      probe=ProbeSpec(n_requests=3, prompt_len=(4, 10),
+                                      max_new=(2, 6), repeats=1),
+                      n_probe=2)
+        assert tc.version == TUNED_CONFIG_VERSION
+        assert tc.probe["speedup_vs_default"] >= 1.0   # never regress
+        assert tc.probe["n_measured"] >= 1
+        assert tc.dvfs["totals"]["n_tiles"] > 0
+        assert tc.dvfs["totals"]["mean_freq_headroom"] >= 1.0
+        assert all("dvfs_transitions" in l for l in tc.dvfs["layers"])
+
+        p = tc.save(tmp_path / "tuned.json")
+        # tuned engine serves token-identically to the default engine
+        eng_t = Engine.from_tuned(packed, cfg, p)
+        eng_d = Engine(packed, cfg, capacity=tc.capacity,
+                       max_seq=tc.max_seq, prefill_bucket=tc.prefill_bucket)
+        trace = _trace(cfg)
+        assert _serve(eng_t, trace) == _serve(eng_d, trace)
+
+    def test_from_tuned_geometry_defaults(self, tmp_path):
+        cfg, packed = packed_model()
+        tc = TunedConfig(knobs=EngineKnobs(chunk=16), capacity=3,
+                         max_seq=48, prefill_bucket=16)
+        p = tc.save(tmp_path / "t.json")
+        eng = Engine.from_tuned(packed, cfg, p)
+        assert eng.chunk == 16
+        assert eng.capacity == 3
+        eng2 = Engine.from_tuned(packed, cfg, p, capacity=5)
+        assert eng2.capacity == 5             # kwargs still override
+
+    def test_modeled_ranking_prunes(self):
+        from repro.serving.autotune import (HostModel, ProbeSpec,
+                                            _trace_stats,
+                                            make_probe_trace,
+                                            modeled_tokens_per_s)
+        from repro.hw.dvfs import SYSTOLIC_DOMAIN
+
+        cfg, _ = small_model()
+        trace = make_probe_trace(ProbeSpec(n_requests=3), cfg.vocab)
+        stats = _trace_stats(trace)
+        counts = {"F2": 60, "F3": 4}
+        kw = dict(cfg=cfg, capacity=2, prefill_bucket=16,
+                  comp_counts=counts, stats=stats, host=HostModel(),
+                  domain=SYSTOLIC_DOMAIN)
+        t8 = modeled_tokens_per_s(EngineKnobs(chunk=8), **kw)
+        t4 = modeled_tokens_per_s(EngineKnobs(chunk=4), **kw)
+        assert t8["tokens_per_s"] > 0 and t4["tokens_per_s"] > 0
+        # fewer host syncs per token models faster
+        assert t8["tokens_per_s"] >= t4["tokens_per_s"]

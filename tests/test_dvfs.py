@@ -1,0 +1,125 @@
+"""DVFS schedule / operating-point edge cases + MAC-model paper anchors.
+
+Covers the autotuner's hw-model dependencies: ``schedule_transitions`` on
+degenerate tile lists, ``plan_for_classes`` headroom semantics (all-F1 has
+none), ``DvfsDomain`` fallback when no operating point is feasible, the
+reorder-invariance property the class-grouped schedule relies on, and the
+lru-cached ``achievable_freq_ghz`` identity.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.hw import mac_model as mm
+from repro.hw.dvfs import (DvfsDomain, OperatingPoint, SYSTOLIC_DOMAIN,
+                           plan_for_classes, schedule_transitions)
+
+
+class TestScheduleTransitions:
+    def test_empty(self):
+        s = schedule_transitions([])
+        assert s["num_transitions"] == 0
+        assert s["order"].size == 0
+        assert s["classes"].size == 0
+
+    def test_single_class(self):
+        s = schedule_transitions([mm.CLASS_IDS["F2"]] * 7)
+        assert s["num_transitions"] == 0
+        assert s["classes"].tolist() == [mm.CLASS_IDS["F2"]]
+        assert s["counts"].tolist() == [7]
+
+    def test_three_classes(self):
+        ids = [mm.CLASS_IDS[c] for c in ("F3", "F1", "F2", "F3", "F1")]
+        s = schedule_transitions(ids)
+        assert s["num_transitions"] == 2
+        # slowest class first: the order must be non-decreasing in class id
+        executed = np.asarray(ids)[s["order"]]
+        assert (np.diff(executed) >= 0).all()
+
+    @given(st.integers(min_value=0, max_value=2 ** 30))
+    def test_reorder_never_changes_counts(self, seed):
+        rnd = np.random.default_rng(seed)
+        ids = rnd.integers(0, 3, size=rnd.integers(1, 40))
+        perm = rnd.permutation(ids.size)
+        a = schedule_transitions(ids)
+        b = schedule_transitions(ids[perm])
+        assert a["classes"].tolist() == b["classes"].tolist()
+        assert a["counts"].tolist() == b["counts"].tolist()
+        assert a["num_transitions"] == b["num_transitions"]
+
+
+class TestPlanForClasses:
+    def test_all_f1_no_headroom(self):
+        plan = plan_for_classes([mm.CLASS_IDS["F1"]] * 5)
+        assert plan["num_transitions"] == 0
+        assert plan["achievable_freq_ghz"] == pytest.approx(
+            plan["nominal_freq_ghz"])
+        assert plan["freq_headroom"] == pytest.approx(1.0)
+
+    def test_empty_defaults_to_nominal(self):
+        plan = plan_for_classes([])
+        assert plan["achievable_freq_ghz"] == pytest.approx(
+            plan["nominal_freq_ghz"])
+        assert plan["num_transitions"] == 0
+
+    def test_all_f3_max_headroom(self):
+        plan = plan_for_classes([mm.CLASS_IDS["F3"]] * 4)
+        assert plan["achievable_freq_ghz"] == pytest.approx(3.7)
+        assert plan["freq_headroom"] == pytest.approx(3.7 / 1.9)
+        assert plan["points"]["F3"].freq_ghz == pytest.approx(3.7)
+
+    def test_mixed_is_tile_weighted(self):
+        ids = ([mm.CLASS_IDS["F3"]] * 3 + [mm.CLASS_IDS["F1"]])
+        plan = plan_for_classes(ids)
+        assert plan["achievable_freq_ghz"] == pytest.approx(
+            (3 * 3.7 + 1 * 1.9) / 4)
+        assert plan["num_transitions"] == 1
+
+
+class TestDvfsDomain:
+    def test_infeasible_delay_falls_back_to_slowest(self):
+        # a critical path slower than every point's period: the domain must
+        # still return something -- its slowest (safest) point
+        pt = SYSTOLIC_DOMAIN.fastest_point_for_delay(10.0)
+        assert pt.freq_ghz == pytest.approx(1.9)
+        pt = SYSTOLIC_DOMAIN.best_point_for_delay(10.0)
+        assert pt.freq_ghz == pytest.approx(1.9)
+
+    def test_fastest_picks_highest_feasible(self):
+        # F2 critical path (1/2.4 ns): F3's period is too short, F2 fits
+        pt = SYSTOLIC_DOMAIN.fastest_point_for_delay(1.0 / 2.4)
+        assert pt.name == "F2"
+
+    def test_energy_scale_quadratic(self):
+        p = OperatingPoint("x", voltage_v=1.2, freq_ghz=3.7)
+        assert p.energy_scale(1.0) == pytest.approx(1.44)
+
+    def test_single_point_domain(self):
+        dom = DvfsDomain(name="one",
+                         points=(OperatingPoint("only", 1.0, 2.0),),
+                         v_nominal=1.0)
+        assert dom.fastest_point_for_delay(0.1).name == "only"
+        assert dom.fastest_point_for_delay(99.0).name == "only"
+
+
+class TestMacModelAnchors:
+    def test_paper_tolerances(self):
+        v = mm.validate_against_paper()
+        assert v["f3_ghz"] == pytest.approx(3.7, abs=0.05)
+        assert v["f2_ghz"] == pytest.approx(2.4, abs=0.05)
+        assert v["f1_ghz"] == pytest.approx(1.9, abs=0.05)
+        assert v["f3_size"] == 9 and v["f2_size"] == 16
+        # paper Fig. 3 direction: the 1-partial-product weight clocks
+        # faster than the dense-CSD one (the behavioral model is shallower
+        # than the paper's circuit, so only the ordering is asserted)
+        assert v["w64_over_wm127"] > 1.0
+        assert v["delay_energy_corr"] > 0.5
+
+    def test_luts_are_cached(self):
+        # satellite: the autotuner hits these in its inner loop -- the same
+        # params object must return the identical cached array
+        p = mm.DEFAULT_PARAMS
+        assert mm.delay_lut(p) is mm.delay_lut(p)
+        assert mm.energy_lut(p) is mm.energy_lut(p)
+        assert mm.achievable_freq_ghz(p) is mm.achievable_freq_ghz(p)

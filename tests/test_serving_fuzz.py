@@ -51,6 +51,7 @@ from repro.models import transformer as T
 from repro.serving.engine import Engine
 from repro.serving.scheduler import (PageAllocator, PrefixIndex, Scheduler,
                                      prefix_keys)
+from repro.serving.tuning import EngineKnobs, TunedConfig
 
 FUZZ_EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "4"))
 
@@ -104,6 +105,14 @@ def get_rigs():
             "paged_share_spec": Engine(params, cfg, paged=True,
                                        page_size=PAGE, share_prefix=True,
                                        speculative=True, k=3, **ENGINE_KW),
+            # autotuner-artifact route: the same knobs delivered via a
+            # TunedConfig (serving/tuning.py) instead of kwargs -- every
+            # invariant, token identity against the contiguous oracle
+            # included, must hold for engines built from an artifact
+            "tuned": Engine(params, cfg, tuned=TunedConfig(
+                knobs=EngineKnobs(chunk=3, paged=True, page_size=PAGE,
+                                  prefill_chunk_width=8)),
+                prefill_bucket=4, capacity=CAP, max_seq=MAX_SEQ),
         }
         if jax.device_count() >= 2:
             # tensor-parallel rigs (only under a real multi-device
