@@ -6,10 +6,11 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_serving_e2e.py tests/test_chunked_prefill.py \
                  tests/test_paged_cache.py tests/test_serving_fuzz.py \
-                 tests/test_speculative.py tests/test_autotune.py
+                 tests/test_speculative.py tests/test_autotune.py \
+                 tests/test_multitenant.py
 
 .PHONY: test test-unit test-serving test-fuzz test-spec test-sharded \
-        bench-smoke bench-smoke-continuous bench-serving \
+        test-multitenant bench-smoke bench-smoke-continuous bench-serving \
         bench-smoke-sharded bench-smoke-autotune
 
 test:            ## tier-1 test suite
@@ -35,12 +36,15 @@ test-sharded:    ## tensor-parallel parity + fuzzer on a forced 4-device CPU mes
 	  $(PYTHON) -m pytest -q --durations=10 \
 	  tests/test_sharded_serving.py tests/test_serving_fuzz.py
 
+test-multitenant:  ## multi-tenant control plane: policies, quotas, preemption, TTFT
+	$(PYTHON) -m pytest -q --durations=10 tests/test_multitenant.py
+
 bench-smoke:     ## serving latency benchmark, tiny shapes (CI)
 	$(PYTHON) benchmarks/serving_latency.py --smoke
 
-bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared + spec
+bench-smoke-continuous:  ## continuous + prefill-heavy + paged + shared + spec + MT
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \
-	  --prefill-heavy --paged --share-prefix --speculative
+	  --prefill-heavy --paged --share-prefix --speculative --multi-tenant
 
 bench-smoke-sharded:  ## sharded continuous section (forces a 4-device CPU mesh)
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode continuous \

@@ -420,6 +420,103 @@ def cache_page_copy(cfg, cache: Any, src, dst) -> Any:
     return jax.tree.map(cp, cache, _cache_axes(cfg, cache))
 
 
+def cache_frames_gather(cfg, cache: Any, frames: jnp.ndarray) -> list:
+    """Read physical frames ``frames`` ((N,) int32) out of every paged
+    pool leaf as compact per-leaf buffers -- the device half of
+    preemption swap-OUT: a victim's private frames are gathered into
+    (N, page, ...) / (layers, N, page, ...) arrays the host then pulls
+    into its swap pool (O(pages) data, never a dense row).
+
+    Returns a LIST of arrays in the cache's flatten order (pool leaves
+    only); ``cache_frames_scatter`` consumes the same order.  Callers
+    pad ``frames`` to a bounded width set (out-of-range ids clamp, the
+    garbage rows are dropped on scatter), so compilations stay bounded
+    regardless of how many frames each preemption happens to move."""
+    out: list = []
+
+    def rd(leaf, axes):
+        if "pages" in axes:
+            out.append(jnp.take(leaf, frames, axis=axes.index("pages"),
+                                mode="clip"))
+        return leaf
+
+    jax.tree.map(rd, cache, _cache_axes(cfg, cache))
+    return out
+
+
+def cache_frames_scatter(cfg, cache: Any, data: list,
+                         frames: jnp.ndarray) -> Any:
+    """Write ``cache_frames_gather``-shaped buffers back into physical
+    frames ``frames`` -- the device half of preemption swap-IN (resume
+    scatters the host pool's copy into freshly allocated frames).
+    Out-of-range frame ids (the padding lanes) drop their rows, so the
+    padded tail of a bucketed transfer is a no-op."""
+    it = iter(data)
+
+    def wr(leaf, axes):
+        if "pages" not in axes:
+            return leaf
+        d = next(it)
+        if axes.index("pages") == 0:
+            return leaf.at[frames].set(d.astype(leaf.dtype), mode="drop")
+        return leaf.at[:, frames].set(d.astype(leaf.dtype), mode="drop")
+
+    return jax.tree.map(wr, cache, _cache_axes(cfg, cache))
+
+
+def cache_hostrow_gather(cfg, cache: Any, slot) -> list:
+    """Read batch row ``slot`` of every BATCH-major cache leaf (SSM /
+    RG-LRU / ring state -- and, in mixed paged architectures, the
+    contiguous KV rows) as a list in flatten order, each leaf keeping a
+    size-1 batch axis.  Page pools and the page table are excluded: a
+    preempted slot's paged KV travels per-frame (``cache_frames_*``)
+    and its page-table row is rebuilt host-side on resume.  Fully
+    pageable architectures return an empty list (preemption then moves
+    only frames)."""
+    out: list = []
+
+    def rd(leaf, axes):
+        if "pages" in axes:
+            return leaf
+        bpos = axes.index("batch")
+        start = [0] * leaf.ndim
+        start[bpos] = slot
+        sizes = list(leaf.shape)
+        sizes[bpos] = 1
+        out.append(jax.lax.dynamic_slice(leaf, start, sizes))
+        return leaf
+
+    body = {k: v for k, v in cache.items() if k != "page_table"}
+    axes = {k: v for k, v in _cache_axes(cfg, cache).items()
+            if k != "page_table"}
+    jax.tree.map(rd, body, axes)
+    return out
+
+
+def cache_hostrow_scatter(cfg, cache: Any, data: list, slot) -> Any:
+    """Write ``cache_hostrow_gather``-shaped rows back into batch row
+    ``slot`` (page pools and the page table pass through untouched)."""
+    it = iter(data)
+
+    def wr(leaf, axes):
+        if "pages" in axes:
+            return leaf
+        d = next(it)
+        bpos = axes.index("batch")
+        start = [0] * leaf.ndim
+        start[bpos] = slot
+        return jax.lax.dynamic_update_slice(leaf, d.astype(leaf.dtype),
+                                            start)
+
+    body = {k: v for k, v in cache.items() if k != "page_table"}
+    axes = {k: v for k, v in _cache_axes(cfg, cache).items()
+            if k != "page_table"}
+    out = jax.tree.map(wr, body, axes)
+    if "page_table" in cache:
+        out["page_table"] = cache["page_table"]
+    return out
+
+
 def cache_rows_scatter_dense(cfg, cache: Any, sub: Any, slots: jnp.ndarray,
                              mask: Optional[jnp.ndarray] = None) -> Any:
     """Write a CONTIGUOUS batch-K sub-cache (the ``T.prefill`` layout:

@@ -312,6 +312,45 @@ def evict_slot(state: SlotState, slot, *, cfg: ModelConfig) -> SlotState:
 
 
 # ---------------------------------------------------------------------------
+# preemption: page-level device<->host swap
+# ---------------------------------------------------------------------------
+
+def swap_out_slot(state: SlotState, slot, frames: jnp.ndarray, *,
+                  cfg: ModelConfig) -> Tuple[list, list]:
+    """Jit target for preemption swap-OUT: gather the victim's private
+    physical frames ((N,) int32, padded ids clamp) out of every page
+    pool into compact (N, page, ...) buffers, plus the slot's batch-major
+    cache rows (SSM/RG-LRU/ring state in mixed architectures; empty for
+    fully pageable ones).  The host pulls both lists into its swap pool
+    (``np.asarray`` -- the only transfer preemption costs, O(pages));
+    refcount-shared frames are NOT in ``frames`` -- they stay resident
+    and the victim keeps its refcount on them."""
+    return (deploy.cache_frames_gather(cfg, state.cache, frames),
+            deploy.cache_hostrow_gather(cfg, state.cache, slot))
+
+
+def swap_in_slot(state: SlotState, slot, frames: jnp.ndarray, page_data: list,
+                 row_data: list, row: jnp.ndarray, tok, length, key, *,
+                 cfg: ModelConfig) -> SlotState:
+    """Jit target for preemption swap-IN (the PREFILLING-free resume):
+    scatter the host pool's frame buffers into freshly allocated frames
+    (padded ids drop), restore the slot's batch-major rows, install the
+    rebuilt page-table row (kept shared frames at their original logical
+    positions, fresh frames where data was swapped) and re-seed the
+    slot's token/length/PRNG-key registers exactly as saved -- the
+    resumed request continues mid-decode, token-identical to a run that
+    was never preempted."""
+    cache = deploy.cache_frames_scatter(cfg, state.cache, page_data, frames)
+    cache = deploy.cache_hostrow_scatter(cfg, cache, row_data, slot)
+    pt = cache["page_table"].at[slot].set(row.astype(jnp.int32))
+    return SlotState(
+        tok=state.tok.at[slot].set(jnp.asarray(tok, jnp.int32)),
+        lengths=state.lengths.at[slot].set(jnp.asarray(length, jnp.int32)),
+        keys=state.keys.at[slot].set(jnp.asarray(key, jnp.uint32)),
+        cache={**cache, "page_table": pt})
+
+
+# ---------------------------------------------------------------------------
 # chunked decode
 # ---------------------------------------------------------------------------
 

@@ -82,9 +82,27 @@ from ..dist import sharding as sh
 from ..models import transformer as T
 from ..utils import next_pow2, round_up
 from . import batch as B
-from .scheduler import (PageAllocator, PrefixIndex, Request, Scheduler,
-                        pages_needed, prefix_keys)
+from .scheduler import (PageAllocator, PrefixIndex, PriorityAdmission,
+                        Request, Scheduler, TenantQuota, pages_needed,
+                        prefix_keys)
 from .tuning import EngineKnobs, TunedConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One emitted token, as yielded by ``Engine.stream()``.
+
+    ``index`` is the token's position in the request's output stream
+    (0 = the prefill-sampled first token); ``ttft`` is populated on that
+    first event only -- wall seconds from ``submit`` to the token's
+    emission, the stream's first-class TTFT observable."""
+
+    rid: int
+    token: int
+    index: int
+    tenant: str
+    done: bool                    # this was the request's last token
+    ttft: Optional[float] = None  # first event of the request only
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,6 +244,19 @@ class _DeviceExecutor:
             self._copy_frame = wrap(jax.jit(
                 functools.partial(B.copy_frame, cfg=cfg),
                 donate_argnums=donate))
+            # preemption: page-level device<->host swap.  The gather is
+            # read-only (no donation -- the state survives); the scatter
+            # donates like every other slot update.
+            self._swap_gather = wrap(jax.jit(
+                functools.partial(B.swap_out_slot, cfg=cfg)))
+            self._swap_scatter = wrap(jax.jit(
+                functools.partial(B.swap_in_slot, cfg=cfg),
+                donate_argnums=donate))
+            # host-memory swap pool: rid -> the victim's saved private
+            # state (frame data, batch rows, tok/length/PRNG key, floor)
+            self._swap: Dict[int, Dict[str, Any]] = {}
+            self.swap_outs = 0
+            self.swap_ins = 0
         self.state = B.init_slots(cfg, self.capacity, self.max_seq,
                                   paged=self.paged,
                                   page_size=self.page_size,
@@ -540,7 +571,8 @@ class _DeviceExecutor:
         self.allocator.share(kept)
         frames = self.allocator.alloc(n_fresh)
         if frames is None and self.share:
-            self.prefix.reclaim(n_fresh - self.allocator.n_free)
+            self.prefix.reclaim(n_fresh - self.allocator.n_free
+                                - self.allocator.n_swapped)
             frames = self.allocator.alloc(n_fresh)
         if frames is None:
             self.allocator.free(kept)          # undo: admission blocks
@@ -592,6 +624,103 @@ class _DeviceExecutor:
             self.draft_state = self._draft_evict(self.draft_state,
                                                  np.int32(slot))
 
+    def _pad_frames(self, frames: List[int]) -> np.ndarray:
+        """Pad a frame-id list to a power-of-two width so the swap
+        gather/scatter compile for a bounded width set (log2(pages per
+        slot) shapes), not one shape per preemption.  Pad lanes carry
+        ``n_pages``: the gather clamps them onto a real frame (whose
+        rows are never consumed) and the scatter drops them."""
+        n = max(1, next_pow2(max(len(frames), 1)))
+        out = np.full((n,), self.n_pages, np.int32)
+        out[:len(frames)] = frames
+        return out
+
+    def preempt(self, slot: int, req: Request) -> None:
+        """Swap a RUNNING request's private state out to host memory.
+
+        Only the frames this request alone owns (refcount 1) move:
+        their pool rows are gathered into compact buffers and pulled to
+        the host swap pool, then the allocator vacates them
+        (live -> swapped, reusable capacity).  Refcount-shared frames --
+        prefix-index pins and cross-request shared prefixes -- stay
+        resident, and the victim KEEPS its refcount on them, so no
+        sharer (or index reclaim) can free data it still needs.  The
+        slot's batch-major rows (recurrent state in mixed archs) and
+        its token/length/PRNG registers are saved too, the seat is
+        evicted, and the whole bundle parks under ``req.rid`` until
+        ``resume``.  Cost: O(pages owned), one transfer."""
+        frames = self._slot_frames.pop(slot)
+        priv_idx = [i for i, f in enumerate(frames)
+                    if self.allocator.refcount(f) == 1]
+        priv = [frames[i] for i in priv_idx]
+        padded = jnp.asarray(self._pad_frames(priv))
+        page_data, row_data = self._swap_gather(self.state, np.int32(slot),
+                                                padded)
+        page_data = [np.asarray(x) for x in page_data]   # host pull
+        row_data = [np.asarray(x) for x in row_data]
+        tok = int(np.asarray(self.state.tok[slot]))
+        length = int(np.asarray(self.state.lengths[slot]))
+        key = np.asarray(self.state.keys[slot])
+        self.allocator.swap_out(priv)
+        self._swap[req.rid] = dict(
+            frames=list(frames), priv_idx=priv_idx, page_data=page_data,
+            row_data=row_data, tok=tok, length=length, key=key,
+            floor=int(self._floors[slot]))
+        self._floors[slot] = 0
+        self.state = self._evict(self.state, np.int32(slot))
+        if self.spec:
+            self.draft_state = self._draft_evict(self.draft_state,
+                                                 np.int32(slot))
+        self.swap_outs += 1
+
+    def resume(self, slot: int, req: Request) -> bool:
+        """Restore a preempted request into ``slot`` -- the
+        PREFILLING-free re-entry.  Fresh frames are allocated for the
+        swapped data (reclaiming LRU prefix-index entries under
+        pressure, like ``reserve``), the host buffers scatter in, and
+        the page-table row is rebuilt with the kept shared frames at
+        their original logical positions.  Token/length/PRNG registers
+        restore exactly, so the resumed decode is token-identical to a
+        run that was never preempted.  False: pool still too full (the
+        request stays PREEMPTED and retries)."""
+        h = self._swap[req.rid]
+        n_priv = len(h["priv_idx"])
+        fresh = self.allocator.alloc(n_priv)
+        if fresh is None and self.share:
+            self.prefix.reclaim(n_priv - self.allocator.n_free
+                                - self.allocator.n_swapped)
+            fresh = self.allocator.alloc(n_priv)
+        if fresh is None:
+            return False
+        frames = list(h["frames"])
+        for i, f in zip(h["priv_idx"], fresh):
+            frames[i] = f
+        row = np.full((self.pages_per_slot,), T.PAGE_SENTINEL, np.int32)
+        row[:len(frames)] = frames
+        self.state = self._swap_scatter(
+            self.state, np.int32(slot), jnp.asarray(self._pad_frames(fresh)),
+            [jnp.asarray(d) for d in h["page_data"]],
+            [jnp.asarray(d) for d in h["row_data"]],
+            jnp.asarray(row), np.int32(h["tok"]), np.int32(h["length"]),
+            jnp.asarray(h["key"]))
+        self._slot_frames[slot] = frames
+        self._floors[slot] = h["floor"]
+        if self.spec:
+            # the draft cache was dropped at preemption; re-seed the
+            # row's length so draft appends stay position-aligned with
+            # the verifier.  The draft attends zeros over the restored
+            # span -- that costs acceptance rate on the first ticks
+            # after resume, never correctness (emitted tokens are
+            # always the verifier's; same argument as prefill_skip).
+            self.draft_state = self.draft_state._replace(
+                tok=self.draft_state.tok.at[slot].set(
+                    np.int32(h["tok"])),
+                lengths=self.draft_state.lengths.at[slot].set(
+                    np.int32(h["length"])))
+        del self._swap[req.rid]
+        self.swap_ins += 1
+        return True
+
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig,
@@ -608,6 +737,11 @@ class Engine:
                  draft: Any = None,
                  draft_layers: Optional[int] = None,
                  k: Optional[int] = None,
+                 priority_levels: Optional[int] = None,
+                 preempt: bool = False,
+                 tenant_slots: Optional[int] = None,
+                 tenant_pages: Optional[int] = None,
+                 tenants: Optional[Dict[str, Dict[str, Any]]] = None,
                  mesh: Any = None,
                  rules: Optional[Dict[str, Any]] = None,
                  tuned: Any = None):
@@ -638,7 +772,10 @@ class Engine:
             page_size=page_size,
             prefill_chunk_width=prefill_chunk_width,
             speculative=True if speculative else None,
-            spec_k=k)
+            spec_k=k,
+            priority_levels=priority_levels,
+            preempt=True if preempt else None,
+            tenant_slots=tenant_slots, tenant_pages=tenant_pages)
         self.capacity = max(int(capacity), 1)
         self.chunk = self.knobs.chunk
         self.max_seq = max_seq
@@ -674,6 +811,26 @@ class Engine:
         # inert -- the same gate as share_prefix.
         self.speculative = self.knobs.speculative
         self.spec_k = self.knobs.spec_k
+        # multi-tenant control plane (continuous path only).  FIFO stays
+        # the default: the scheduler only switches to priority +
+        # weighted-fair-share admission when the knobs actually ask for
+        # it (priority_levels >= 2, preempt=True, or per-tenant weights),
+        # so a default-constructed engine is behaviorally identical to
+        # the pre-policy scheduler.  ``tenants`` maps tenant name ->
+        # {"weight": fair-share weight, "slots"/"pages"/"queue":
+        # per-tenant quota overrides}; ``tenant_slots``/``tenant_pages``
+        # set the default quota every tenant inherits.
+        self.priority_levels = self.knobs.priority_levels
+        self.preempt = self.knobs.preempt
+        self.tenants: Dict[str, Dict[str, Any]] = {
+            str(t): dict(spec or {})
+            for t, spec in dict(tenants or {}).items()}
+        for t, spec in self.tenants.items():
+            bad = set(spec) - {"weight", "slots", "pages", "queue"}
+            if bad:
+                raise ValueError(
+                    f"tenant {t!r}: unknown spec key(s) {sorted(bad)} "
+                    f"(allowed: weight, slots, pages, queue)")
         if draft is not None and draft_layers is not None:
             raise ValueError(
                 "pass either draft (an explicit param tree / (params, "
@@ -920,7 +1077,8 @@ class Engine:
         return out, int(out[lead].shape[1])
 
     def submit(self, prompts, max_new: int, eos_id: Optional[int] = None,
-               arrival: float = 0.0) -> int:
+               arrival: float = 0.0, tenant: str = "default",
+               priority: int = 0) -> int:
         """Enqueue one request; returns its request id.
 
         ``prompts``: {"tokens": (s,) or (1, s)} (or "embeds"/"positions"
@@ -930,7 +1088,13 @@ class Engine:
         prompt of any length completes via chunked prefill
         (``prefill_chunk_width``-token windows interleaved with decode);
         the only hard limit is the slot cache -- ``prompt_len + max_new``
-        must fit ``max_seq``."""
+        must fit ``max_seq``.
+
+        ``tenant``/``priority`` feed the multi-tenant control plane:
+        priority must sit in [0, priority_levels), and a tenant at its
+        ``queue`` quota gets ``QuotaExceeded`` backpressure here instead
+        of silent unbounded queuing.  Defaults reproduce single-tenant
+        FIFO exactly."""
         req, s = self._normalize_request(prompts)
         sched = self._scheduler(prompt_len=s, max_new=max_new)
         ex = sched.ex
@@ -950,13 +1114,44 @@ class Engine:
                     f"pages but the pool holds {ex.n_pages}; raise "
                     f"cache_pages or lower max_new")
         return sched.submit(req, s, max_new, eos_id=eos_id,
-                            arrival=arrival)
+                            arrival=arrival, tenant=tenant,
+                            priority=priority)
+
+    def _make_policy(self):
+        """Admission policy from the knobs: None (the scheduler's FIFO
+        default) unless priorities, preemption, or fair-share weights
+        were asked for -- so a default engine stays bit-compatible."""
+        weights = {t: spec["weight"] for t, spec in self.tenants.items()
+                   if "weight" in spec}
+        if self.priority_levels <= 1 and not self.preempt and not weights:
+            return None
+        return PriorityAdmission(levels=self.priority_levels,
+                                 weights=weights or None,
+                                 preempt=self.preempt)
+
+    def _make_quotas(self) -> Tuple[Dict[str, TenantQuota],
+                                    Optional[TenantQuota]]:
+        """(per-tenant quota overrides, default quota) from the knobs +
+        ``tenants`` specs.  A tenant spec carrying any quota axis builds
+        its own TenantQuota, inheriting unset axes from the defaults."""
+        ts, tp = self.knobs.tenant_slots, self.knobs.tenant_pages
+        default = (TenantQuota(slots=ts, pages=tp)
+                   if ts is not None or tp is not None else None)
+        quotas = {}
+        for t, spec in self.tenants.items():
+            if {"slots", "pages", "queue"} & set(spec):
+                quotas[t] = TenantQuota(slots=spec.get("slots", ts),
+                                        pages=spec.get("pages", tp),
+                                        queue=spec.get("queue"))
+        return quotas, default
 
     def _scheduler(self, prompt_len: int = 0, max_new: int = 0) -> Scheduler:
         if self._sched is None:
             ms = self.max_seq or (prompt_len + max_new)
             ex = _DeviceExecutor(self, self.capacity, ms, self.chunk)
-            self._sched = Scheduler(ex)
+            quotas, default = self._make_quotas()
+            self._sched = Scheduler(ex, policy=self._make_policy(),
+                                    quotas=quotas, default_quota=default)
         return self._sched
 
     def step(self, now: float = float("inf")) -> List[int]:
@@ -987,6 +1182,66 @@ class Engine:
         if self._sched is None:
             return {}
         return self._sched.pop_finished()
+
+    def stream(self, now: float = float("inf")):
+        """Tick the scheduler and yield a ``TokenEvent`` per emitted
+        token, in emission order -- the streaming face of the continuous
+        path, making time-to-first-token observable per request (each
+        request's first event carries its ``ttft``).
+
+        Runs until every request with ``arrival <= now`` completes (the
+        same stop condition as ``drain``), but hands tokens back as each
+        tick lands instead of at the end.  Purely additive bookkeeping:
+        ``drain()``/``pop_finished()`` semantics are untouched, and
+        finished requests stay collectible afterwards.  More requests
+        may be submitted between events; the generator picks them up on
+        its next tick."""
+        if self._sched is None:
+            return
+        sched = self._sched
+        cursors: Dict[int, int] = {}
+        while sched.pending:
+            if not sched.n_active and not sched.preempted:
+                nxt = sched.next_arrival()
+                if nxt is not None and nxt > now:
+                    break                       # future arrivals only
+            sched.tick(now)
+            events: List[TokenEvent] = []
+            for rid, req in sched.requests.items():
+                seen = cursors.get(rid, 0)
+                if len(req.tokens) > seen:
+                    events.extend(
+                        TokenEvent(rid=rid, token=int(req.tokens[i]),
+                                   index=i, tenant=req.tenant,
+                                   done=(req.done
+                                         and i == len(req.tokens) - 1),
+                                   ttft=req.ttft if i == 0 else None)
+                        for i in range(seen, len(req.tokens)))
+                    cursors[rid] = len(req.tokens)
+            # buffered per tick: yielding mid-dict-walk would break if
+            # the consumer submits or pops between events
+            yield from events
+
+    def stats(self) -> Dict[str, Any]:
+        """Control-plane telemetry snapshot: scheduler counters
+        (preemptions, per-tenant resident usage) plus, for paged
+        engines, the allocator's frame-state counters
+        (``PageAllocator.stats()``) and executor swap counts.  The bench
+        and the fuzzer invariants read this instead of poking
+        internals."""
+        out: Dict[str, Any] = {"preemptions": 0, "tenants": {}}
+        if self._sched is None:
+            return out
+        sched = self._sched
+        out["preemptions"] = sched.preemptions
+        out["tenants"] = {t: {"slots": u[0], "pages": u[1]}
+                          for t, u in sched.tenant_usage.items()}
+        ex = sched.ex
+        if getattr(ex, "paged", False):
+            out["pages"] = ex.allocator.stats()
+            out["swap_outs"] = ex.swap_outs
+            out["swap_ins"] = ex.swap_ins
+        return out
 
     # ------------------------------------------------------------------
     # generate

@@ -38,6 +38,23 @@ frames into the new page table (refcount + 1) and set
 ``req.prefill_skip``: the scheduler then skips those tokens' prefill
 windows entirely and streams only the unshared suffix.
 
+Multi-tenant control plane: admission order is owned by a pluggable
+``AdmissionPolicy``.  The default (``FifoAdmission``) reproduces the
+historical head-of-line FIFO pop bit-compatibly; ``PriorityAdmission``
+adds priority classes, weighted fair-share across tenants (min virtual
+service time wins within the top effective-priority band), anti-
+starvation aging (``skipped // aging`` effective-priority bumps), and
+optional preemption: a RUNNING victim of lower effective priority is
+swapped out (``Executor.preempt`` -- its private KV pages move to a
+host pool, refcount-shared frames stay resident), parks in the
+PREEMPTED phase, and later re-enters RUNNING directly through
+``Executor.resume`` -- no re-prefill, lengths/positions preserved,
+O(pages) cost.  Each preemption grants the victim ``aging`` skip
+credits, so repeated victims climb out of eligibility and progress is
+guaranteed.  Per-tenant ``TenantQuota``s bound resident seats and
+reserved pages at admission and outstanding requests at submit
+(``QuotaExceeded`` backpressure).
+
 Token accounting matches the one-shot engine paths exactly: the first
 token of a request is sampled from its prefill logits (it counts toward
 ``max_new``), the remaining ``max_new - 1`` come from decode steps, and an
@@ -48,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import OrderedDict, deque
 from typing import Any, Dict, List, Optional, Protocol, Tuple
 
@@ -55,6 +73,13 @@ import numpy as np
 
 QUEUED, PREFILLING, RUNNING, DONE = ("queued", "prefilling", "running",
                                     "done")
+PREEMPTED = "preempted"
+
+
+class QuotaExceeded(RuntimeError):
+    """Submit-time backpressure: the tenant's outstanding-request quota
+    is full.  Callers should retry after draining results (or shed
+    load); the request was NOT enqueued."""
 
 
 def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
@@ -81,10 +106,20 @@ class PageAllocator:
     owner (a second page table mapping it, or the prefix index caching
     it), and ``free`` releases one owner -- a frame returns to the free
     list only when its last owner lets go, so evicting a sharer can
-    never free frames a live sequence still maps.  Conservation
-    invariant (property-tested in tests/test_serving_fuzz.py)::
+    never free frames a live sequence still maps.
 
-        n_free + n_live == n_pages      (every frame free or refcounted)
+    Preemption adds a third frame state: ``swap_out`` VACATES a
+    refcount-1 frame whose data just moved to a host-memory pool
+    (live -> swapped).  Swapped frames are reusable capacity -- ``alloc``
+    draws from the free list first, then from the swapped pool (the
+    device copy is dead; the owner's data lives on host until its
+    resume scatters it into freshly allocated frames).  Refcount-shared
+    frames are never swapped: ``swap_out`` refuses them, and the
+    preempted owner keeps its refcount so the sharers' release can
+    never free data the victim still needs.  Conservation invariant
+    (property-tested in tests/test_serving_fuzz.py)::
+
+        free + live + swapped == n_pages     (every frame in one state)
 
     Pure host bookkeeping, no JAX."""
 
@@ -95,6 +130,9 @@ class PageAllocator:
         # LIFO free list: recently freed (still-warm) frames reused first
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        # frames vacated by preemption (their data moved to host); drawn
+        # by alloc after the free list runs dry
+        self._swapped: List[int] = []
 
     @property
     def n_free(self) -> int:
@@ -105,20 +143,56 @@ class PageAllocator:
         """Frames with refcount >= 1 (mapped by a table or index-cached)."""
         return len(self._ref)
 
+    @property
+    def n_swapped(self) -> int:
+        """Frames vacated by preemption, not yet reallocated."""
+        return len(self._swapped)
+
+    @property
+    def n_pinned(self) -> int:
+        """Frames with refcount >= 2 (shared across tables / the index)."""
+        return sum(1 for r in self._ref.values() if r >= 2)
+
     def refcount(self, frame: int) -> int:
         return self._ref.get(frame, 0)
 
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of the pool's frame-state counters -- the single
+        observable tests and bench reporting should read instead of
+        poking internals.  ``free + live + swapped == n_pages`` always;
+        ``pinned`` counts the subset of ``live`` at refcount >= 2."""
+        return {"n_pages": self.n_pages, "free": self.n_free,
+                "live": self.n_live, "pinned": self.n_pinned,
+                "swapped": self.n_swapped}
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` free frames at refcount 1, or None (and no change)
-        if unavailable."""
+        """Pop ``n`` frames at refcount 1 -- free list first, then
+        preemption-vacated frames -- or None (and no change) if
+        unavailable."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
-        if n > len(self._free):
+        if n > len(self._free) + len(self._swapped):
             return None
-        frames = [self._free.pop() for _ in range(n)]
+        frames = [(self._free.pop() if self._free else self._swapped.pop())
+                  for _ in range(n)]
         for f in frames:
             self._ref[f] = 1
         return frames
+
+    def swap_out(self, frames: List[int]) -> None:
+        """Vacate refcount-1 frames whose data just moved to host
+        (live -> swapped).  Shared frames (refcount >= 2) must stay
+        resident -- the preempting caller splits them out and keeps its
+        refcount on them; passing one here is a bug and raises."""
+        for f in frames:
+            if self._ref.get(f, 0) != 1:
+                raise ValueError(
+                    f"swap_out of page {f} at refcount "
+                    f"{self._ref.get(f, 0)} (only private refcount-1 "
+                    f"frames may be swapped)")
+        for f in frames:
+            del self._ref[f]
+            self._swapped.append(f)
 
     def share(self, frames: List[int]) -> None:
         """Add one owner to each (live) frame -- the copy-on-write map:
@@ -231,6 +305,29 @@ class PrefixIndex:
         return self.reclaim(self.alloc.n_pages)
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant resource bounds.  ``None`` axes are unlimited.
+
+    ``slots``/``pages`` bound RESIDENT usage (seats held and KV pages
+    reserved by PREFILLING/RUNNING requests) -- enforced at admission,
+    so an at-quota tenant's requests simply wait while other tenants'
+    admit past them.  ``queue`` bounds OUTSTANDING requests (queued +
+    resident + preempted) -- enforced at submit, where overflow raises
+    ``QuotaExceeded`` (backpressure, not silent queuing)."""
+
+    slots: Optional[int] = None
+    pages: Optional[int] = None
+    queue: Optional[int] = None
+
+    def __post_init__(self):
+        for name in ("slots", "pages", "queue"):
+            v = getattr(self, name)
+            if v is not None and int(v) < 1:
+                raise ValueError(
+                    f"TenantQuota.{name} must be >= 1 or None, got {v}")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -242,6 +339,17 @@ class Request:
     status: str = QUEUED
     slot: Optional[int] = None
     prefilled: int = 0         # prompt tokens already appended to the cache
+    tenant: str = "default"
+    priority: int = 0          # higher = more urgent (policy-interpreted)
+    skipped: int = 0           # admissions that passed this request over
+    preempt_count: int = 0     # times this request was swapped out
+    pages_reserved: int = 0    # quota accounting while resident (paged)
+    # wall-clock stamps (time.perf_counter) for TTFT reporting: submit
+    # time, first emitted token, completion.  TTFT = first_token_wall -
+    # submit_wall; realtime benches subtract their own arrival offsets.
+    submit_wall: float = 0.0
+    first_token_wall: Optional[float] = None
+    done_wall: Optional[float] = None
     # prompt tokens already RESIDENT at admission (shared-prefix pages the
     # executor's reserve() mapped from the prefix index): prefill starts
     # at this offset instead of 0, skipping the shared windows entirely
@@ -261,11 +369,169 @@ class Request:
     def remaining(self) -> int:
         return self.max_new - len(self.tokens)
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Seconds from submit to first emitted token (None until then)."""
+        if self.first_token_wall is None:
+            return None
+        return self.first_token_wall - self.submit_wall
+
     def _should_finish(self) -> bool:
         if len(self.tokens) >= self.max_new:
             return True
         return (self.eos_id >= 0 and bool(self.tokens)
                 and self.tokens[-1] == self.eos_id)
+
+
+class AdmissionPolicy:
+    """Pluggable admission order (the object replacing the scheduler's
+    historical hardcoded FIFO pop).  This base class IS the default
+    FIFO policy: strictly head-of-line -- the oldest queued request
+    admits only when it has arrived, a seat is free, its quota allows,
+    and its page reservation succeeds; otherwise admission stops for
+    the tick (later arrivals never jump the queue).  Bit-compatible
+    with the pre-policy scheduler, which existing property tests and
+    the differential fuzzer assert.
+
+    Subclass hooks:
+
+    ``select(sched, now, excluded)``  next request to try seating (None
+        ends the admission loop for head-of-line policies, or just
+        skips the excluded set otherwise);
+    ``victim(sched, cand)``           RUNNING request to preempt so that
+        ``cand`` can seat (None: never preempt);
+    ``effective(req)``                the request's effective priority
+        (aging-adjusted) -- used for victim eligibility;
+    ``on_admit(sched, req)`` / ``on_preempt(req)``  bookkeeping taps.
+    """
+
+    name = "fifo"
+    levels = 1                 # valid priorities: [0, levels)
+    head_of_line = True        # a blocked candidate stops admission
+    preempt = False
+
+    def select(self, sched: "Scheduler", now: float,
+               excluded: set) -> Optional[Request]:
+        if not sched.queue:
+            return None
+        req = sched.requests[sched.queue[0]]
+        if req.arrival > now or req.rid in excluded:
+            return None
+        if not sched._quota_ok(req):
+            return None        # head-of-line: quota backpressure waits
+        return req
+
+    def effective(self, req: Request) -> int:
+        return req.priority
+
+    def victim(self, sched: "Scheduler",
+               cand: Request) -> Optional[Request]:
+        return None
+
+    def on_admit(self, sched: "Scheduler", req: Request) -> None:
+        pass
+
+    def on_preempt(self, req: Request) -> None:
+        pass
+
+
+FifoAdmission = AdmissionPolicy
+
+
+class PriorityAdmission(AdmissionPolicy):
+    """Priority classes + weighted fair share + aging + preemption.
+
+    Selection: among all waiting requests (queued AND preempted) that
+    have arrived and fit their tenant's quota, take the highest
+    EFFECTIVE priority band (``priority + skipped // aging``, capped at
+    ``levels - 1``); within the band, the tenant with the least virtual
+    service time wins (weighted fair share: ``vtime[tenant] +=
+    (prompt_len + max_new) / weight`` on admit, with an idle-tenant
+    catch-up floor so a returning tenant can't burst on stale credit);
+    ties break on rid (submit order).  Not head-of-line: a blocked
+    candidate is skipped and the next one tried, so one tenant's page
+    pressure never stalls everyone.
+
+    Aging is the no-starvation mechanism: every admission that passes a
+    waiting request over bumps its ``skipped`` counter, and each
+    ``aging`` skips raise its effective priority one level -- any
+    request reaches the top band after a bounded wait, no matter how
+    hot the high-priority arrival stream is (fuzzer-enforced).
+
+    Preemption (``preempt=True``, executors exposing
+    ``preempt``/``resume``): when a candidate finds no free seat (or
+    not enough pages), a RUNNING victim with effective priority
+    STRICTLY below the candidate's base priority is swapped out --
+    lowest effective band first, newest rid within it.  A preempted
+    victim is granted ``aging`` skip credits, so each round-trip
+    raises its effective priority until it is no longer preemptable:
+    livelock-free by construction."""
+
+    name = "priority"
+    head_of_line = False
+
+    def __init__(self, levels: int = 2,
+                 weights: Optional[Dict[str, float]] = None,
+                 aging: int = 16, preempt: bool = False):
+        if int(levels) < 1:
+            raise ValueError(f"levels must be >= 1, got {levels}")
+        if int(aging) < 0:
+            raise ValueError(f"aging must be >= 0 (0 disables), "
+                             f"got {aging}")
+        self.levels = int(levels)
+        self.weights = {t: float(w) for t, w in dict(weights or {}).items()}
+        for t, w in self.weights.items():
+            if w <= 0:
+                raise ValueError(f"weight for tenant {t!r} must be > 0, "
+                                 f"got {w}")
+        self.aging = int(aging)
+        self.preempt = bool(preempt)
+        self.vtime: Dict[str, float] = {}
+
+    def weight(self, tenant: str) -> float:
+        return self.weights.get(tenant, 1.0)
+
+    def effective(self, req: Request) -> int:
+        eff = req.priority
+        if self.aging > 0:
+            eff += req.skipped // self.aging
+        return min(self.levels - 1, eff)
+
+    def select(self, sched: "Scheduler", now: float,
+               excluded: set) -> Optional[Request]:
+        cands = [r for r in sched._waiting(now)
+                 if r.rid not in excluded and sched._quota_ok(r)]
+        if not cands:
+            return None
+        top = max(self.effective(r) for r in cands)
+        band = [r for r in cands if self.effective(r) == top]
+        return min(band, key=lambda r: (self.vtime.get(r.tenant, 0.0),
+                                        r.rid))
+
+    def victim(self, sched: "Scheduler",
+               cand: Request) -> Optional[Request]:
+        if not self.preempt:
+            return None
+        elig = [sched.requests[rid] for rid in sched.slots
+                if rid is not None
+                and sched.requests[rid].status == RUNNING
+                and self.effective(sched.requests[rid]) < cand.priority]
+        if not elig:
+            return None
+        # lowest effective band loses first; newest admission within it
+        return min(elig, key=lambda r: (self.effective(r), -r.rid))
+
+    def on_admit(self, sched: "Scheduler", req: Request) -> None:
+        t = req.tenant
+        floor = min((self.vtime.get(r.tenant, 0.0)
+                     for r in sched._waiting(float("inf"))), default=0.0)
+        cost = float(req.prompt_len + req.max_new)
+        self.vtime[t] = max(self.vtime.get(t, 0.0), floor) \
+            + cost / self.weight(t)
+
+    def on_preempt(self, req: Request) -> None:
+        if self.aging > 0:
+            req.skipped += self.aging    # one effective level per trip
 
 
 class Executor(Protocol):
@@ -291,13 +557,38 @@ class Executor(Protocol):
     # executor treats the first window as ``start == prefill_skip``.
     # def reserve(self, slot: int, req: Request) -> bool: ...
 
+    # Optional (preemption-capable executors): swap a RUNNING request's
+    # private state out of ``slot`` to host memory (keyed by req.rid) and
+    # later restore it into a possibly different slot.  ``resume``
+    # returns False while backing pages are unavailable (the request
+    # stays PREEMPTED and retries).  A resumed request re-enters RUNNING
+    # directly -- no PREFILLING pass; lengths, positions, PRNG streams
+    # and emitted tokens are all preserved exactly.
+    # def preempt(self, slot: int, req: Request) -> None: ...
+    # def resume(self, slot: int, req: Request) -> bool: ...
+
 
 class Scheduler:
-    def __init__(self, executor: Executor):
+    def __init__(self, executor: Executor,
+                 policy: Optional[AdmissionPolicy] = None,
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None):
         self.ex = executor
-        self.queue: deque[int] = deque()          # rids, FIFO
+        # admission order is policy-owned; the default reproduces the
+        # historical head-of-line FIFO pop exactly
+        self.policy = policy if policy is not None else FifoAdmission()
+        self.quotas: Dict[str, TenantQuota] = dict(quotas or {})
+        self.default_quota = default_quota
+        self.queue: deque[int] = deque()          # rids, submit order
+        self.preempted: List[int] = []            # rids awaiting resume
         self.requests: Dict[int, Request] = {}
         self.slots: List[Optional[int]] = [None] * executor.capacity
+        self.preemptions = 0                      # lifetime swap-outs
+        # resident usage per tenant: tenant -> [seats, reserved pages]
+        self.tenant_usage: Dict[str, List[int]] = {}
+        # outstanding (not DONE) requests per tenant, for submit-time
+        # queue-quota backpressure
+        self.tenant_outstanding: Dict[str, int] = {}
         self._ids = itertools.count()
         # busy-slot count per executor step, for occupancy reporting
         # (bounded so a long-running server doesn't grow host memory
@@ -314,16 +605,32 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def submit(self, prompt: Any, prompt_len: int, max_new: int,
-               eos_id: Optional[int] = None, arrival: float = 0.0) -> int:
+               eos_id: Optional[int] = None, arrival: float = 0.0,
+               tenant: str = "default", priority: int = 0) -> int:
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if not 0 <= int(priority) < self.policy.levels:
+            raise ValueError(
+                f"priority {priority} outside [0, {self.policy.levels}) "
+                f"(the {self.policy.name!r} policy's level count)")
+        q = self._quota(tenant)
+        if q is not None and q.queue is not None:
+            outstanding = self.tenant_outstanding.get(tenant, 0)
+            if outstanding >= q.queue:
+                raise QuotaExceeded(
+                    f"tenant {tenant!r} has {outstanding} outstanding "
+                    f"requests (queue quota {q.queue}); drain results "
+                    f"before submitting more")
         rid = next(self._ids)
         self.requests[rid] = Request(
             rid=rid, prompt=prompt, prompt_len=int(prompt_len),
             max_new=int(max_new),
             eos_id=-1 if eos_id is None else int(eos_id),
-            arrival=float(arrival))
+            arrival=float(arrival), tenant=str(tenant),
+            priority=int(priority), submit_wall=time.perf_counter())
         self.queue.append(rid)
+        self.tenant_outstanding[tenant] = \
+            self.tenant_outstanding.get(tenant, 0) + 1
         return rid
 
     # ------------------------------------------------------------------
@@ -332,7 +639,8 @@ class Scheduler:
 
     @property
     def pending(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return (bool(self.queue) or bool(self.preempted)
+                or any(s is not None for s in self.slots))
 
     @property
     def n_active(self) -> int:
@@ -372,7 +680,7 @@ class Scheduler:
         request with arrival <= ``now``; default: everything)."""
         finished: List[int] = []
         while self.pending:
-            if not self.n_active:
+            if not self.n_active and not self.preempted:
                 nxt = self.next_arrival()
                 if nxt is not None and nxt > now:
                     break                      # future arrivals only
@@ -386,36 +694,153 @@ class Scheduler:
     def _finish(self, req: Request, finished: List[int]) -> None:
         req.status = DONE
         req.prompt = None      # the prompt arrays are dead weight now
+        req.done_wall = time.perf_counter()
         if req.slot is not None:
             self.ex.release(req.slot)
             self.slots[req.slot] = None
             req.slot = None
+            self._usage_sub(req)
+        t = req.tenant
+        self.tenant_outstanding[t] = max(
+            0, self.tenant_outstanding.get(t, 0) - 1)
         finished.append(req.rid)
 
-    def _admit(self, now: float) -> None:
-        """FIFO, head-of-line admission: a request claims a slot only when
-        it has arrived AND a slot is free; later arrivals never jump the
-        queue, so per-request token order and cross-request admission
-        order are both preserved.  Admission only assigns the slot
-        (PREFILLING); the prompt streams in via ``_prefill_tick`` --
-        same-width heads admitted together land in one fused append."""
-        while self.queue:
-            req = self.requests[self.queue[0]]
-            if req.arrival > now:
-                break
-            slot = next((i for i, r in enumerate(self.slots) if r is None),
-                        None)
-            if slot is None:
-                break
+    # -- tenant quota bookkeeping --------------------------------------
+
+    def _quota(self, tenant: str) -> Optional[TenantQuota]:
+        q = self.quotas.get(tenant)
+        return self.default_quota if q is None else q
+
+    def _pages_for(self, req: Request) -> int:
+        if not getattr(self.ex, "paged", False):
+            return 0
+        return pages_needed(req.prompt_len, req.max_new, self.ex.page_size)
+
+    def _quota_ok(self, req: Request) -> bool:
+        """Would seating ``req`` keep its tenant inside quota?"""
+        q = self._quota(req.tenant)
+        if q is None:
+            return True
+        seats, pages = self.tenant_usage.get(req.tenant, (0, 0))
+        if q.slots is not None and seats + 1 > q.slots:
+            return False
+        if q.pages is not None and pages + self._pages_for(req) > q.pages:
+            return False
+        return True
+
+    def _usage_add(self, req: Request) -> None:
+        req.pages_reserved = self._pages_for(req)
+        u = self.tenant_usage.setdefault(req.tenant, [0, 0])
+        u[0] += 1
+        u[1] += req.pages_reserved
+
+    def _usage_sub(self, req: Request) -> None:
+        u = self.tenant_usage.setdefault(req.tenant, [0, 0])
+        u[0] -= 1
+        u[1] -= req.pages_reserved
+        req.pages_reserved = 0
+
+    # -- admission -----------------------------------------------------
+
+    def _waiting(self, now: float) -> List[Request]:
+        """Arrived requests not currently seated: preempted (awaiting
+        resume) first, then queued, both in submit order."""
+        out = [self.requests[rid] for rid in self.preempted]
+        out += [self.requests[rid] for rid in self.queue]
+        return [r for r in out if r.arrival <= now]
+
+    def _pick_victim(self, cand: Request) -> Optional[Request]:
+        if not hasattr(self.ex, "preempt"):
+            return None
+        return self.policy.victim(self, cand)
+
+    def _preempt(self, victim: Request) -> None:
+        """Swap a RUNNING victim out of its slot: the executor moves its
+        private state to host memory (keyed by rid); the scheduler parks
+        it PREEMPTED.  Its emitted tokens, lengths and PRNG position all
+        survive -- resume continues mid-decode, no re-prefill."""
+        slot = victim.slot
+        self.ex.preempt(slot, victim)
+        self.slots[slot] = None
+        victim.slot = None
+        victim.status = PREEMPTED
+        self.preempted.append(victim.rid)
+        self._usage_sub(victim)
+        self.preemptions += 1
+        victim.preempt_count += 1
+        self.policy.on_preempt(victim)
+
+    def _seat(self, slot: int, req: Request) -> bool:
+        """Try to place ``req`` in ``slot``: resume for PREEMPTED
+        requests (executor restores swapped state -> RUNNING directly),
+        reserve + PREFILLING for queued ones.  False: backing pages
+        unavailable, nothing changed."""
+        if req.status == PREEMPTED:
+            if not self.ex.resume(slot, req):
+                return False
+            self.preempted.remove(req.rid)
+            req.slot, req.status = slot, RUNNING
+        else:
             reserve = getattr(self.ex, "reserve", None)
             if reserve is not None and not reserve(slot, req):
-                break          # backing pages exhausted: head-of-line waits
-            self.queue.popleft()
+                return False
+            self.queue.remove(req.rid)
             # reserve() may have mapped shared-prefix pages: those prompt
             # tokens are already resident, so prefill starts past them
             req.slot, req.status = slot, PREFILLING
             req.prefilled = req.prefill_skip
-            self.slots[slot] = req.rid
+        self.slots[slot] = req.rid
+        self._usage_add(req)
+        return True
+
+    def _admit(self, now: float) -> None:
+        """Policy-driven admission loop.  Under the default FIFO policy
+        this is bit-compatible with the historical head-of-line pop: the
+        oldest queued request admits only when it has arrived, a seat is
+        free and its reserve succeeds; any block stops admission for the
+        tick.  Non-head-of-line policies (PriorityAdmission) instead
+        skip a blocked candidate and try the next, and may create the
+        free seat by preempting a lower-priority RUNNING victim --
+        either when no seat is free, or when the seat exists but the
+        page pool can't cover the candidate (each preemption frees the
+        victim's private frames, so the reserve is retried after every
+        swap-out).  Admission only assigns the seat (PREFILLING /
+        resumed RUNNING); prompts stream in via ``_prefill_tick`` --
+        same-width seats admitted together land in one fused append."""
+        excluded: set = set()
+        while True:
+            cand = self.policy.select(self, now, excluded)
+            if cand is None:
+                return
+            slot = next((i for i, r in enumerate(self.slots) if r is None),
+                        None)
+            if slot is None:
+                victim = self._pick_victim(cand)
+                if victim is None:
+                    if self.policy.head_of_line:
+                        return
+                    excluded.add(cand.rid)
+                    continue
+                slot = victim.slot
+                self._preempt(victim)
+            if not self._seat(slot, cand):
+                seated = False
+                while True:          # free pages by evicting more victims
+                    victim = self._pick_victim(cand)
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                    if self._seat(slot, cand):
+                        seated = True
+                        break
+                if not seated:
+                    if self.policy.head_of_line:
+                        return
+                    excluded.add(cand.rid)
+                    continue
+            for r in self._waiting(now):     # aging: passed-over waiters
+                r.skipped += 1
+            self.policy.on_admit(self, cand)
 
     def _prefill_tick(self, finished: List[int]) -> int:
         """Advance every PREFILLING slot by one prompt window.  A request
@@ -460,6 +885,8 @@ class Scheduler:
                     f"{req.prompt_len} prompt tokens appended")
             req.status = RUNNING
             req.tokens.append(int(tok0))
+            if req.first_token_wall is None:   # TTFT: first emitted token
+                req.first_token_wall = time.perf_counter()
             if req._should_finish():           # max_new == 1 or instant EOS
                 self._finish(req, finished)
                 pf_busy += 1                   # worked here, never decodes

@@ -43,6 +43,15 @@ class EngineKnobs:
       packed weight leaf (None: the kernel's 128 default).  Numerics are
       bit-identical across block sizes; on the CPU/XLA lowering the value
       is carried but inert.
+    priority_levels: scheduler priority classes (1: the FIFO default --
+      the engine keeps the plain FIFO admission policy; >= 2 switches the
+      scheduler to priority + weighted-fair-share admission).
+    preempt: allow the scheduler to swap low-priority RUNNING requests'
+      KV pages out to host memory when a higher-priority request is
+      blocked (requires the paged cache; FIFO engines never preempt).
+    tenant_slots / tenant_pages: default per-tenant resident quotas
+      (slots seated / pages reserved); None = unlimited.  Per-tenant
+      overrides ride ``Engine(tenants=...)``.
     """
 
     chunk: int = 8
@@ -53,6 +62,10 @@ class EngineKnobs:
     speculative: bool = False
     spec_k: int = 4
     block_m: Optional[int] = None
+    priority_levels: int = 1
+    preempt: bool = False
+    tenant_slots: Optional[int] = None
+    tenant_pages: Optional[int] = None
 
     def __post_init__(self):
         if int(self.chunk) < 1:
@@ -73,6 +86,21 @@ class EngineKnobs:
             raise ValueError(
                 f"block_m must be a multiple of 8 (the f32 sublane tile), "
                 f"got {self.block_m}")
+        if int(self.priority_levels) < 1:
+            raise ValueError(
+                f"priority_levels must be >= 1, got {self.priority_levels}")
+        if self.preempt and not self.paged:
+            raise ValueError(
+                "preempt=True requires paged=True (preemption swaps "
+                "page-table frames; contiguous rows have none)")
+        if self.tenant_slots is not None and int(self.tenant_slots) < 1:
+            raise ValueError(
+                f"tenant_slots must be >= 1 or None, got "
+                f"{self.tenant_slots}")
+        if self.tenant_pages is not None and int(self.tenant_pages) < 1:
+            raise ValueError(
+                f"tenant_pages must be >= 1 or None, got "
+                f"{self.tenant_pages}")
 
     @classmethod
     def resolve(cls, tuned: Optional["TunedConfig"] = None,
@@ -96,22 +124,42 @@ class EngineKnobs:
         """Context validation against the engine geometry.
 
         strict=True (TunedConfig artifacts, autotuner candidates): raise on
-        ``admit_k > capacity`` or a ``page_size`` that does not divide the
-        bucket-rounded ``max_seq``.  strict=False mirrors the historical
-        kwarg behavior -- ``admit_k`` clamps to capacity and the page check
-        is left to the paged executor."""
+        ``admit_k > capacity``, a ``page_size`` that does not divide the
+        bucket-rounded ``max_seq``, a ``tenant_slots`` quota no engine seat
+        count could satisfy, or a ``tenant_pages`` quota exceeding the
+        default page pool.  strict=False mirrors the historical kwarg
+        behavior -- ``admit_k`` clamps to capacity, quotas clamp to the
+        geometry, and the page check is left to the paged executor."""
         out = self
         if capacity is not None and out.admit_k > int(capacity):
             if strict:
                 raise ValueError(
                     f"admit_k={out.admit_k} exceeds capacity={capacity}")
             out = dataclasses.replace(out, admit_k=int(capacity))
+        if (capacity is not None and out.tenant_slots is not None
+                and out.tenant_slots > int(capacity)):
+            if strict:
+                raise ValueError(
+                    f"tenant_slots={out.tenant_slots} exceeds "
+                    f"capacity={capacity}")
+            out = dataclasses.replace(out, tenant_slots=int(capacity))
         if out.paged and max_seq is not None:
             rounded = round_up(int(max_seq), max(int(prefill_bucket), 1))
             if strict and rounded % out.page_size:
                 raise ValueError(
                     f"page_size={out.page_size} does not divide the "
                     f"bucket-rounded max_seq={rounded}")
+            if (out.tenant_pages is not None and capacity is not None
+                    and rounded % out.page_size == 0):
+                # the default pool (Engine(cache_pages=None)): capacity
+                # contiguous rows' worth of frames
+                pool = int(capacity) * (rounded // out.page_size)
+                if out.tenant_pages > pool:
+                    if strict:
+                        raise ValueError(
+                            f"tenant_pages={out.tenant_pages} exceeds the "
+                            f"default page pool ({pool} frames)")
+                    out = dataclasses.replace(out, tenant_pages=pool)
         return out
 
     def to_dict(self) -> Dict[str, Any]:

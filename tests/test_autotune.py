@@ -54,10 +54,18 @@ class TestEngineKnobs:
         dict(chunk=0), dict(admit_k=0), dict(page_size=0),
         dict(prefill_chunk_width=0), dict(spec_k=-1),
         dict(block_m=12), dict(block_m=4),
+        dict(priority_levels=0),               # at least the FIFO level
+        dict(preempt=True),                    # preemption needs paging
+        dict(tenant_slots=0), dict(tenant_pages=0),
     ])
     def test_validation_raises(self, bad):
         with pytest.raises(ValueError):
             EngineKnobs(**bad)
+
+    def test_multitenant_defaults_are_fifo(self):
+        k = EngineKnobs()
+        assert k.priority_levels == 1 and not k.preempt
+        assert k.tenant_slots is None and k.tenant_pages is None
 
     def test_resolve_precedence(self):
         tuned = TunedConfig(knobs=EngineKnobs(chunk=16, admit_k=2))
@@ -79,6 +87,33 @@ class TestEngineKnobs:
         bad = EngineKnobs(paged=True, page_size=24)
         with pytest.raises(ValueError, match="page_size"):
             bad.validated(capacity=4, max_seq=64, prefill_bucket=16)
+
+    def test_validated_tenant_quotas(self):
+        # tenant_slots no seat count could satisfy: strict raises, the
+        # kwarg-compat path clamps to capacity
+        k = EngineKnobs(admit_k=2, tenant_slots=8)
+        with pytest.raises(ValueError, match="tenant_slots"):
+            k.validated(capacity=4, max_seq=64, prefill_bucket=16)
+        assert k.validated(4, 64, 16, strict=False).tenant_slots == 4
+        # tenant_pages beyond the default page pool (capacity * max_seq /
+        # page_size = 4 * 64 / 16 = 16 frames): strict raises, else clamp
+        k = EngineKnobs(admit_k=2, paged=True, tenant_pages=99)
+        with pytest.raises(ValueError, match="tenant_pages"):
+            k.validated(capacity=4, max_seq=64, prefill_bucket=16)
+        assert k.validated(4, 64, 16, strict=False).tenant_pages == 16
+        # in-bounds quotas survive untouched either way
+        ok = EngineKnobs(admit_k=2, paged=True, tenant_slots=2,
+                         tenant_pages=8)
+        assert ok.validated(4, 64, 16) == ok
+
+    def test_resolve_precedence_multitenant(self):
+        tuned = TunedConfig(knobs=EngineKnobs(
+            paged=True, priority_levels=3, preempt=True, tenant_slots=2))
+        k = EngineKnobs.resolve(tuned, priority_levels=2)
+        assert k.priority_levels == 2          # kwarg beats the artifact
+        assert k.preempt and k.tenant_slots == 2
+        assert EngineKnobs.resolve(tuned).priority_levels == 3
+        assert EngineKnobs.resolve(None).priority_levels == 1
 
     def test_engine_kwargs_still_win(self):
         cfg, packed = packed_model()

@@ -1,0 +1,523 @@
+"""Multi-tenant serving control plane: policy properties, quotas,
+preemption, and streaming TTFT.
+
+Host-side halves run on the scripted executor from test_scheduler (no
+JAX in the loop): FIFO-default equivalence, priority ordering, weighted
+fair share, aging/no-starvation, per-tenant quota enforcement with
+``QuotaExceeded`` backpressure at submit, and preempt/resume cursor
+continuity.  Device-side halves run the real engine: the preempt/resume
+token-parity matrix across {paged, paged+share_prefix, paged+spec}
+modes against an un-preempted contiguous FIFO oracle, the
+``Engine.stream()`` TokenEvent/TTFT contract, ``Engine.stats()``, and
+the ``PageAllocator`` swap-state unit tests.
+
+Run via ``make test-multitenant`` or as part of the serving CI tier.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_scheduler import ScriptedExecutor, stream
+
+import repro.configs as configs
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine, TokenEvent
+from repro.serving.scheduler import (PREEMPTED, RUNNING, FifoAdmission,
+                                     PageAllocator, PriorityAdmission,
+                                     QuotaExceeded, Scheduler, TenantQuota)
+from repro.serving.tuning import EngineKnobs
+
+PAGE = 8
+ENGINE_KW = dict(prefill_bucket=4, prefill_chunk_width=8, capacity=2,
+                 max_seq=32, chunk=3)
+
+
+def small_model(seed=0):
+    cfg = dataclasses.replace(configs.get_smoke_config("granite-8b"),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def granite():
+    return small_model()
+
+
+class PreemptableScripted(ScriptedExecutor):
+    """Scripted executor with the optional preempt/resume contract: a
+    victim's cursor parks in a host dict keyed by rid and resumes into
+    whatever slot the scheduler hands back -- mirroring what the device
+    executor does with KV pages, minus the pages."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._swap = {}
+        self.resume_ok = True          # tests flip this to block resume
+
+    def preempt(self, slot, req):
+        rid, cursor = self.slots[slot]
+        assert rid == req.rid, "preempt of the wrong seat"
+        self._swap[req.rid] = cursor
+        self.slots[slot] = None
+
+    def resume(self, slot, req):
+        if not self.resume_ok:
+            return False
+        assert self.slots[slot] is None, "resume into an occupied slot"
+        self.slots[slot] = [req.rid, self._swap.pop(req.rid)]
+        self._note_occupancy()
+        return True
+
+
+# ---------------------------------------------------------------------------
+# policy properties (scripted executor)
+# ---------------------------------------------------------------------------
+
+class TestPolicyProperties:
+    def test_default_policy_is_fifo(self):
+        sched = Scheduler(ScriptedExecutor(1, 2, {}))
+        assert isinstance(sched.policy, FifoAdmission)
+        assert sched.policy.levels == 1 and sched.policy.head_of_line
+
+    def test_fifo_rejects_nonzero_priority(self):
+        sched = Scheduler(ScriptedExecutor(1, 2, {}))
+        with pytest.raises(ValueError, match="priority"):
+            sched.submit(None, prompt_len=1, max_new=2, priority=1)
+
+    def test_priority_orders_admission(self):
+        """capacity 1: a later high-priority submit admits before an
+        earlier low-priority one (the FIFO property tests assert the
+        opposite for the default policy -- both must hold)."""
+        streams = {0: stream(0, 2), 1: stream(1, 2)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=2))
+        sched.submit(None, prompt_len=1, max_new=2, priority=0)
+        sched.submit(None, prompt_len=1, max_new=2, priority=1)
+        sched.drain()
+        assert ex.prefill_order == [1, 0]
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
+
+    def test_weighted_fair_share(self):
+        """Tenant A at weight 3 vs B at weight 1, equal priorities and
+        request costs: admissions interleave ~3:1 by virtual service
+        time, not submit order."""
+        n_a, n_b = 6, 2
+        streams = {rid: stream(rid, 2) for rid in range(n_a + n_b)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(
+            levels=1, weights={"A": 3.0, "B": 1.0}))
+        for rid in range(n_a):
+            sched.submit(None, prompt_len=1, max_new=2, tenant="A")
+        for rid in range(n_b):
+            sched.submit(None, prompt_len=1, max_new=2, tenant="B")
+        sched.drain()
+        # vtime walk: A pays cost/3 per admit, B pays cost -- B's first
+        # admit lands after A's first (tie at 0 broken by rid), then B
+        # waits out three A admissions before its vtime is lowest again
+        assert ex.prefill_order == [0, 6, 1, 2, 3, 7, 4, 5]
+
+    def test_aging_prevents_starvation_scripted(self):
+        """A lone priority-0 request behind a deep priority-1 backlog:
+        aging bumps its effective priority so it admits after a bounded
+        number of pass-overs, not last."""
+        n_hi = 10
+        streams = {rid: stream(rid, 2) for rid in range(n_hi + 1)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=2, aging=2))
+        lo = sched.submit(None, prompt_len=1, max_new=2, priority=0)
+        for _ in range(n_hi):
+            sched.submit(None, prompt_len=1, max_new=2, priority=1,
+                         tenant="hot")
+        sched.drain()
+        # 2 skips lift it into the top band; fair share (vtime 0 vs the
+        # hot tenant's accumulation) admits it right after
+        assert ex.prefill_order.index(lo) <= 3
+        assert sched.requests[lo].tokens == streams[lo]
+
+    def test_aging_zero_disables(self):
+        """aging=0: effective priority never moves; the low-priority
+        request admits dead last."""
+        streams = {rid: stream(rid, 2) for rid in range(4)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=2, aging=0))
+        lo = sched.submit(None, prompt_len=1, max_new=2, priority=0)
+        for _ in range(3):
+            sched.submit(None, prompt_len=1, max_new=2, priority=1)
+        sched.drain()
+        assert ex.prefill_order[-1] == lo
+
+
+# ---------------------------------------------------------------------------
+# quotas + backpressure (scripted executor)
+# ---------------------------------------------------------------------------
+
+class TestQuotas:
+    def test_slot_quota_bounds_residency(self):
+        """slots=1 for a tenant submitting 3 requests into a capacity-3
+        scheduler: never more than one seated at once, all complete."""
+        streams = {rid: stream(rid, 4) for rid in range(3)}
+        ex = ScriptedExecutor(3, 1, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=1),
+                          quotas={"t": TenantQuota(slots=1)})
+        for rid in range(3):
+            sched.submit(None, prompt_len=1, max_new=4, tenant="t")
+        guard = 0
+        while sched.pending:
+            sched.tick()
+            seats, _ = sched.tenant_usage.get("t", (0, 0))
+            assert seats <= 1, "slot quota exceeded"
+            guard += 1
+            assert guard < 100
+        assert all(sched.requests[r].tokens == streams[r] for r in range(3))
+
+    def test_pages_quota_bounds_reservations(self):
+        """Page quotas account host-side even on a scripted executor
+        flagged paged: two 2-page requests under a 3-page quota
+        serialize."""
+        streams = {rid: stream(rid, 4) for rid in range(2)}
+        ex = ScriptedExecutor(2, 1, streams)
+        ex.paged, ex.page_size = True, 4       # host accounting only
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=1),
+                          quotas={"t": TenantQuota(pages=3)})
+        for rid in range(2):
+            sched.submit(None, prompt_len=4, max_new=4, tenant="t")
+        guard = 0
+        while sched.pending:
+            sched.tick()
+            _, pages = sched.tenant_usage.get("t", (0, 0))
+            assert pages <= 3, "page quota exceeded"
+            guard += 1
+            assert guard < 100
+        assert ex.max_occupied == 1            # quota serialized the seats
+
+    def test_queue_quota_backpressure_at_submit(self):
+        streams = {rid: stream(rid, 2) for rid in range(3)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, quotas={"t": TenantQuota(queue=2)})
+        sched.submit(None, prompt_len=1, max_new=2, tenant="t")
+        sched.submit(None, prompt_len=1, max_new=2, tenant="t")
+        with pytest.raises(QuotaExceeded, match="queue quota"):
+            sched.submit(None, prompt_len=1, max_new=2, tenant="t")
+        # other tenants are not backpressured by t's quota
+        sched.submit(None, prompt_len=1, max_new=2, tenant="u")
+        sched.drain()
+        # completions release outstanding budget: submit admits again
+        rid = sched.submit(None, prompt_len=1, max_new=2, tenant="t")
+        assert rid == 3
+
+    def test_default_quota_applies_to_unlisted_tenants(self):
+        streams = {rid: stream(rid, 2) for rid in range(2)}
+        ex = ScriptedExecutor(1, 4, streams)
+        sched = Scheduler(ex, default_quota=TenantQuota(queue=1))
+        sched.submit(None, prompt_len=1, max_new=2, tenant="anyone")
+        with pytest.raises(QuotaExceeded):
+            sched.submit(None, prompt_len=1, max_new=2, tenant="anyone")
+
+    def test_fifo_quota_blocked_head_waits(self):
+        """Under the default FIFO policy a quota-blocked queue head
+        stalls admission (head-of-line is the FIFO contract); under
+        PriorityAdmission the request behind it admits instead."""
+        for policy, expect_first in ((None, False),
+                                     (PriorityAdmission(levels=1), True)):
+            streams = {0: stream(0, 8), 1: stream(1, 2), 2: stream(2, 2)}
+            ex = ScriptedExecutor(2, 1, streams)
+            sched = Scheduler(ex, policy=policy,
+                              quotas={"t": TenantQuota(slots=1)})
+            # seat a long-running request to pin tenant t at its quota
+            blocker = sched.submit(None, prompt_len=1, max_new=8,
+                                   tenant="t")
+            sched.tick()
+            assert sched.requests[blocker].status == RUNNING
+            sched.submit(None, prompt_len=1, max_new=2, tenant="t")
+            other = sched.submit(None, prompt_len=1, max_new=2, tenant="u")
+            sched.tick()
+            got = [r for r in ex.prefill_order if r != blocker]
+            assert got == ([other] if expect_first else []), \
+                f"policy={policy}: head-of-line contract broken"
+            sched.drain()
+
+
+# ---------------------------------------------------------------------------
+# preemption lifecycle (scripted executor)
+# ---------------------------------------------------------------------------
+
+class TestScriptedPreemption:
+    def _contended(self, max_new_lo=8):
+        streams = {0: stream(0, max_new_lo), 1: stream(1, 2)}
+        ex = PreemptableScripted(1, 2, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=2, aging=4,
+                                                       preempt=True))
+        lo = sched.submit(None, prompt_len=1, max_new=max_new_lo,
+                          priority=0)
+        sched.tick()                           # seat the victim first
+        assert sched.requests[lo].status == RUNNING
+        hi = sched.submit(None, prompt_len=1, max_new=2, priority=1)
+        return sched, ex, lo, hi
+
+    def test_preempt_resume_cursor_continuity(self):
+        """The victim's token stream continues exactly where it stopped:
+        no token dropped, duplicated, or reordered across the swap."""
+        sched, ex, lo, hi = self._contended()
+        sched.tick()                           # preempts lo, seats hi
+        assert sched.requests[lo].status == PREEMPTED
+        assert sched.requests[lo].slot is None
+        assert sched.preemptions == 1
+        assert sched.requests[lo].preempt_count == 1
+        assert lo in ex._swap
+        sched.drain()
+        assert not ex._swap                    # resumed, swap pool empty
+        assert sched.requests[lo].tokens == ex.streams[lo]
+        assert sched.requests[hi].tokens == ex.streams[hi]
+
+    def test_blocked_resume_retries(self):
+        """resume() returning False parks the request PREEMPTED (nothing
+        lost) and it retries until the executor admits it."""
+        sched, ex, lo, hi = self._contended()
+        sched.tick()
+        ex.resume_ok = False
+        for _ in range(3):
+            sched.tick()
+            assert sched.requests[lo].status == PREEMPTED
+        ex.resume_ok = True
+        sched.drain()
+        assert sched.requests[lo].tokens == ex.streams[lo]
+
+    def test_no_preempt_without_executor_support(self):
+        """A preempt=True policy over an executor without the optional
+        preempt/resume methods never preempts (capability-gated), and
+        everything still completes."""
+        streams = {0: stream(0, 6), 1: stream(1, 2)}
+        ex = ScriptedExecutor(1, 2, streams)
+        sched = Scheduler(ex, policy=PriorityAdmission(levels=2,
+                                                       preempt=True))
+        sched.submit(None, prompt_len=1, max_new=6, priority=0)
+        sched.tick()
+        sched.submit(None, prompt_len=1, max_new=2, priority=1)
+        sched.drain()
+        assert sched.preemptions == 0
+        assert sched.requests[0].tokens == streams[0]
+        assert sched.requests[1].tokens == streams[1]
+
+    def test_fifo_never_preempts(self):
+        """The default policy never selects a victim even on a
+        preemption-capable executor."""
+        streams = {0: stream(0, 6), 1: stream(1, 2)}
+        ex = PreemptableScripted(1, 2, streams)
+        sched = Scheduler(ex)
+        sched.submit(None, prompt_len=1, max_new=6)
+        sched.submit(None, prompt_len=1, max_new=2)
+        sched.drain()
+        assert sched.preemptions == 0 and not ex._swap
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator swap states
+# ---------------------------------------------------------------------------
+
+class TestAllocatorSwap:
+    def test_swap_out_and_conservation(self):
+        alloc = PageAllocator(6)
+        frames = alloc.alloc(4)
+        alloc.swap_out(frames[:2])
+        s = alloc.stats()
+        assert s == {"n_pages": 6, "free": 2, "live": 2, "pinned": 0,
+                     "swapped": 2}
+        assert s["free"] + s["live"] + s["swapped"] == 6
+
+    def test_alloc_draws_free_then_swapped(self):
+        alloc = PageAllocator(4)
+        first = alloc.alloc(4)
+        alloc.swap_out(first)                  # all 4 vacated
+        assert alloc.n_free == 0 and alloc.n_swapped == 4
+        got = alloc.alloc(3)                   # must draw swapped frames
+        assert got is not None and alloc.n_swapped == 1
+        assert alloc.alloc(2) is None          # 1 swapped + 0 free < 2
+
+    def test_swap_out_refuses_shared_frames(self):
+        alloc = PageAllocator(4)
+        frames = alloc.alloc(2)
+        alloc.share([frames[0]])
+        with pytest.raises(ValueError, match="refcount"):
+            alloc.swap_out(frames)             # frames[0] is pinned
+        # the failed call must not have half-applied
+        assert alloc.n_swapped == 0 and alloc.refcount(frames[1]) == 1
+
+    def test_pinned_counter(self):
+        alloc = PageAllocator(4)
+        frames = alloc.alloc(3)
+        alloc.share(frames[:2])
+        assert alloc.stats()["pinned"] == 2
+        alloc.free(frames[:2])
+        assert alloc.stats()["pinned"] == 0 and alloc.n_live == 3
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: preempt/resume token parity matrix + streaming TTFT
+# ---------------------------------------------------------------------------
+
+def _mt_kw(mode):
+    kw = dict(ENGINE_KW, paged=True, page_size=PAGE, priority_levels=2,
+              preempt=True)
+    if mode == "paged_share":
+        kw["share_prefix"] = True
+    elif mode == "paged_spec":
+        kw.update(speculative=True, k=3)
+    return kw
+
+
+class TestEnginePreemptionParity:
+    @pytest.mark.parametrize("mode", ["paged", "paged_share", "paged_spec"])
+    def test_preempt_resume_token_parity(self, granite, mode):
+        """The acceptance matrix: preempted-and-resumed requests emit
+        token-identical output to an un-preempted contiguous FIFO oracle
+        in every paged engine mode, and the trace really preempted."""
+        cfg, params = granite
+        rng = np.random.default_rng(23)
+        prompts = [rng.integers(0, cfg.vocab, (1, n)).astype(np.int32)
+                   for n in (6, 5, 4)]
+        eng = Engine(params, cfg, **_mt_kw(mode))
+        r0 = eng.submit({"tokens": prompts[0]}, max_new=8, priority=0,
+                        tenant="batch")
+        r1 = eng.submit({"tokens": prompts[1]}, max_new=8, priority=0,
+                        tenant="batch")
+        eng.step()                             # both victims RUNNING
+        sched = eng._sched
+        assert sched.requests[r0].status == RUNNING
+        assert sched.requests[r1].status == RUNNING
+        r2 = eng.submit({"tokens": prompts[2]}, max_new=4, priority=1,
+                        tenant="lat")
+        eng.step()                             # preempts the newest victim
+        assert sched.preemptions >= 1, f"{mode}: preemption never fired"
+        assert sched.requests[r1].preempt_count >= 1
+        res = eng.drain()
+        oracle = Engine(params, cfg, **ENGINE_KW)
+        o0 = oracle.submit({"tokens": prompts[0]}, max_new=8)
+        o1 = oracle.submit({"tokens": prompts[1]}, max_new=8)
+        o2 = oracle.submit({"tokens": prompts[2]}, max_new=4)
+        want = oracle.drain()
+        for rid, oid in ((r0, o0), (r1, o1), (r2, o2)):
+            np.testing.assert_array_equal(
+                res[rid], want[oid],
+                err_msg=f"{mode}: rid {rid} diverged across preemption")
+        stats = eng.stats()
+        assert stats["preemptions"] >= 1 and stats["swap_ins"] >= 1
+        s = stats["pages"]
+        assert s["free"] + s["live"] + s["swapped"] == s["n_pages"]
+
+    def test_preempt_requires_paged(self, granite):
+        cfg, params = granite
+        with pytest.raises(ValueError, match="preempt"):
+            Engine(params, cfg, preempt=True)
+
+    def test_default_engine_policy_is_fifo(self, granite):
+        """No tenants/priorities given: the engine hands the scheduler
+        no policy (FIFO default) and no quotas -- behavioral identity
+        with the pre-policy engine."""
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW)
+        assert eng._make_policy() is None
+        assert eng._make_quotas() == ({}, None)
+        mt = Engine(params, cfg, **ENGINE_KW,
+                    priority_levels=2,
+                    tenants={"lat": {"weight": 2.0, "slots": 1}})
+        policy = mt._make_policy()
+        assert isinstance(policy, PriorityAdmission)
+        assert policy.levels == 2 and policy.weight("lat") == 2.0
+        quotas, default = mt._make_quotas()
+        assert quotas["lat"].slots == 1 and default is None
+
+    def test_tenant_quota_knobs_flow_through(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW, tenant_slots=1)
+        quotas, default = eng._make_quotas()
+        assert default == TenantQuota(slots=1) and quotas == {}
+        with pytest.raises(ValueError, match="unknown spec key"):
+            Engine(params, cfg, **ENGINE_KW, tenants={"t": {"wieght": 2}})
+
+    def test_engine_queue_quota_backpressure(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW,
+                     tenants={"t": {"queue": 1}})
+        p = np.zeros((1, 4), np.int32)
+        eng.submit({"tokens": p}, max_new=2, tenant="t")
+        with pytest.raises(QuotaExceeded):
+            eng.submit({"tokens": p}, max_new=2, tenant="t")
+        eng.drain()
+
+
+class TestStreaming:
+    def test_stream_events_and_ttft(self, granite):
+        """Engine.stream() yields every token exactly once, in per-rid
+        order, with TTFT on each request's first event and ``done`` on
+        its last -- and drain/pop_finished semantics are untouched."""
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW)
+        rng = np.random.default_rng(31)
+        r0 = eng.submit({"tokens": rng.integers(
+            0, cfg.vocab, (1, 5)).astype(np.int32)}, max_new=4)
+        r1 = eng.submit({"tokens": rng.integers(
+            0, cfg.vocab, (1, 3)).astype(np.int32)}, max_new=2)
+        events = list(eng.stream())
+        assert all(isinstance(e, TokenEvent) for e in events)
+        by_rid = {r0: [], r1: []}
+        for e in events:
+            by_rid[e.rid].append(e)
+        res = eng.pop_finished()               # still collectible after
+        for rid, want_n in ((r0, 4), (r1, 2)):
+            evs = by_rid[rid]
+            assert [e.index for e in evs] == list(range(want_n))
+            assert [e.token for e in evs] == list(res[rid])
+            assert evs[0].ttft is not None and evs[0].ttft > 0
+            assert all(e.ttft is None for e in evs[1:])
+            assert [e.done for e in evs] == [False] * (want_n - 1) + [True]
+            assert all(e.tenant == "default" for e in evs)
+
+    def test_stream_empty_engine(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW)
+        assert list(eng.stream()) == []
+
+    def test_ttft_recorded_on_drain_too(self, granite):
+        """TTFT is a Request-level stamp, not a stream()-only artifact:
+        plain drain() populates it for bench reporting."""
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW)
+        rid = eng.submit({"tokens": np.zeros((1, 4), np.int32)}, max_new=2)
+        eng.drain()
+        req = eng._sched.requests[rid]
+        assert req.ttft is not None and req.ttft > 0
+        assert req.done_wall is not None \
+            and req.done_wall >= req.first_token_wall
+
+
+class TestKnobValidation:
+    """Engine-level guards for the new knobs (the EngineKnobs unit
+    matrix lives in test_autotune.py)."""
+
+    def test_priority_levels_floor(self, granite):
+        cfg, params = granite
+        with pytest.raises(ValueError, match="priority_levels"):
+            Engine(params, cfg, priority_levels=0)
+
+    def test_submit_priority_range(self, granite):
+        cfg, params = granite
+        eng = Engine(params, cfg, **ENGINE_KW, priority_levels=2)
+        p = np.zeros((1, 4), np.int32)
+        eng.submit({"tokens": p}, max_new=2, priority=1)
+        with pytest.raises(ValueError, match="priority"):
+            eng.submit({"tokens": p}, max_new=2, priority=2)
+        eng.drain()
+
+    def test_knobs_strict_quota_validation(self):
+        with pytest.raises(ValueError, match="tenant_slots"):
+            EngineKnobs(admit_k=2, tenant_slots=4).validated(capacity=2,
+                                                             strict=True)
+        clamped = EngineKnobs(admit_k=2, tenant_slots=4).validated(
+            capacity=2, strict=False)
+        assert clamped.tenant_slots == 2
