@@ -7,11 +7,12 @@ SERVING_TESTS := tests/test_scheduler.py tests/test_packed_serving.py \
                  tests/test_serving_e2e.py tests/test_chunked_prefill.py \
                  tests/test_paged_cache.py tests/test_serving_fuzz.py \
                  tests/test_speculative.py tests/test_autotune.py \
-                 tests/test_multitenant.py
+                 tests/test_multitenant.py tests/test_scorecard.py
 
 .PHONY: test test-unit test-serving test-fuzz test-spec test-sharded \
         test-multitenant bench-smoke bench-smoke-continuous bench-serving \
-        bench-smoke-sharded bench-smoke-autotune
+        bench-smoke-sharded bench-smoke-autotune scorecard-smoke \
+        scorecard-baseline
 
 test:            ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -52,6 +53,14 @@ bench-smoke-sharded:  ## sharded continuous section (forces a 4-device CPU mesh)
 
 bench-smoke-autotune:  ## tiny-budget autotuner search + before/after replay
 	$(PYTHON) benchmarks/serving_latency.py --smoke --mode autotune
+
+scorecard-smoke:  ## serving-path quality scorecard, drift gate armed (CI)
+	$(PYTHON) benchmarks/serving_latency.py --smoke --mode scorecard \
+	  --scorecard-gate
+
+scorecard-baseline:  ## regenerate + adopt the committed smoke baseline
+	$(PYTHON) benchmarks/serving_latency.py --smoke --mode scorecard \
+	  --scorecard-out experiments/scorecard_baseline.json
 
 bench-serving:   ## full serving latency benchmark -> BENCH_serving.json
 	$(PYTHON) benchmarks/serving_latency.py

@@ -7,8 +7,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import jax
-
 from repro.core.apply import dequantize_params, quantize_params
 from repro.core.pareto import VARIANT_THETA
 from repro.core.quantize import HaloConfig
@@ -35,20 +33,9 @@ def quantize_all_methods(cfg, params, fisher, act_stats,
 
 
 def effective_bits_of(qparams) -> float:
-    from repro.core.apply import StackedHalo
-    from repro.core.quantize import HaloQuantized, effective_bits
-    bits = n = 0.0
-    for leaf in jax.tree.leaves(
-            qparams, is_leaf=lambda x: isinstance(x, (HaloQuantized,
-                                                      StackedHalo))):
-        hqs = ([leaf] if isinstance(leaf, HaloQuantized)
-               else list(leaf.slices) if isinstance(leaf, StackedHalo)
-               else [])
-        for hq in hqs:
-            sz = hq.shape[0] * hq.shape[1]
-            bits += effective_bits(hq) * sz
-            n += sz
-    return bits / n if n else 16.0
+    # single implementation in core/apply.py, shared with the scorecard
+    from repro.core.apply import effective_bits_of as _eb
+    return _eb(qparams)
 
 
 def run(families=("llama", "opt"), steps: int = 400) -> List[dict]:

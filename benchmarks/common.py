@@ -118,6 +118,40 @@ class _null:
         return False
 
 
+def stamp_section(section: Dict) -> Dict:
+    """Stamp a BENCH_*.json section with provenance at WRITE time: the
+    git SHA and UTC timestamp of the run that produced it.  Merged
+    reports keep stale sections' original stamps, which is what lets
+    ``staleness_note`` detect a report mixing runs of different SHAs."""
+    from repro.eval.scorecard import git_sha, utc_now
+    section["git_sha"] = git_sha()
+    section["written_at"] = utc_now()
+    return section
+
+
+def staleness_note(report: Dict, keys=None) -> str:
+    """Non-empty iff the merged report mixes sections produced at
+    different git SHAs (or carries unstamped sections).  ``keys`` names
+    the section keys to audit (default: every dict-valued entry).  The
+    returned note is meant to be stored IN the report and printed
+    loudly -- a silent mix is exactly how a stale number gets quoted as
+    current."""
+    shas: Dict[str, list] = {}
+    for key, sec in report.items():
+        if keys is not None and key not in keys:
+            continue
+        if not isinstance(sec, dict):
+            continue
+        shas.setdefault(sec.get("git_sha", "<unstamped>"), []).append(key)
+    if len(shas) <= 1:
+        return ""
+    parts = [f"{sha}: {', '.join(sorted(keys))}"
+             for sha, keys in sorted(shas.items())]
+    return ("MIXED-SHA REPORT: sections were produced by different "
+            "commits -- re-run the stale ones before quoting deltas "
+            "[" + "; ".join(parts) + "]")
+
+
 def collect_calibration(params, cfg: ModelConfig, n_batches: int = 4,
                         with_gram: bool = True):
     """Fisher diag + activation stats over calibration batches

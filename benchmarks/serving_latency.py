@@ -89,9 +89,11 @@ import jax                     # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
-from benchmarks.common import bench_config                    # noqa: E402
+from benchmarks.common import (bench_config, stamp_section,   # noqa: E402
+                               staleness_note, train_reference)
 from repro.core import deploy                                 # noqa: E402
-from repro.core.apply import quantize_params                  # noqa: E402
+from repro.core.apply import effective_bits_of, quantize_params  # noqa: E402
+from repro.core.pareto import VARIANT_THETA                   # noqa: E402
 from repro.core.quantize import HaloConfig                    # noqa: E402
 from repro.models import module as M                          # noqa: E402
 from repro.models import transformer as T                     # noqa: E402
@@ -100,6 +102,13 @@ from repro.serving.scheduler import Scheduler                 # noqa: E402
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serving.json")
+
+# every section key this bench can write; the staleness audit only looks
+# at these (other top-level dicts, e.g. ``host``, are not sections)
+SECTION_KEYS = ("paths", "continuous", "continuous_prefill_heavy",
+                "continuous_paged", "continuous_shared",
+                "continuous_speculative", "continuous_multitenant",
+                "continuous_sharded", "autotuned", "scorecard")
 
 
 # ---------------------------------------------------------------------------
@@ -964,7 +973,10 @@ def run_autotune(cfg, q, args) -> dict:
         t0 = time.perf_counter()
         rids = [eng.submit({"tokens": r["prompt"][0]},
                            max_new=r["max_new"]) for r in trace]
-        done = eng.drain()
+        # fresh_only: drain()'s default result is cumulative, so a repeat
+        # loop that ever skipped pop_finished() would silently re-count
+        # earlier replays' tokens here
+        done = eng.drain(fresh_only=True)
         wall = time.perf_counter() - t0
         toks = [np.asarray(done[r]).tolist() for r in rids]
         eng.pop_finished()
@@ -1038,6 +1050,89 @@ def run_autotune(cfg, q, args) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# accuracy + perf scorecard (src/repro/eval) with optional drift gate
+# ---------------------------------------------------------------------------
+
+def run_scorecard_section(args) -> dict:
+    """Quality-next-to-throughput through the REAL serving path: train
+    (or reload) the reference llama, quantize two HALO operating points,
+    and measure PPL / tiny-MMLU accuracy / tokens/s per (variant,
+    engine-mode) via ``Engine.score`` -- see src/repro/eval/.  Persists
+    the versioned Scorecard artifact; with ``--scorecard-gate`` compares
+    it against the committed baseline and records violations (main()
+    exits non-zero on any)."""
+    from repro.eval import (EvalProtocol, Scorecard, run_scorecard)
+    from repro.eval.harness import Variant
+
+    steps = 120 if args.smoke else 400
+    if args.smoke:
+        protocol = EvalProtocol(
+            ppl_seq_len=32, n_ppl_sequences=2, mc_question_len=16,
+            mc_option_len=4, n_mc_items=6, tps_requests=3,
+            tps_prompt_len=12, tps_max_new=8, tps_repeats=2)
+        modes = ("contiguous", "paged")
+    else:
+        protocol = EvalProtocol()
+        modes = ("contiguous", "paged", "paged_share", "spec")
+
+    print(f"[scorecard] training/loading reference llama ({steps} steps)")
+    cfg, params = train_reference("llama", steps=steps)
+
+    variants = [Variant("dense", params)]
+    for vname in ("perf-opt", "acc-opt"):
+        theta = VARIANT_THETA[vname]
+        print(f"[scorecard] quantizing halo-{vname} (theta={theta}) ...")
+        q = quantize_params(params, None, HaloConfig(tile=128), theta=theta)
+        variants.append(Variant(f"halo-{vname}", deploy.pack_params(q),
+                                effective_bits=effective_bits_of(q),
+                                quantized=True))
+
+    card = run_scorecard(variants, cfg, modes=modes, protocol=protocol,
+                         model=cfg.name, backend=jax.default_backend(),
+                         oracle_params=params,
+                         progress=lambda s: print(f"[scorecard] {s}"))
+    card.save(args.scorecard_out)
+    print(f"[scorecard] artifact -> {os.path.abspath(args.scorecard_out)}")
+
+    gate, violations = "not-armed", []
+    if args.scorecard_gate:
+        if not os.path.exists(args.scorecard_baseline):
+            gate = "fail"
+            violations = [f"no committed baseline at "
+                          f"{args.scorecard_baseline}: generate one with "
+                          f"--scorecard (no gate) and commit it"]
+        else:
+            baseline = Scorecard.load(args.scorecard_baseline)
+            violations = card.compare(baseline)
+            gate = "fail" if violations else "pass"
+        for v in violations:
+            print(f"[scorecard] DRIFT: {v}")
+        if gate == "pass":
+            print(f"[scorecard] drift gate PASS vs "
+                  f"{args.scorecard_baseline}")
+
+    return {
+        "train_steps": steps,
+        "protocol": protocol.asdict(),
+        "modes": list(modes),
+        "artifact": os.path.relpath(
+            args.scorecard_out, os.path.join(os.path.dirname(__file__),
+                                             "..")),
+        "gate": gate,
+        "violations": violations,
+        "entries": [{
+            "variant": e.variant, "engine_mode": e.engine_mode,
+            "ppl": e.ppl, "mc_accuracy": e.mc_accuracy,
+            "effective_bits": e.effective_bits, "packed": e.packed,
+            "n_packed_leaves": e.n_packed_leaves,
+            "tokens_per_s": e.tokens_per_s,
+            "oracle_ppl_rel_err": e.oracle_ppl_rel_err,
+            "note": e.note,
+        } for e in card.entries],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
@@ -1045,7 +1140,8 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--mode",
-                    choices=("all", "paths", "continuous", "autotune"),
+                    choices=("all", "paths", "continuous", "autotune",
+                             "scorecard"),
                     default="all")
     ap.add_argument("--autotune", action="store_true",
                     help="also run the hardware-in-the-loop autotuner "
@@ -1088,6 +1184,27 @@ def main() -> None:
                          "(forces a 4-device host-CPU runtime when no "
                          "XLA_FLAGS are set) -> continuous_sharded "
                          "section")
+    ap.add_argument("--scorecard", action="store_true",
+                    help="also run the serving-path accuracy + perf "
+                         "scorecard (PPL / tiny-MMLU accuracy / tokens/s "
+                         "for dense vs HALO variants through "
+                         "Engine.submit/step/drain on multiple engine "
+                         "modes) -> scorecard section + versioned "
+                         "artifact")
+    ap.add_argument("--scorecard-out",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "experiments", "scorecard.json"),
+                    help="path for the Scorecard artifact")
+    ap.add_argument("--scorecard-baseline",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "experiments",
+                                         "scorecard_baseline.json"),
+                    help="committed baseline the drift gate compares "
+                         "against")
+    ap.add_argument("--scorecard-gate", action="store_true",
+                    help="arm the quality-drift gate: exit non-zero if "
+                         "PPL / accuracy drift beyond the baseline's "
+                         "stored tolerances")
     ap.add_argument("--seed", type=int, default=0,
                     help="root seed for every synthetic trace (recorded "
                          "in the JSON so cross-PR deltas replay the same "
@@ -1130,34 +1247,55 @@ def main() -> None:
         results = run_paths(cfg, params, q, args)
         speedup = (results["packed"]["decode_tokens_per_s"]
                    / results["xla_dequant"]["decode_tokens_per_s"])
-        report["paths"] = results
+        report["paths"] = stamp_section(results)
         report["packed_decode_speedup_vs_dequant"] = speedup
         print(f"packed decode speedup vs XLA-dequant: {speedup:.2f}x")
 
     if args.mode in ("all", "continuous"):
-        report["continuous"] = run_continuous(cfg, q, args)
+        report["continuous"] = stamp_section(run_continuous(cfg, q, args))
         if args.prefill_heavy:
-            report["continuous_prefill_heavy"] = run_prefill_heavy(
-                cfg, q, args)
+            report["continuous_prefill_heavy"] = stamp_section(
+                run_prefill_heavy(cfg, q, args))
         if args.paged:
-            report["continuous_paged"] = run_paged(cfg, q, args)
+            report["continuous_paged"] = stamp_section(
+                run_paged(cfg, q, args))
         if args.share_prefix:
-            report["continuous_shared"] = run_shared(cfg, q, args)
+            report["continuous_shared"] = stamp_section(
+                run_shared(cfg, q, args))
         if args.speculative:
-            report["continuous_speculative"] = run_speculative(
-                cfg, params, args)
+            report["continuous_speculative"] = stamp_section(
+                run_speculative(cfg, params, args))
         if args.multi_tenant:
-            report["continuous_multitenant"] = run_multitenant(cfg, q, args)
+            report["continuous_multitenant"] = stamp_section(
+                run_multitenant(cfg, q, args))
         if args.sharded:
-            report["continuous_sharded"] = run_sharded(cfg, q, args)
+            report["continuous_sharded"] = stamp_section(
+                run_sharded(cfg, q, args))
 
     if args.mode == "autotune" or (args.autotune
                                    and args.mode in ("all", "continuous")):
-        report["autotuned"] = run_autotune(cfg, q, args)
+        report["autotuned"] = stamp_section(run_autotune(cfg, q, args))
+
+    if args.mode == "scorecard" or (args.scorecard
+                                    and args.mode in ("all", "continuous")):
+        report["scorecard"] = stamp_section(run_scorecard_section(args))
+
+    # staleness audit: the merge above deliberately preserves sections a
+    # partial --mode run didn't refresh, so a report can mix commits --
+    # record that loudly instead of letting stale numbers pass as current
+    note = staleness_note(report, keys=SECTION_KEYS)
+    report["staleness"] = note
+    if note:
+        print(f"WARNING: {note}")
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"-> {os.path.abspath(args.out)}")
+
+    sc = report.get("scorecard", {})
+    if args.scorecard_gate and sc.get("gate") == "fail":
+        print("[scorecard] drift gate FAILED")
+        sys.exit(2)
 
 
 if __name__ == "__main__":

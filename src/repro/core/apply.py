@@ -119,3 +119,26 @@ def dequantize_params(qparams: Any, dtype=jnp.float32) -> Any:
 
     return jax.tree.map(deq, qparams,
                         is_leaf=lambda x: isinstance(x, (HaloQuantized, StackedHalo)))
+
+
+def effective_bits_of(qparams: Any) -> float:
+    """Weight-population mean effective bits over every HALO-quantized
+    leaf (paper SIV-B's B_eff, aggregated tree-wide).
+
+    Dense leaves are excluded from the average -- an all-dense tree
+    reports 16.0 (the fp16 deployment baseline).  Shared by the accuracy
+    table and the serving scorecard so both report the same number for
+    the same tree."""
+    from .quantize import effective_bits
+    bits = n = 0.0
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, (HaloQuantized,
+                                                      StackedHalo))):
+        hqs = ([leaf] if isinstance(leaf, HaloQuantized)
+               else list(leaf.slices) if isinstance(leaf, StackedHalo)
+               else [])
+        for hq in hqs:
+            sz = hq.shape[0] * hq.shape[1]
+            bits += effective_bits(hq) * sz
+            n += sz
+    return bits / n if n else 16.0

@@ -125,6 +125,28 @@ def _packable(hq: HaloQuantized) -> bool:
     return (hq.tile == TILE and hq.shape[0] >= TILE and hq.shape[1] >= TILE)
 
 
+# one-time signal for pack_params calls that pack NOTHING (every quantized
+# leaf under the 128-tile kernel floor, e.g. d_model=64 smoke configs) --
+# without it such engines silently serve fully dense while callers report
+# "packed" numbers.  Tests reset this to re-assert the warning.
+_warned_all_dense = False
+
+
+def n_packed_leaves(tree: Any) -> int:
+    """Count ``HaloPacked`` leaves in a served weight tree.
+
+    The scorecard/bench gate on this before labeling a run "packed": a
+    quantized tree whose every leaf fell below the 128-tile kernel floor
+    packs to zero ``HaloPacked`` leaves and serves fully dense."""
+    from ..kernels.ops import HaloPacked
+
+    def is_packed(x):
+        return isinstance(x, HaloPacked)
+
+    return sum(1 for leaf in jax.tree.leaves(tree, is_leaf=is_packed)
+               if is_packed(leaf))
+
+
 def pack_params(qparams: Any, scheduled: bool = True, *,
                 specs: Any = None, mesh: Any = None,
                 rules: Any = None) -> Any:
@@ -138,29 +160,50 @@ def pack_params(qparams: Any, scheduled: bool = True, *,
 
     Leaves quantized with a non-kernel tile (tile != 128) or smaller than
     one tile fall back to dense bf16 -- they are the rare small matrices
-    where the 4-bit stream buys nothing.
+    where the 4-bit stream buys nothing.  If EVERY quantized leaf falls
+    back this way the result serves fully dense; a one-time warning fires
+    so smoke-sized configs can't masquerade as packed runs (callers that
+    must know for sure count ``n_packed_leaves`` on the result).
 
     Passing ``mesh`` (plus the matching ``model_specs`` tree as ``specs``)
     lays the packed leaves out tensor-parallel at pack time via
     ``shard_params`` -- the multi-device engines never hold a replicated
     copy of the 4-bit stream.
     """
+    import warnings
+
     from ..kernels.ops import pack_halo, stack_packed
     from .apply import StackedHalo
 
+    stats = {"quantized": 0, "packed": 0}
+
     def pack(leaf):
         if isinstance(leaf, HaloQuantized):
+            stats["quantized"] += 1
             if _packable(leaf):
+                stats["packed"] += 1
                 return pack_halo(leaf, scheduled=scheduled)
             return leaf.dequantize().astype(jnp.bfloat16)
         if isinstance(leaf, StackedHalo):
+            stats["quantized"] += 1
             if all(_packable(s) for s in leaf.slices):
+                stats["packed"] += 1
                 return stack_packed([pack_halo(s, scheduled=scheduled)
                                      for s in leaf.slices], leaf.lead_shape)
             return leaf.dequantize().astype(jnp.bfloat16)
         return leaf
 
     packed = jax.tree.map(pack, qparams, is_leaf=_is_quantized)
+    global _warned_all_dense
+    if stats["quantized"] and not stats["packed"] and not _warned_all_dense:
+        _warned_all_dense = True
+        warnings.warn(
+            f"pack_params: 0 of {stats['quantized']} quantized leaves met "
+            f"the {TILE}x{TILE} kernel tile floor (tile == {TILE} and both "
+            f"matmul dims >= {TILE}); every leaf fell back to dense bf16, "
+            f"so this model serves with NO packed kernels. Widen the "
+            f"config or quantize with HaloConfig(tile={TILE}). "
+            f"(warned once per process)", UserWarning, stacklevel=2)
     if mesh is not None:
         if specs is None:
             raise ValueError(

@@ -1,0 +1,20 @@
+"""Serving-path evaluation: datasets, harness, and the Scorecard artifact.
+
+Quality numbers here are measured THROUGH ``Engine.submit/step/drain``
+(packed ``halo_matmul`` kernels, paged KV, prefix-sharing machinery,
+speculative executors), not on the raw model -- see docs/serving.md.
+"""
+
+from .datasets import MCItem, MultipleChoiceProbe, PerplexityStream
+from .harness import (ENGINE_MODES, EvalProtocol, mc_accuracy,
+                      ppl_from_logprobs, raw_sequence_logprobs,
+                      run_scorecard)
+from .scorecard import (SCORECARD_VERSION, Scorecard, ScorecardEntry,
+                        git_sha, utc_now)
+
+__all__ = [
+    "ENGINE_MODES", "EvalProtocol", "MCItem", "MultipleChoiceProbe",
+    "PerplexityStream", "SCORECARD_VERSION", "Scorecard", "ScorecardEntry",
+    "git_sha", "mc_accuracy", "ppl_from_logprobs", "raw_sequence_logprobs",
+    "run_scorecard", "utc_now",
+]

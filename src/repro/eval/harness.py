@@ -1,0 +1,224 @@
+"""Eval harness: drive the datasets through the REAL serving path.
+
+Every quality number here flows through ``Engine.submit``/``step``/
+``drain`` on a live executor -- fused prefill-append windows over packed
+``halo_matmul`` kernels, paged KV pools, prefix-sharing page tables,
+speculative executors -- via ``Engine.score``.  The only raw-model
+access is the deliberate ORACLE (``raw_sequence_logprobs``, one jitted
+``T.forward`` per sequence), kept so a dense-contiguous engine run can
+be checked against ground truth: if the serving plumbing ever corrupts
+logits, the oracle-parity column catches it before a quantization delta
+gets blamed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core import deploy
+from ..models import transformer as T
+from ..serving.engine import Engine
+from .datasets import MultipleChoiceProbe, PerplexityStream
+from .scorecard import (DEFAULT_TOLERANCES, Scorecard, ScorecardEntry,
+                        git_sha, utc_now)
+
+# Engine kwarg bundles per mode.  Every mode exercises a genuinely
+# different executor/cache layout, which is the point: quality must
+# survive each of them unchanged.
+ENGINE_MODES: Dict[str, Dict[str, Any]] = {
+    "contiguous": {},
+    "paged": {"paged": True, "page_size": 16},
+    "paged_share": {"paged": True, "page_size": 16, "share_prefix": True},
+    "spec": {"speculative": True, "k": 3, "draft_layers": 1},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalProtocol:
+    """Everything that makes two scorecards comparable.  Stored verbatim
+    in the artifact; ``Scorecard.compare`` refuses cross-protocol
+    comparisons."""
+
+    ppl_seq_len: int = 48
+    n_ppl_sequences: int = 4
+    mc_question_len: int = 24
+    mc_option_len: int = 4
+    n_mc_items: int = 8
+    n_mc_options: int = 4
+    tps_requests: int = 4
+    tps_prompt_len: int = 16
+    tps_max_new: int = 8
+    tps_repeats: int = 2
+    seed: int = 42
+
+    def asdict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def max_seq(self) -> int:
+        """Slot cache length covering every workload in the protocol,
+        rounded up to the decode bucket."""
+        need = max(self.ppl_seq_len + 2,
+                   self.mc_question_len + self.mc_option_len + 1,
+                   self.tps_prompt_len + self.tps_max_new)
+        return -(-need // 16) * 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One deployed weight tree to be scored: ``params`` is what the
+    Engine serves (post ``deploy.pack_params``); ``effective_bits`` is
+    the tree-wide mean B_eff computed on the PRE-deploy quantized tree
+    (core/apply.effective_bits_of), since packing erases the HALO
+    codebook metadata B_eff is derived from."""
+
+    name: str
+    params: Any
+    effective_bits: float = 16.0
+    quantized: bool = False
+
+
+def ppl_from_logprobs(logprobs: Sequence[np.ndarray]) -> float:
+    """exp(mean token NLL) over all scored positions."""
+    flat = np.concatenate([np.asarray(lp, np.float64).reshape(-1)
+                           for lp in logprobs])
+    if flat.size == 0:
+        raise ValueError("no scored tokens")
+    return float(np.exp(-flat.mean()))
+
+
+def raw_sequence_logprobs(params, cfg, seqs: Sequence[np.ndarray]
+                          ) -> List[np.ndarray]:
+    """ORACLE: per-token log-likelihoods from one plain ``T.forward``
+    per sequence -- no scheduler, no windows, no cache.  Same math as
+    ``Engine.score`` (float64 log-softmax over the real vocab columns),
+    so dense-contiguous engine output must match to float32 tolerance."""
+    fwd = jax.jit(lambda p, b: T.forward(p, cfg, b)[0])
+    out = []
+    for s in seqs:
+        s = np.asarray(s).reshape(-1).astype(np.int32)
+        batch = {"tokens": s[None, :],
+                 "positions": np.arange(len(s), dtype=np.int32)[None]}
+        logits = np.asarray(fwd(params, batch), np.float64)[0, :, :cfg.vocab]
+        m = logits.max(axis=-1, keepdims=True)
+        lsm = logits - (m + np.log(np.exp(logits - m)
+                                   .sum(axis=-1, keepdims=True)))
+        out.append(lsm[np.arange(len(s) - 1), s[1:]].astype(np.float32))
+    return out
+
+
+def mc_accuracy(score_fn: Callable[[List[np.ndarray]], List[np.ndarray]],
+                probe: MultipleChoiceProbe) -> float:
+    """Fraction of items whose TRUE continuation gets the highest summed
+    continuation log-likelihood given the question.  ``score_fn`` maps
+    full sequences to per-token logprob arrays (``Engine.score`` or the
+    raw oracle, interchangeably)."""
+    q = probe.question_len
+    items = probe.items()
+    correct = 0
+    for item in items:
+        lps = score_fn(item.option_sequences())
+        # positions q-1 .. q+m-2 of the (q+m-1,) array score the m
+        # option tokens given question (+ preceding option tokens)
+        scores = [float(lp[q - 1:].sum()) for lp in lps]
+        if int(np.argmax(scores)) == item.answer:
+            correct += 1
+    return correct / len(items)
+
+
+def measure_tps(eng: Engine, protocol: EvalProtocol) -> float:
+    """Decode throughput (generated tokens/s) on this engine: submit a
+    small burst, drain, repeat; best of ``tps_repeats`` after one
+    untimed warm-up replay (compile + cache-shape warm)."""
+    rng = np.random.default_rng(protocol.seed)
+    prompts = [rng.integers(0, eng.cfg.vocab,
+                            size=protocol.tps_prompt_len).astype(np.int32)
+               for _ in range(protocol.tps_requests)]
+
+    def replay() -> float:
+        for p in prompts:
+            eng.submit({"tokens": p[None, :]}, max_new=protocol.tps_max_new)
+        t0 = time.perf_counter()
+        res = eng.drain(fresh_only=True)
+        dt = time.perf_counter() - t0
+        eng.pop_finished()
+        n_new = sum(len(toks) for toks in res.values())  # generated only
+        return n_new / max(dt, 1e-9)
+
+    replay()                                    # warm-up, untimed
+    return max(replay() for _ in range(protocol.tps_repeats))
+
+
+def _build_engine(variant: Variant, cfg, mode: str,
+                  protocol: EvalProtocol) -> Engine:
+    kwargs = dict(ENGINE_MODES[mode])
+    return Engine(variant.params, cfg,
+                  prefill_bucket=16, decode_bucket=16, capacity=2,
+                  chunk=4, max_seq=protocol.max_seq(), **kwargs)
+
+
+def run_scorecard(variants: Sequence[Variant], cfg,
+                  modes: Sequence[str] = ("contiguous", "paged"),
+                  protocol: EvalProtocol = EvalProtocol(),
+                  model: str = "llama", backend: str = "jax_pallas",
+                  tolerances: Optional[Dict[str, float]] = None,
+                  oracle_params: Any = None,
+                  progress: Optional[Callable[[str], None]] = None
+                  ) -> Scorecard:
+    """Measure every (variant, engine-mode) cell through the serving
+    path and assemble the Scorecard artifact.
+
+    ``oracle_params``: a raw (un-deployed) dense tree; when given, dense
+    variants additionally record raw-model oracle PPL and the relative
+    error of the engine-path PPL against it -- the end-to-end parity
+    check that keeps serving-plumbing bugs from masquerading as
+    quantization loss."""
+    say = progress or (lambda s: None)
+    stream = PerplexityStream(cfg.vocab, protocol.ppl_seq_len,
+                              protocol.n_ppl_sequences, seed=protocol.seed)
+    probe = MultipleChoiceProbe(cfg.vocab, protocol.mc_question_len,
+                                protocol.mc_option_len, protocol.n_mc_items,
+                                protocol.n_mc_options, seed=protocol.seed)
+    ppl_seqs = stream.sequences()
+    oracle_ppl = None
+    if oracle_params is not None:
+        oracle_ppl = ppl_from_logprobs(
+            raw_sequence_logprobs(oracle_params, cfg, ppl_seqs))
+        say(f"oracle (raw T.forward) ppl={oracle_ppl:.4f}")
+
+    card = Scorecard(model=model, backend=backend, git_sha=git_sha(),
+                     written_at=utc_now(), seed=protocol.seed,
+                     protocol=protocol.asdict(),
+                     tolerances=dict(tolerances or DEFAULT_TOLERANCES))
+    for variant in variants:
+        n_packed = deploy.n_packed_leaves(variant.params)
+        note = ""
+        if variant.quantized and n_packed == 0:
+            # refuse to label an all-dense fallback run "packed": its
+            # numbers say nothing about the packed kernel path
+            note = ("NOT PACKED: quantized variant deployed 0 HaloPacked "
+                    "leaves (every tensor under the 128x128 tile floor); "
+                    "kernel-path quality is NOT being measured")
+        for mode in modes:
+            say(f"scoring {variant.name}/{mode} ...")
+            eng = _build_engine(variant, cfg, mode, protocol)
+            ppl = ppl_from_logprobs(eng.score(ppl_seqs))
+            acc = mc_accuracy(eng.score, probe)
+            tps = measure_tps(eng, protocol)
+            entry = ScorecardEntry(
+                variant=variant.name, engine_mode=mode, ppl=ppl,
+                mc_accuracy=acc, effective_bits=variant.effective_bits,
+                n_packed_leaves=n_packed, packed=n_packed > 0,
+                tokens_per_s=tps, n_ppl_tokens=stream.n_scored_tokens,
+                n_mc_items=protocol.n_mc_items, note=note)
+            if not variant.quantized and oracle_ppl is not None:
+                entry.oracle_ppl = oracle_ppl
+                entry.oracle_ppl_rel_err = abs(ppl - oracle_ppl) / oracle_ppl
+            card.entries.append(entry)
+            say(f"  {variant.name}/{mode}: ppl={ppl:.4f} acc={acc:.3f} "
+                f"tok/s={tps:.1f} packed={n_packed}")
+    return card

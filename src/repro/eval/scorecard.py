@@ -1,0 +1,167 @@
+"""Versioned Scorecard artifact: quality next to throughput, per
+(quantization variant, engine mode), with drift gating against a
+committed baseline.
+
+Schema/versioning idiom follows ``serving/tuning.TunedConfig``: a
+``version`` field gates ``from_dict`` (unknown versions are rejected
+loudly), and unknown keys inside entries are dropped so newer writers
+stay readable by older readers within the same major version.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import subprocess
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Union
+
+SCORECARD_VERSION = 1
+
+# Default drift tolerances, stored INSIDE the artifact so the gate uses
+# whatever the committed baseline was armed with, not the code's current
+# defaults.  ppl_rel is two-sided relative PPL drift; mc_acc_abs is
+# absolute accuracy drift (0.051 tolerates one flip out of ~20 items
+# while catching wholesale collapse).
+DEFAULT_TOLERANCES: Dict[str, float] = {"ppl_rel": 0.02, "mc_acc_abs": 0.051}
+
+
+def git_sha(default: str = "unknown") -> str:
+    """Current repo HEAD SHA (short), or ``default`` outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else default
+    except (OSError, subprocess.SubprocessError):
+        return default
+
+
+def utc_now() -> str:
+    return datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y-%m-%dT%H:%M:%SZ")
+
+
+@dataclasses.dataclass
+class ScorecardEntry:
+    """One (variant, engine-mode) measurement through the serving path."""
+
+    variant: str                 # "dense" | "halo-perf-opt" | ...
+    engine_mode: str             # key into harness.ENGINE_MODES
+    ppl: float                   # serving-path perplexity (Engine.score)
+    mc_accuracy: float           # tiny-MMLU-style probe accuracy
+    effective_bits: float        # tree-wide mean B_eff (16.0 for dense)
+    n_packed_leaves: int         # HaloPacked leaves in deployed params
+    packed: bool                 # True only if kernels actually packed
+    tokens_per_s: float          # decode throughput, same engine mode
+    n_ppl_tokens: int
+    n_mc_items: int
+    oracle_ppl: Optional[float] = None      # raw T.forward PPL (dense only)
+    oracle_ppl_rel_err: Optional[float] = None
+    note: str = ""               # non-empty = loud anomaly (e.g. all-dense
+    #                              quantized run that refused "packed")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScorecardEntry":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass
+class Scorecard:
+    """The artifact: provenance + protocol + tolerances + entries."""
+
+    model: str
+    backend: str
+    git_sha: str
+    written_at: str
+    seed: int
+    protocol: Dict[str, Any]            # EvalProtocol.asdict()
+    tolerances: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_TOLERANCES))
+    entries: List[ScorecardEntry] = dataclasses.field(default_factory=list)
+    version: int = SCORECARD_VERSION
+
+    def key(self, variant: str, engine_mode: str) -> Optional[ScorecardEntry]:
+        for e in self.entries:
+            if e.variant == variant and e.engine_mode == engine_mode:
+                return e
+        return None
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["entries"] = [e.to_dict() for e in self.entries]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Scorecard":
+        ver = d.get("version")
+        if ver != SCORECARD_VERSION:
+            raise ValueError(
+                f"unsupported Scorecard version {ver!r} "
+                f"(this reader supports {SCORECARD_VERSION})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["entries"] = [ScorecardEntry.from_dict(e)
+                         for e in d.get("entries", [])]
+        return cls(**kw)
+
+    def save(self, path: Union[str, Path]) -> None:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True)
+                     + "\n")
+
+    @classmethod
+    def load(cls, path: Union[str, Path]) -> "Scorecard":
+        return cls.from_dict(json.loads(Path(path).read_text()))
+
+    def compare(self, baseline: "Scorecard") -> List[str]:
+        """Quality-drift violations of ``self`` vs ``baseline``.
+
+        Gating uses the BASELINE's stored tolerances (the committed
+        contract), and gates quality only -- PPL and MC accuracy.
+        tokens/s is recorded for visibility but machine/load variance
+        makes it unsuitable for a hard CI gate.  A protocol mismatch is
+        itself a violation: numbers from different protocols are not
+        comparable, and silently comparing them is exactly the staleness
+        failure mode this artifact exists to prevent.
+        """
+        tol = dict(DEFAULT_TOLERANCES)
+        tol.update(baseline.tolerances or {})
+        bad: List[str] = []
+        if self.protocol != baseline.protocol:
+            bad.append(
+                "protocol mismatch vs baseline -- regenerate the baseline "
+                f"(baseline={baseline.protocol} current={self.protocol})")
+            return bad
+        for be in baseline.entries:
+            cur = self.key(be.variant, be.engine_mode)
+            tag = f"[{be.variant}/{be.engine_mode}]"
+            if cur is None:
+                bad.append(f"{tag} missing from current scorecard")
+                continue
+            if be.ppl > 0:
+                rel = abs(cur.ppl - be.ppl) / be.ppl
+                if rel > tol["ppl_rel"]:
+                    bad.append(
+                        f"{tag} ppl drift {rel:.4f} > {tol['ppl_rel']} "
+                        f"(baseline {be.ppl:.4f} -> current {cur.ppl:.4f})")
+            dacc = abs(cur.mc_accuracy - be.mc_accuracy)
+            if dacc > tol["mc_acc_abs"]:
+                bad.append(
+                    f"{tag} mc_accuracy drift {dacc:.4f} > "
+                    f"{tol['mc_acc_abs']} (baseline {be.mc_accuracy:.4f} "
+                    f"-> current {cur.mc_accuracy:.4f})")
+            if be.packed and not cur.packed:
+                bad.append(
+                    f"{tag} baseline ran packed kernels but current run "
+                    f"is all-dense (n_packed_leaves="
+                    f"{cur.n_packed_leaves}): not the same measurement")
+        return bad

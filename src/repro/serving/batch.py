@@ -215,7 +215,7 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
                    total_lens, seat, rids, first,
                    write_floor: Optional[jnp.ndarray] = None, *,
                    cfg: ModelConfig, sampler, fresh: bool = False,
-                   max_seq: int = 0
+                   max_seq: int = 0, all_logits: bool = False
                    ) -> Tuple[SlotState, jnp.ndarray, jnp.ndarray]:
     """Fused k-way chunked-prefill admission: append one W-token prompt
     window to up to K slots in a single jit call.
@@ -260,7 +260,17 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
     request's sample sequence is unchanged).
 
     Returns (new_state, tok0 (K,) int32, done (K,) bool); ``tok0`` is
-    meaningful only where ``done``."""
+    meaningful only where ``done``.  With ``all_logits=True`` (static;
+    the engine's scoring path) the return grows a fourth element: the
+    full-window logits (K, W, V) from ``T.prefill_chunk(all_logits=
+    True)`` -- positions at or beyond ``chunk_lens`` carry junk the
+    caller must mask.  Scoring always appends (``fresh=True`` with
+    ``all_logits`` raises: the one-shot prefill only materializes final
+    logits)."""
+    if all_logits and fresh:
+        raise ValueError("prefill_append(all_logits=True) requires the "
+                         "append path (fresh=False): T.prefill only "
+                         "returns final-position logits")
     cap = state.tok.shape[0]
     slots = jnp.asarray(slots, jnp.int32)
     slots_c = jnp.clip(slots, 0, cap - 1)               # in-range gathers
@@ -281,7 +291,20 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
         logits, new_sub, new_len = T.prefill_chunk(params, cfg, batch,
                                                    sub_cache, sub_len,
                                                    active=seat,
-                                                   write_floor=write_floor)
+                                                   write_floor=write_floor,
+                                                   all_logits=all_logits)
+    window_logits = None
+    if all_logits:
+        # keep the full (K, W, V) window for the caller; sampling below
+        # gathers each seat's last valid position out of it (the same
+        # rows prefill_chunk's all_logits=False path would compute)
+        window_logits = logits
+        w = logits.shape[1]
+        idx = jnp.clip(jnp.asarray(chunk_lens, jnp.int32) - 1,
+                       0, w - 1)[:, None, None]
+        logits = jnp.take_along_axis(
+            logits, jnp.broadcast_to(idx, (logits.shape[0], 1,
+                                           logits.shape[2])), axis=1)[:, 0]
     done = seat & (new_len >= total_lens)
     split = jax.vmap(jax.random.split)(keys_in)          # (K, 2, 2)
     keys_out = jnp.where(done[:, None], split[:, 0], keys_in)
@@ -300,6 +323,8 @@ def prefill_append(params, state: SlotState, slots, window, chunk_lens,
         lengths=state.lengths.at[sl].set(new_len),
         keys=state.keys.at[sl].set(keys_out),
         cache=scatter(cfg, state.cache, new_sub, slots, mask=seat))
+    if all_logits:
+        return new, tok0, done, window_logits
     return new, tok0, done
 
 

@@ -280,7 +280,16 @@ class _DeviceExecutor:
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._append = wrap(jax.jit(
             functools.partial(B.prefill_append, cfg=cfg, sampler=eng.sampler),
-            static_argnames=("fresh", "max_seq"), donate_argnums=donate))
+            static_argnames=("fresh", "max_seq", "all_logits"),
+            donate_argnums=donate))
+        # scoring capture (Engine.score): {rid: [(window_start, (take, V)
+        # fp32 host logits), ...]}.  While armed, every prefill window
+        # routes through the append path with all_logits=True and its
+        # valid positions are copied to the host -- the eval harness'
+        # teacher-forced log-likelihoods come from the exact windows the
+        # serving path computed.  None = normal serving (zero overhead).
+        self.capture: Optional[Dict[int, List[Tuple[int, np.ndarray]]]] \
+            = None
         self._evict = wrap(jax.jit(functools.partial(B.evict_slot, cfg=cfg)))
         # keep the raw jit handle: decode_hlo() lowers it for the
         # bench's per-tick collective count (the wrapper hides .lower)
@@ -373,9 +382,11 @@ class _DeviceExecutor:
             wdt = self.prefill_width(req.prompt_len - start)
             # fresh = whole prompt in one first window into ZEROED rows;
             # a shared-prefix seat (prefill_skip > 0) starts mid-cache,
-            # so it always takes the gather/append path
+            # so it always takes the gather/append path.  Scoring capture
+            # also forces the append path: T.prefill only materializes
+            # final-position logits, the capture needs every position.
             fresh = start == 0 and req.prefill_skip == 0 \
-                and req.prompt_len <= wdt
+                and req.prompt_len <= wdt and self.capture is None
             groups.setdefault((wdt, fresh), []).append((slot, req, start))
         for (wdt, fresh), group in groups.items():
             for i in range(0, len(group), self.admit_k):
@@ -439,11 +450,28 @@ class _DeviceExecutor:
                     last = start + max(take, 1) - 1
                 pos[j, take:] = last + 1 + np.arange(width - take)
             window["positions"] = jnp.asarray(pos)
-        self.state, tok0, done = self._append(
-            self.params, self.state, jnp.asarray(slots), window,
-            jnp.asarray(chunk_lens), jnp.asarray(total), jnp.asarray(seat),
-            jnp.asarray(rids), jnp.asarray(first), jnp.asarray(floors),
-            fresh=fresh, max_seq=self.max_seq)
+        if self.capture is None:
+            self.state, tok0, done = self._append(
+                self.params, self.state, jnp.asarray(slots), window,
+                jnp.asarray(chunk_lens), jnp.asarray(total),
+                jnp.asarray(seat), jnp.asarray(rids), jnp.asarray(first),
+                jnp.asarray(floors), fresh=fresh, max_seq=self.max_seq)
+        else:
+            # scoring capture: same fused append, but the full-window
+            # logits come back too and each captured request's valid
+            # positions are copied to the host keyed by window start
+            self.state, tok0, done, wlog = self._append(
+                self.params, self.state, jnp.asarray(slots), window,
+                jnp.asarray(chunk_lens), jnp.asarray(total),
+                jnp.asarray(seat), jnp.asarray(rids), jnp.asarray(first),
+                jnp.asarray(floors), fresh=False, max_seq=self.max_seq,
+                all_logits=True)
+            wl = np.asarray(wlog, np.float32)
+            for j, (slot, req, start) in enumerate(group):
+                if req.rid in self.capture:
+                    take = int(chunk_lens[j])
+                    self.capture[req.rid].append(
+                        (start, wl[j, :take].copy()))
         if self.spec:
             # mirror the window into the draft cache (its drafts must
             # condition on the prompt too).  Same call shape, draft
@@ -1161,12 +1189,27 @@ class Engine:
             return []
         return self._sched.tick(now)
 
-    def drain(self, now: float = float("inf")) -> Dict[int, np.ndarray]:
+    def drain(self, now: float = float("inf"),
+              fresh_only: bool = False) -> Dict[int, np.ndarray]:
         """Run the scheduler until every admissible request completes;
-        returns {rid: (n_tokens,) int32} for all finished requests."""
+        returns {rid: (n_tokens,) int32} for finished requests.
+
+        CONTRACT: by default the result is CUMULATIVE -- every request
+        that ever finished on this engine and was not popped, not just
+        the ones this call ran.  A repeat-measurement loop that submits,
+        drains, and forgets ``pop_finished()`` therefore double-counts
+        earlier replays' tokens in later results.  Either pop between
+        replays, or pass ``fresh_only=True`` to get only the requests
+        that finished DURING this call (bookkeeping is untouched: the
+        fresh results remain collectible via ``result``/``results``/
+        ``pop_finished`` afterwards)."""
         if self._sched is None:
             return {}
-        self._sched.drain(now)
+        fin = self._sched.drain(now)
+        if fresh_only:
+            reqs = self._sched.requests
+            return {rid: np.asarray(reqs[rid].tokens, np.int32)
+                    for rid in fin if rid in reqs}
         return self._sched.results()
 
     def result(self, rid: int) -> Optional[np.ndarray]:
@@ -1178,10 +1221,97 @@ class Engine:
     def pop_finished(self) -> Dict[int, np.ndarray]:
         """Collect finished requests AND drop their bookkeeping -- what a
         long-running submit/step server should call each cycle so host
-        memory tracks in-flight work, not everything ever served."""
+        memory tracks in-flight work, not everything ever served.  This
+        is also what resets ``drain()``'s cumulative results between
+        repeat measurements (or use ``drain(fresh_only=True)``)."""
         if self._sched is None:
             return {}
         return self._sched.pop_finished()
+
+    def score(self, sequences) -> List[np.ndarray]:
+        """Teacher-forced token log-likelihoods THROUGH the serving path.
+
+        Each sequence ((s,) int token ids, s >= 2) is submitted as a real
+        request (``max_new=1``) and driven through the scheduler's fused
+        prefill-append windows on THIS engine's executor -- packed
+        kernels, paged cache and all -- with logits captured at every
+        window position (``prefill_chunk(all_logits=True)``).  Returns
+        one (s-1,) float32 array per sequence: ``out[i] = log P(seq[i+1]
+        | seq[:i+1])``, the quantity PPL and per-option continuation
+        scoring are built from (src/repro/eval/).
+
+        Scoring requests pin explicit default positions, which (a)
+        leaves RoPE rotations identical to a plain submit and (b) keeps
+        them out of the prefix-sharing index -- a shared prefix SKIPS
+        its prefill windows, and a scored sequence needs logits at every
+        position.  The engine must be idle (no queued/running requests):
+        capture forces every concurrent prefill through the append path,
+        which would perturb a generation request's numeric grouping.
+        Scoring bookkeeping is dropped on exit, so ``drain``/
+        ``pop_finished`` results never mix scoring rids into serving
+        traffic.  The first sampled token of each request is discarded.
+        """
+        cfg = self.cfg
+        if cfg.embeds_input:
+            raise ValueError("score() requires a token-input model "
+                             "(embeds-frontend configs have no token "
+                             "likelihoods to score)")
+        seqs = [np.asarray(s).reshape(-1).astype(np.int32)
+                for s in sequences]
+        if not seqs:
+            return []
+        if min(len(s) for s in seqs) < 2:
+            raise ValueError("score() needs sequences of >= 2 tokens "
+                             "(one context token, one to score)")
+        sched = self._scheduler(prompt_len=max(len(s) for s in seqs),
+                                max_new=1)
+        ex = sched.ex
+        if ex.capture is not None:
+            raise RuntimeError("score() is not reentrant")
+        if sched.pending:
+            raise RuntimeError(
+                "score() requires an idle engine: drain() or "
+                "pop_finished() in-flight requests first (logit capture "
+                "changes how concurrent prefills group)")
+        ex.capture = {}
+        rids: List[int] = []
+        try:
+            for s in seqs:
+                rid = self.submit(
+                    {"tokens": s[None, :],
+                     "positions": np.arange(len(s), dtype=np.int32)[None]},
+                    max_new=1)
+                ex.capture[rid] = []
+                rids.append(rid)
+            sched.drain()
+            out: List[np.ndarray] = []
+            for rid, s in zip(rids, seqs):
+                wins = sorted(ex.capture[rid], key=lambda t: t[0])
+                pos = 0
+                contiguous = bool(wins)
+                for st, w in wins:
+                    contiguous = contiguous and st == pos
+                    pos += w.shape[0]
+                if not contiguous or pos != len(s):
+                    raise RuntimeError(
+                        f"rid {rid}: captured windows cover {pos} of "
+                        f"{len(s)} positions (starts "
+                        f"{[st for st, _ in wins]}) -- scoring capture "
+                        f"lost prefill windows")
+                logits = np.concatenate([w for _, w in wins], axis=0)
+                # stable log-softmax over the REAL vocab columns (padded
+                # columns are junk the sampler masks; mask here too)
+                lf = logits[:, :cfg.vocab].astype(np.float64)
+                m = lf.max(axis=-1, keepdims=True)
+                lsm = lf - (m + np.log(
+                    np.exp(lf - m).sum(axis=-1, keepdims=True)))
+                out.append(lsm[np.arange(len(s) - 1),
+                               s[1:]].astype(np.float32))
+            return out
+        finally:
+            ex.capture = None
+            for rid in rids:
+                sched.requests.pop(rid, None)
 
     def stream(self, now: float = float("inf")):
         """Tick the scheduler and yield a ``TokenEvent`` per emitted

@@ -1,0 +1,367 @@
+"""Serving-path eval stack: Engine.score oracle parity and cross-mode
+determinism, the eval datasets, the versioned Scorecard artifact + drift
+gate, pack-visibility counters, drain(fresh_only=) semantics, and the
+bench section stamping/staleness helpers."""
+
+import dataclasses
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import repro.configs as configs
+from repro.core import deploy
+from repro.core.apply import effective_bits_of, quantize_params
+from repro.core.quantize import HaloConfig, halo_quantize_tensor
+from repro.eval import (MultipleChoiceProbe, PerplexityStream,
+                        SCORECARD_VERSION, Scorecard, ScorecardEntry,
+                        mc_accuracy, ppl_from_logprobs,
+                        raw_sequence_logprobs, run_scorecard)
+from repro.eval.harness import ENGINE_MODES, EvalProtocol, Variant
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+
+
+@functools.lru_cache(maxsize=1)
+def small_model():
+    cfg = dataclasses.replace(configs.get_smoke_config("granite-8b"),
+                              dtype=jnp.float32)
+    params = M.init_params(T.model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(mode="contiguous", **kw):
+    cfg, params = small_model()
+    kwargs = dict(ENGINE_MODES[mode])
+    kwargs.update(kw)
+    return Engine(params, cfg, prefill_bucket=16, decode_bucket=16,
+                  capacity=2, chunk=4, max_seq=32, **kwargs)
+
+
+@functools.lru_cache(maxsize=1)
+def ppl_sequences():
+    cfg, _ = small_model()
+    return tuple(PerplexityStream(cfg.vocab, 12, 2).sequences())
+
+
+# ---------------------------------------------------------------------------
+# Engine.score: oracle parity, cross-mode determinism, hygiene
+# ---------------------------------------------------------------------------
+
+class TestEngineScore:
+    def test_dense_contiguous_matches_raw_oracle(self):
+        """The acceptance bar: serving-path logprobs through submit/
+        step/drain on the dense contiguous engine equal a plain
+        T.forward to float32 tolerance, so the whole scheduler/window/
+        capture pipeline adds no numeric error."""
+        cfg, params = small_model()
+        seqs = list(ppl_sequences())
+        oracle = raw_sequence_logprobs(params, cfg, seqs)
+        got = make_engine().score(seqs)
+        for o, g in zip(oracle, got):
+            np.testing.assert_allclose(g, o, atol=1e-4, rtol=1e-4)
+        assert abs(ppl_from_logprobs(got) - ppl_from_logprobs(oracle)) \
+            < 1e-3 * ppl_from_logprobs(oracle)
+
+    @pytest.mark.parametrize("mode", ["paged", "paged_share", "spec"])
+    def test_cross_mode_parity(self, mode):
+        seqs = list(ppl_sequences())
+        ref = make_engine().score(seqs)
+        got = make_engine(mode).score(seqs)
+        for r, g in zip(ref, got):
+            np.testing.assert_allclose(g, r, atol=1e-5)
+
+    def test_deterministic_on_one_engine(self):
+        eng = make_engine("paged")
+        seqs = list(ppl_sequences())
+        a, b = eng.score(seqs), eng.score(seqs)
+        for x, y in zip(a, b):
+            assert (x == y).all()
+
+    def test_score_leaves_no_bookkeeping(self):
+        eng = make_engine()
+        eng.score(list(ppl_sequences()))
+        assert eng.pop_finished() == {}
+        # and serving still works afterwards
+        rid = eng.submit({"tokens": np.arange(4, dtype=np.int32)[None]},
+                         max_new=2)
+        out = eng.drain()
+        assert set(out) == {rid} and len(out[rid]) == 2
+
+    def test_score_rejects_short_and_busy(self):
+        eng = make_engine()
+        with pytest.raises(ValueError, match=">= 2 tokens"):
+            eng.score([np.array([5], np.int32)])
+        eng.submit({"tokens": np.arange(4, dtype=np.int32)[None]},
+                   max_new=2)
+        with pytest.raises(RuntimeError, match="idle"):
+            eng.score(list(ppl_sequences()))
+        eng.drain()
+        eng.pop_finished()
+
+
+# ---------------------------------------------------------------------------
+# datasets
+# ---------------------------------------------------------------------------
+
+class TestDatasets:
+    def test_ppl_stream_shapes_and_determinism(self):
+        s1 = PerplexityStream(256, 12, 3).sequences()
+        s2 = PerplexityStream(256, 12, 3).sequences()
+        assert len(s1) == 3 and all(len(s) == 13 for s in s1)
+        assert all((a == b).all() for a, b in zip(s1, s2))
+
+    def test_mc_probe_items(self):
+        probe = MultipleChoiceProbe(256, 8, 3, 5)
+        items = probe.items()
+        assert len(items) == 5
+        for it in items:
+            assert len(it.options) == 4 and 0 <= it.answer < 4
+            assert all(len(o) == 3 for o in it.options)
+            # distractors never equal the correct continuation
+            correct = it.options[it.answer]
+            others = [o for i, o in enumerate(it.options) if i != it.answer]
+            assert not any(np.array_equal(o, correct) for o in others)
+            assert all(len(s) == 11 for s in it.option_sequences())
+        # deterministic across constructions
+        again = MultipleChoiceProbe(256, 8, 3, 5).items()
+        assert all(a.answer == b.answer
+                   and (a.question == b.question).all()
+                   for a, b in zip(items, again))
+
+    def test_mc_accuracy_on_oracle(self):
+        cfg, params = small_model()
+        probe = MultipleChoiceProbe(cfg.vocab, 8, 2, 4)
+        acc = mc_accuracy(
+            lambda ss: raw_sequence_logprobs(params, cfg, ss), probe)
+        assert 0.0 <= acc <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scorecard artifact + drift gate
+# ---------------------------------------------------------------------------
+
+def _card(**over):
+    entry = ScorecardEntry(
+        variant="dense", engine_mode="contiguous", ppl=10.0,
+        mc_accuracy=0.75, effective_bits=16.0, n_packed_leaves=0,
+        packed=False, tokens_per_s=100.0, n_ppl_tokens=64, n_mc_items=8)
+    kw = dict(model="m", backend="cpu", git_sha="abc", written_at="t",
+              seed=42, protocol={"ppl_seq_len": 16},
+              entries=[entry])
+    kw.update(over)
+    return Scorecard(**kw)
+
+
+class TestScorecardArtifact:
+    def test_round_trip(self, tmp_path):
+        card = _card()
+        p = tmp_path / "sc.json"
+        card.save(p)
+        back = Scorecard.load(p)
+        assert back == card
+
+    def test_version_reject(self, tmp_path):
+        d = _card().to_dict()
+        d["version"] = SCORECARD_VERSION + 1
+        with pytest.raises(ValueError, match="unsupported Scorecard"):
+            Scorecard.from_dict(d)
+
+    def test_unknown_keys_tolerated(self):
+        d = _card().to_dict()
+        d["future_field"] = 1
+        d["entries"][0]["future_metric"] = 2.0
+        back = Scorecard.from_dict(d)
+        assert back.entries[0].ppl == 10.0
+
+    def test_gate_passes_identical(self):
+        assert _card().compare(_card()) == []
+
+    def test_gate_fails_on_injected_ppl_regression(self):
+        base = _card()
+        cur = _card()
+        cur.entries[0].ppl = base.entries[0].ppl * 1.05   # +5% > 2% tol
+        bad = cur.compare(base)
+        assert len(bad) == 1 and "ppl drift" in bad[0]
+        # two-sided: a suspicious improvement also trips the gate
+        cur.entries[0].ppl = base.entries[0].ppl * 0.9
+        assert any("ppl drift" in v for v in cur.compare(base))
+
+    def test_gate_fails_on_accuracy_drop_and_missing_entry(self):
+        base = _card()
+        cur = _card()
+        cur.entries[0].mc_accuracy = 0.5
+        assert any("mc_accuracy drift" in v for v in cur.compare(base))
+        cur2 = _card(entries=[])
+        assert any("missing" in v for v in cur2.compare(base))
+
+    def test_gate_fails_on_protocol_mismatch(self):
+        cur = _card(protocol={"ppl_seq_len": 32})
+        assert any("protocol mismatch" in v for v in cur.compare(_card()))
+
+    def test_gate_fails_when_packed_becomes_dense(self):
+        base = _card()
+        base.entries[0].packed = True
+        base.entries[0].n_packed_leaves = 4
+        assert any("all-dense" in v for v in _card().compare(base))
+
+    def test_gate_uses_baseline_tolerances(self):
+        base = _card(tolerances={"ppl_rel": 0.5, "mc_acc_abs": 0.5})
+        cur = _card()
+        cur.entries[0].ppl = 12.0                        # +20% < 50% tol
+        assert cur.compare(base) == []
+
+    def test_tokens_per_s_not_gated(self):
+        cur = _card()
+        cur.entries[0].tokens_per_s = 1.0                # 100x slower
+        assert cur.compare(_card()) == []
+
+
+# ---------------------------------------------------------------------------
+# pack visibility: n_packed_leaves + the one-time all-dense warning
+# ---------------------------------------------------------------------------
+
+class TestPackVisibility:
+    def test_n_packed_leaves_counts(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=128))
+        packed = deploy.pack_params({"a": hq, "b": w})
+        assert deploy.n_packed_leaves(packed) == 1
+        assert deploy.n_packed_leaves({"b": w}) == 0
+
+    def test_all_dense_pack_warns_once(self, monkeypatch):
+        monkeypatch.setattr(deploy, "_warned_all_dense", False)
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=64))
+        with pytest.warns(UserWarning, match="0 of 1 quantized leaves"):
+            out = deploy.pack_params({"a": hq})
+        assert deploy.n_packed_leaves(out) == 0
+        # once per process: the second all-dense pack stays silent
+        import warnings as W
+        with W.catch_warnings():
+            W.simplefilter("error")
+            deploy.pack_params({"a": hq})
+
+    def test_effective_bits_of(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+        hq = halo_quantize_tensor(w, None, HaloConfig(tile=128))
+        b = effective_bits_of({"a": hq})
+        assert 2.0 < b < 9.0
+        assert effective_bits_of({"a": w}) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# drain(fresh_only=) contract
+# ---------------------------------------------------------------------------
+
+class TestDrainFreshOnly:
+    def test_fresh_only_excludes_previous_replays(self):
+        eng = make_engine()
+        p = np.arange(4, dtype=np.int32)[None]
+        r1 = eng.submit({"tokens": p}, max_new=2)
+        first = eng.drain(fresh_only=True)
+        assert set(first) == {r1}
+        # second replay WITHOUT pop_finished: the old default would
+        # return both requests' tokens here (the double-count bug)
+        r2 = eng.submit({"tokens": p}, max_new=2)
+        second = eng.drain(fresh_only=True)
+        assert set(second) == {r2}
+        # default drain stays cumulative, and fresh results remained
+        # collectible (bookkeeping untouched)
+        assert set(eng.drain()) == {r1, r2}
+        assert set(eng.pop_finished()) == {r1, r2}
+
+    def test_fresh_only_token_parity_with_results(self):
+        eng = make_engine()
+        p = np.arange(5, dtype=np.int32)[None]
+        rid = eng.submit({"tokens": p}, max_new=3)
+        fresh = eng.drain(fresh_only=True)
+        assert (fresh[rid] == eng.drain()[rid]).all()
+
+
+# ---------------------------------------------------------------------------
+# run_scorecard end-to-end on the tiny model
+# ---------------------------------------------------------------------------
+
+class TestRunScorecard:
+    @functools.lru_cache(maxsize=1)
+    def _cards():
+        cfg, params = small_model()
+        q = quantize_params(params, None, HaloConfig(tile=128))
+        variants = [
+            Variant("dense", params),
+            # the smoke config is below the 128-tile floor on purpose:
+            # the quantized variant deploys all-dense and must say so
+            Variant("halo-bal", deploy.pack_params(q),
+                    effective_bits=effective_bits_of(q), quantized=True),
+        ]
+        protocol = EvalProtocol(
+            ppl_seq_len=12, n_ppl_sequences=2, mc_question_len=8,
+            mc_option_len=2, n_mc_items=3, tps_requests=2,
+            tps_prompt_len=8, tps_max_new=4, tps_repeats=1)
+        mk = lambda: run_scorecard(
+            variants, cfg, modes=("contiguous", "paged"),
+            protocol=protocol, oracle_params=params)
+        return mk(), mk()
+
+    def test_entries_and_oracle_parity(self):
+        card, _ = TestRunScorecard._cards()
+        assert {(e.variant, e.engine_mode) for e in card.entries} == {
+            (v, m) for v in ("dense", "halo-bal")
+            for m in ("contiguous", "paged")}
+        dense = card.key("dense", "contiguous")
+        assert dense.oracle_ppl is not None
+        assert dense.oracle_ppl_rel_err < 1e-3
+        assert dense.tokens_per_s > 0
+
+    def test_all_dense_quantized_run_refuses_packed_label(self):
+        card, _ = TestRunScorecard._cards()
+        qe = card.key("halo-bal", "paged")
+        assert not qe.packed and qe.n_packed_leaves == 0
+        assert "NOT PACKED" in qe.note
+        assert qe.effective_bits < 16.0
+
+    def test_quality_metrics_deterministic_across_runs(self):
+        a, b = TestRunScorecard._cards()
+        for ea, eb in zip(a.entries, b.entries):
+            assert (ea.variant, ea.engine_mode) == (eb.variant,
+                                                    eb.engine_mode)
+            assert ea.ppl == eb.ppl
+            assert ea.mc_accuracy == eb.mc_accuracy
+
+
+# ---------------------------------------------------------------------------
+# bench section stamping + staleness audit
+# ---------------------------------------------------------------------------
+
+class TestBenchStamping:
+    def test_stamp_section(self):
+        from benchmarks.common import stamp_section
+        sec = stamp_section({"x": 1})
+        assert sec["x"] == 1
+        assert sec["git_sha"] and sec["written_at"].endswith("Z")
+
+    def test_staleness_note_flags_mixed_shas(self):
+        from benchmarks.common import staleness_note
+        clean = {"a": {"git_sha": "s1"}, "b": {"git_sha": "s1"}}
+        assert staleness_note(clean) == ""
+        mixed = {"a": {"git_sha": "s1"}, "b": {"git_sha": "s2"}}
+        note = staleness_note(mixed)
+        assert "MIXED-SHA" in note and "s1" in note and "s2" in note
+        # unstamped legacy sections count as their own (stale) commit
+        assert "MIXED-SHA" in staleness_note(
+            {"a": {"git_sha": "s1"}, "b": {"other": 1}})
+
+    def test_staleness_note_keys_filter(self):
+        from benchmarks.common import staleness_note
+        rep = {"a": {"git_sha": "s1"}, "host": {"cpu": "x"},
+               "scalar": 3}
+        assert staleness_note(rep, keys=("a",)) == ""
+        assert "MIXED-SHA" in staleness_note(rep)
